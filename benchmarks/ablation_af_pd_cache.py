@@ -1,0 +1,62 @@
+"""Ablation — the paper's Fig. 5 progression: baseline -> AF -> AF+PD ->
+AF+PD+P$ (each mechanism's marginal contribution to embedding latency).
+
+Not a paper figure per se (the paper reports the combined design), but the
+natural decomposition of its §III-C contributions:
+
+  AF   gathers hot rows into shared pages  -> fewer page reads (t_R)
+  PD   stripes hot pages across planes     -> overlapped t_R
+  P$   page-wise SRAM LRU                  -> hits bypass the flash entirely
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import MODELS, N_INFER, N_ROWS, SAMPLE_INFER, \
+    vec_bytes
+from repro.core.engine import RecFlashEngine, TableSpec
+from repro.core.freq import AccessStats
+from repro.data.tracegen import generate_sls_batch
+from repro.flashsim.device import PARTS
+
+STAGES = ("rmssd", "recflash_af", "recflash_af_pd", "recflash")
+
+
+def run(model: str = "rmc1", part_name: str = "TLC", k: float = 0.0,
+        seed: int = 0):
+    cfg = MODELS[model]
+    part = PARTS[part_name]
+    n_inf = N_INFER[model]
+    tables = [TableSpec(N_ROWS, vec_bytes(cfg)) for _ in range(cfg.n_tables)]
+    tb_s, rows_s = generate_sls_batch(cfg.n_tables, N_ROWS, cfg.lookups,
+                                      SAMPLE_INFER[model], k, seed=seed + 101)
+    stats = [AccessStats.from_trace(rows_s[tb_s == t], N_ROWS)
+             for t in range(cfg.n_tables)]
+    tb, rows = generate_sls_batch(cfg.n_tables, N_ROWS, cfg.lookups, n_inf,
+                                  k, seed=seed)
+    out = []
+    base_lat = None
+    for pol in STAGES:
+        eng = RecFlashEngine(tables, part, policy=pol, sample_stats=stats)
+        res = eng.sim.run(tb, rows, window=cfg.n_tables * cfg.lookups)
+        if base_lat is None:
+            base_lat = res.latency_us
+        out.append(dict(model=model, part=part_name, k=k, stage=pol,
+                        latency_us=res.latency_us,
+                        norm=res.latency_us / base_lat,
+                        page_reads=res.n_page_reads,
+                        cache_hits=res.n_cache_hits))
+    return out
+
+
+def main():
+    print("ablation,model,part,K,stage,norm_latency,page_reads,cache_hits")
+    for model in ("rmc1", "rmc2"):
+        for k in (0.0, 0.8):
+            for r in run(model, k=k):
+                print(f"ablation,{r['model']},{r['part']},{r['k']},"
+                      f"{r['stage']},{r['norm']:.4f},{r['page_reads']},"
+                      f"{r['cache_hits']}")
+
+
+if __name__ == "__main__":
+    main()

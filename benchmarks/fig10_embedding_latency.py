@@ -1,0 +1,42 @@
+"""Fig. 10 — normalized embedding-operation latency, TLC, RMC1/2/3 x K0-K2.
+
+Paper claims (TLC, vs RM-SSD): RMC2 -78%..-91.4%, RMC1 -54.4%..-68.4%,
+RMC3 -64.2%..-77%. Also SLC/QLC averages (§IV-B):
+SLC ~54/77/62%, QLC ~66/89/75% for RMC1/2/3.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import K_VALUES, reduction, sweep
+
+
+def run(parts=("TLC",), seed: int = 0):
+    points = sweep(parts=parts, seed=seed)
+    red = reduction(points, "emb_latency_us")
+    rows = []
+    for pt in points:
+        base = [p for p in points
+                if (p.model, p.part, p.k, p.policy)
+                == (pt.model, pt.part, pt.k, "recssd")][0]
+        rows.append(dict(model=pt.model, part=pt.part, k=pt.k,
+                         policy=pt.policy,
+                         norm_latency=pt.emb_latency_us
+                         / base.emb_latency_us,
+                         reads_per_lookup=pt.n_page_reads
+                         / max(1, pt.n_lookups)))
+    return rows, red
+
+
+def main():
+    rows, red = run()
+    print("figure,model,part,K,policy,normalized_latency")
+    for r in rows:
+        print(f"fig10,{r['model']},{r['part']},{r['k']},{r['policy']},"
+              f"{r['norm_latency']:.4f}")
+    print("\nfigure,model,part,K,latency_reduction_vs_rmssd")
+    for (m, p, k), v in sorted(red.items()):
+        print(f"fig10,{m},{p},{k},{v:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig. 11 — normalized memory-read energy, TLC, RMC1/2/3 x K0-K2.
+
+Paper: RecSSD and RM-SSD consume identical read energy (same page reads);
+RecFlash saves up to 91.9% (RMC2), 69.5% (RMC1), 77.7% (RMC3).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import reduction, sweep
+
+
+def run(parts=("TLC",), seed: int = 0):
+    points = sweep(parts=parts, seed=seed)
+    red = reduction(points, "read_energy_uj")
+    rows = []
+    for pt in points:
+        base = [p for p in points
+                if (p.model, p.part, p.k, p.policy)
+                == (pt.model, pt.part, pt.k, "recssd")][0]
+        rows.append(dict(model=pt.model, part=pt.part, k=pt.k,
+                         policy=pt.policy,
+                         norm_energy=pt.read_energy_uj
+                         / base.read_energy_uj))
+    return rows, red
+
+
+def check_baselines_equal(rows, tol=1e-9) -> bool:
+    """RecSSD and RM-SSD read energy must be identical (paper §IV-B)."""
+    by = {}
+    for r in rows:
+        by.setdefault((r["model"], r["part"], r["k"]), {})[r["policy"]] = \
+            r["norm_energy"]
+    return all(abs(v["recssd"] - v["rmssd"]) < tol for v in by.values())
+
+
+def main():
+    rows, red = run()
+    print("figure,model,part,K,policy,normalized_read_energy")
+    for r in rows:
+        print(f"fig11,{r['model']},{r['part']},{r['k']},{r['policy']},"
+              f"{r['norm_energy']:.4f}")
+    print(f"\nbaselines_equal_energy,{check_baselines_equal(rows)}")
+    print("figure,model,part,K,energy_reduction_vs_rmssd")
+    for (m, p, k), v in sorted(red.items()):
+        print(f"fig11,{m},{p},{k},{v:.4f}")
+
+
+if __name__ == "__main__":
+    main()

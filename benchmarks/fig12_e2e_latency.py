@@ -1,0 +1,39 @@
+"""Fig. 12 — normalized end-to-end model latency, TLC, RMC1/2/3 x K0-K2.
+
+End-to-end = embedding-op latency + MLP compute (constant across systems).
+Paper: improvements up to 50.7% (RMC1), 81% (RMC2), 40.4% (RMC3) — RMC3's
+gain is limited by its MLP-dominated profile.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import reduction, sweep
+
+
+def run(parts=("TLC",), seed: int = 0):
+    points = sweep(parts=parts, seed=seed)
+    red = reduction(points, "e2e_latency_us")
+    rows = []
+    for pt in points:
+        base = [p for p in points
+                if (p.model, p.part, p.k, p.policy)
+                == (pt.model, pt.part, pt.k, "recssd")][0]
+        rows.append(dict(model=pt.model, part=pt.part, k=pt.k,
+                         policy=pt.policy,
+                         norm_e2e=pt.e2e_latency_us / base.e2e_latency_us))
+    return rows, red
+
+
+def main():
+    rows, red = run()
+    print("figure,model,part,K,policy,normalized_e2e_latency")
+    for r in rows:
+        print(f"fig12,{r['model']},{r['part']},{r['k']},{r['policy']},"
+              f"{r['norm_e2e']:.4f}")
+    print("\nfigure,model,part,K,e2e_reduction_vs_rmssd")
+    for (m, p, k), v in sorted(red.items()):
+        print(f"fig12,{m},{p},{k},{v:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Fig. 13 — end-to-end latency on Criteo-TB / Criteo-Kaggle day streams.
+
+The paper trains on day0-22 (TB) and evaluates day23 (static setting);
+Kaggle uses 6 days. Our CriteoDayStream is a statistically-matched proxy
+(Zipf-skewed per-field popularity + daily drift — DESIGN.md §2.1). Paper
+claims vs RM-SSD: TB -70.0/-80.1/-61.5%, Kaggle -66.3/-76.3/-58.3%
+(RMC1/2/3).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import MODELS, N_INFER, mlp_us_per_inference, \
+    vec_bytes
+from repro.core.engine import RecFlashEngine, TableSpec
+from repro.core.freq import AccessStats
+from repro.data.criteo import CRITEO_KAGGLE, CRITEO_TB, CriteoDayStream
+from repro.flashsim.device import PARTS
+
+ROWS_PER_FIELD = 200_000      # scaled-down proxy tables
+
+
+def _model_trace(stream, cfg, n_samples, day):
+    """Draw one day batch and map the 26 criteo fields onto the model's
+    n_tables (cyclic assignment, as many fields as tables)."""
+    tables, rows, _ = stream.day_batch(day, n_samples)
+    sel = tables < cfg.n_tables
+    t, r = tables[sel], rows[sel]
+    # multi-hot: repeat each field's lookup `lookups` times with jitter
+    reps = cfg.lookups
+    t = np.repeat(t, reps)
+    r = np.repeat(r, reps)
+    jitter = np.random.default_rng(day).integers(0, 17, r.size)
+    r = (r + jitter * (np.arange(r.size) % 2)) % ROWS_PER_FIELD
+    return t, r
+
+
+def run(dataset="criteo_tb", parts=("TLC",), seed: int = 0):
+    spec = CRITEO_TB if dataset == "criteo_tb" else CRITEO_KAGGLE
+    spec = type(spec)(name=spec.name, n_days=spec.n_days,
+                      rows_per_field=ROWS_PER_FIELD,
+                      zipf_alpha=spec.zipf_alpha,
+                      drift_frac=spec.drift_frac)
+    out = []
+    for part_name in parts:
+        part = PARTS[part_name]
+        for model, cfg in MODELS.items():
+            stream = CriteoDayStream(spec, seed=seed)
+            # offline phase: sweep the training days for access stats
+            counts = stream.sample_training_stats(20_000)
+            stats = [AccessStats(counts[t % spec.n_fields])
+                     for t in range(cfg.n_tables)]
+            tables = [TableSpec(ROWS_PER_FIELD, vec_bytes(cfg))
+                      for _ in range(cfg.n_tables)]
+            n_inf = max(50, N_INFER[model] // 2)
+            results = {}
+            for pol in ("recssd", "rmssd", "recflash"):
+                eng = RecFlashEngine(tables, part, policy=pol,
+                                     sample_stats=stats)
+                tb, rows = _model_trace(stream, cfg, n_inf,
+                                        day=spec.n_days - 1)
+                res = eng.sim.run(tb, rows,
+                                  window=cfg.n_tables * cfg.lookups)
+                results[pol] = res.latency_us \
+                    + mlp_us_per_inference(cfg) * n_inf
+            for pol, lat in results.items():
+                out.append(dict(dataset=dataset, part=part_name,
+                                model=model, policy=pol,
+                                e2e_us=lat,
+                                norm=lat / results["recssd"]))
+    return out
+
+
+def reductions(rows):
+    red = {}
+    by = {}
+    for r in rows:
+        by.setdefault((r["dataset"], r["part"], r["model"]),
+                      {})[r["policy"]] = r["e2e_us"]
+    for key, v in by.items():
+        red[key] = 1.0 - v["recflash"] / v["rmssd"]
+    return red
+
+
+def main():
+    print("figure,dataset,part,model,policy,normalized_e2e")
+    all_rows = []
+    for ds in ("criteo_tb", "criteo_kaggle"):
+        rows = run(ds)
+        all_rows += rows
+        for r in rows:
+            print(f"fig13,{r['dataset']},{r['part']},{r['model']},"
+                  f"{r['policy']},{r['norm']:.4f}")
+    print("\nfigure,dataset,part,model,e2e_reduction_vs_rmssd")
+    for (ds, p, m), v in sorted(reductions(all_rows).items()):
+        print(f"fig13,{ds},{p},{m},{v:.4f}")
+
+
+if __name__ == "__main__":
+    main()

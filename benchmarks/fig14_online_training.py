@@ -1,0 +1,110 @@
+"""Fig. 14 — cumulative inference time over 35 days with online training.
+
+Baseline RM-SSD vs RecFlash under four trigger policies (threshold top-5%,
+top-10%, top-15%, and daily period). Online training runs concurrently with
+inference (its time excluded); only the remapping phase counts as RecFlash
+overhead (shown separately). The daily popularity drift of the Criteo-proxy
+stream is what makes thresholds fire. Paper claim: up to -76.7% cumulative
+inference time at 20M inferences/day (we scale to simulation size and sweep
+the same 100x range).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import MODELS, mlp_us_per_inference, vec_bytes
+from repro.core.engine import RecFlashEngine, TableSpec
+from repro.core.freq import AccessStats
+from repro.core.triggers import PeriodTrigger, ThresholdTrigger
+from repro.data.criteo import CriteoSpec, CriteoDayStream
+from repro.flashsim.device import PARTS
+
+N_DAYS = 35
+ROWS_PER_FIELD = 100_000
+# paper sweeps 0.2M..20M inferences/day. We simulate 1:4000-scaled traffic
+# (50..5000/day) and scale the *inference* time back up by SCALE when
+# accumulating: inference time is linear in volume, while the remapping
+# cost is a fixed per-event quantity — this preserves the paper's absolute
+# overhead-vs-serving proportions at every swept rate.
+SCALE = 4000
+DAILY_SCALED = (50, 500, 5000)
+
+POLICIES = {
+    "top5": ThresholdTrigger(top_frac=0.05, portion=0.001),
+    "top10": ThresholdTrigger(top_frac=0.10, portion=0.001),
+    "top15": ThresholdTrigger(top_frac=0.15, portion=0.001),
+    "daily": PeriodTrigger(period_days=1),
+}
+
+
+def simulate(model: str, daily: int, policy_name: str,
+             part_name: str = "TLC", seed: int = 0):
+    cfg = MODELS[model]
+    part = PARTS[part_name]
+    spec = CriteoSpec("online", n_days=N_DAYS,
+                      rows_per_field=ROWS_PER_FIELD, drift_frac=0.05)
+    trigger = POLICIES[policy_name]
+    hot_frac = getattr(trigger, "top_frac", 0.05)
+
+    def day_trace(stream, day, n):
+        tables, rows, _ = stream.day_batch(day, n)
+        sel = tables < cfg.n_tables
+        return tables[sel], rows[sel]
+
+    out = {}
+    for pol in ("rmssd", "recflash"):
+        stream = CriteoDayStream(spec, seed=seed)
+        counts = stream.sample_training_stats(20_000)
+        stats = [AccessStats(counts[t % spec.n_fields])
+                 for t in range(cfg.n_tables)]
+        tables = [TableSpec(ROWS_PER_FIELD, vec_bytes(cfg))
+                  for _ in range(cfg.n_tables)]
+        eng = RecFlashEngine(tables, part, policy=pol, sample_stats=stats,
+                             hot_frac=hot_frac)
+        infer_us = 0.0
+        remap_us = 0.0
+        n_triggers = 0
+        for day in range(N_DAYS):
+            tb, rows = day_trace(stream, day, daily)
+            res = eng.serve(tb, rows, record_window=(pol == "recflash"))
+            infer_us += (res.latency_us
+                         + mlp_us_per_inference(cfg) * daily) * SCALE
+            log = eng.maybe_remap(day, trigger)
+            if log is not None:
+                remap_us += log.remap_latency_us
+                n_triggers += 1
+            stream.advance_day()
+        out[pol] = dict(infer_us=infer_us, remap_us=remap_us,
+                        total_us=infer_us + remap_us,
+                        n_triggers=n_triggers)
+    out["reduction"] = 1.0 - out["recflash"]["total_us"] \
+        / out["rmssd"]["total_us"]
+    return out
+
+
+def run(model: str = "rmc1", dailies=DAILY_SCALED, seed: int = 0):
+    rows = []
+    for policy_name in POLICIES:
+        for daily in dailies:
+            r = simulate(model, daily, policy_name, seed=seed)
+            rows.append(dict(model=model, policy=policy_name, daily=daily,
+                             reduction=r["reduction"],
+                             remap_share=r["recflash"]["remap_us"]
+                             / max(1e-9, r["recflash"]["total_us"]),
+                             n_triggers=r["recflash"]["n_triggers"]))
+    return rows
+
+
+def main():
+    rows = run()
+    print("figure,model,trigger,daily_inferences,cumulative_time_reduction,"
+          "remap_overhead_share,n_triggers")
+    for r in rows:
+        print(f"fig14,{r['model']},{r['policy']},{r['daily']},"
+              f"{r['reduction']:.4f},{r['remap_share']:.5f},"
+              f"{r['n_triggers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Benchmark runner: regenerates every paper figure and checks the headline
+claims. Prints CSV blocks per figure plus a claim table:
+
+    claim,paper,ours,verdict
+
+Verdicts are informational (traces are synthetic/statistical proxies of the
+paper's, so exact numbers differ); PASS means the reproduced number is in a
+generous band around the paper's and the qualitative ordering holds.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _claim(name, paper, ours, lo, hi):
+    ok = lo <= ours <= hi
+    print(f"claim,{name},{paper:.3f},{ours:.3f},{'PASS' if ok else 'CHECK'}")
+    return ok
+
+
+def main() -> int:
+    t0 = time.time()
+    from benchmarks import (fig10_embedding_latency, fig11_read_energy,
+                            fig12_e2e_latency, fig13_real_datasets,
+                            fig14_online_training)
+
+    print("=" * 70)
+    print("Fig. 10 — embedding-operation latency (TLC)")
+    rows10, red10 = fig10_embedding_latency.run()
+    for r in rows10:
+        print(f"fig10,{r['model']},{r['part']},{r['k']},{r['policy']},"
+              f"{r['norm_latency']:.4f}")
+
+    print("=" * 70)
+    print("Fig. 11 — read energy (TLC)")
+    rows11, red11 = fig11_read_energy.run()
+    for r in rows11:
+        print(f"fig11,{r['model']},{r['part']},{r['k']},{r['policy']},"
+              f"{r['norm_energy']:.4f}")
+    eq = fig11_read_energy.check_baselines_equal(rows11)
+    print(f"fig11,baselines_equal_read_energy,{eq}")
+
+    print("=" * 70)
+    print("Fig. 12 — end-to-end latency (TLC)")
+    rows12, red12 = fig12_e2e_latency.run()
+    for r in rows12:
+        print(f"fig12,{r['model']},{r['part']},{r['k']},{r['policy']},"
+              f"{r['norm_e2e']:.4f}")
+
+    print("=" * 70)
+    print("Fig. 13 — Criteo TB / Kaggle day streams")
+    rows13 = []
+    for ds in ("criteo_tb", "criteo_kaggle"):
+        rows13 += fig13_real_datasets.run(ds)
+    for r in rows13:
+        print(f"fig13,{r['dataset']},{r['part']},{r['model']},"
+              f"{r['policy']},{r['norm']:.4f}")
+    red13 = fig13_real_datasets.reductions(rows13)
+
+    print("=" * 70)
+    print("Fig. 14 — online training, 35 days")
+    rows14 = fig14_online_training.run()
+    for r in rows14:
+        print(f"fig14,{r['model']},{r['policy']},{r['daily']},"
+              f"{r['reduction']:.4f},{r['remap_share']:.5f},"
+              f"{r['n_triggers']}")
+
+    # ----------------------------------------------------------- claims --
+    print("=" * 70)
+    print("claim,paper,ours,verdict")
+    ok = True
+
+    def best(red, model):
+        return max(v for (m, _, _), v in red.items() if m == model)
+
+    # Fig. 10: peak embedding-latency reduction vs RM-SSD (TLC)
+    ok &= _claim("fig10_rmc2_peak_latency_reduction", 0.914,
+                 best(red10, "rmc2"), 0.70, 1.0)
+    ok &= _claim("fig10_rmc1_peak_latency_reduction", 0.684,
+                 best(red10, "rmc1"), 0.45, 1.0)
+    ok &= _claim("fig10_rmc3_peak_latency_reduction", 0.77,
+                 best(red10, "rmc3"), 0.55, 1.0)
+    # Fig. 11: read-energy reduction; baselines identical
+    ok &= _claim("fig11_rmc2_peak_energy_reduction", 0.919,
+                 best(red11, "rmc2"), 0.70, 1.0)
+    ok &= _claim("fig11_baselines_equal", 1.0, float(eq), 1.0, 1.0)
+    # Fig. 12: e2e reductions; RMC3 gain < RMC2 gain (MLP-bound)
+    ok &= _claim("fig12_rmc2_peak_e2e_reduction", 0.81,
+                 best(red12, "rmc2"), 0.60, 1.0)
+    ok &= _claim("fig12_rmc3_lt_rmc2", 1.0,
+                 float(best(red12, "rmc3") < best(red12, "rmc2")), 1.0, 1.0)
+    # Fig. 13: Criteo TB reductions
+    tb2 = red13[("criteo_tb", "TLC", "rmc2")]
+    ok &= _claim("fig13_tb_rmc2_e2e_reduction", 0.801, tb2, 0.55, 1.0)
+    # Fig. 14: cumulative reduction at the highest daily rate
+    best14 = max(r["reduction"] for r in rows14)
+    ok &= _claim("fig14_peak_cumulative_reduction", 0.767, best14,
+                 0.50, 1.0)
+    # remap overhead must stay a small share of cumulative time
+    worst_overhead = max(r["remap_share"] for r in rows14)
+    ok &= _claim("fig14_remap_overhead_share_max", 0.05, worst_overhead,
+                 0.0, 0.15)
+
+    print(f"\ntotal_seconds,{time.time() - t0:.1f}")
+    print(f"all_claims,{'PASS' if ok else 'CHECK'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+from repro.configs.base import ArchBundle, StepDef, get_arch, list_archs

@@ -1,0 +1,92 @@
+"""Arch registry: every assigned architecture is a selectable ArchBundle.
+
+A bundle owns everything the launcher needs per (arch x shape) cell:
+
+* ``init`` — full-size param init (dry-run uses ``jax.eval_shape`` on it, so
+  no memory is allocated);
+* ``steps[shape]`` — the jit target (train_step / serve_step / prefill),
+  its ``input_specs()`` ShapeDtypeStructs, and sharding spec builders;
+* ``param_rules`` / ``opt_rules`` — path-substring -> PartitionSpec rules
+  (distributed/shardings.py); opt rules default to param rules and may add
+  ZeRO-style axes for optimizer state;
+* ``model_flops[shape]`` — MODEL_FLOPS (6ND for LM train; analytic for the
+  rest) for the §Roofline useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class StepDef:
+    kind: str                                  # train | serve | prefill | decode
+    make_fn: Callable[[Any], Callable]         # bundle -> jit-target callable
+    input_specs: Callable[[bool], tuple]       # multi_pod -> args (SDS trees)
+    donate: tuple = ()                         # donated argnums
+    static: tuple = ()                         # static argnums
+    skip: str | None = None                    # reason if the cell is skipped
+    batch_arg_axes: dict | None = None         # overrides for batch sharding
+
+
+@dataclasses.dataclass
+class ArchBundle:
+    name: str
+    family: str                                # lm | gnn | recsys
+    cfg: Any
+    init: Callable
+    steps: dict[str, StepDef]
+    param_rules: list
+    opt_rules: list | None = None
+    model_flops: dict[str, float] | None = None
+    optimizer: Any = None                      # repro.optim.Optimizer
+    notes: str = ""
+
+    def rules_for_opt(self):
+        return self.opt_rules if self.opt_rules is not None \
+            else self.param_rules
+
+
+_REGISTRY: dict[str, Callable[[], ArchBundle]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_arch(name: str) -> ArchBundle:
+    import repro.configs.all_archs  # noqa: F401  (populates registry)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs.all_archs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+# shared PartitionSpec shorthands
+REPL = P()
+
+
+def lm_shapes():
+    """The LM-family shape set (train/prefill/decode; long_500k noted)."""
+    return {
+        "train_4k": dict(seq_len=4096, global_batch=256),
+        "prefill_32k": dict(seq_len=32768, global_batch=32),
+        "decode_32k": dict(seq_len=32768, global_batch=128),
+        # long_500k: all five assigned LM archs are pure full-attention
+        # (GQA/MLA) -> skipped per assignment rule; see DESIGN.md §4.
+    }
+
+
+LONG_500K_SKIP = ("long_500k needs sub-quadratic attention; this arch is "
+                  "pure full-attention (GQA/MLA) — skipped per assignment "
+                  "rule, documented in DESIGN.md §4")

@@ -1,0 +1,57 @@
+"""deepseek-v3-671b [arXiv:2412.19437; moe] — 61L d7168 128H MLA,
+1 shared + 256 routed experts top-8 (d_expert 2048), first 3 layers dense
+(d_ff 18432), vocab 129280, MTP head.
+
+Memory plan (v5e 16GB, 256-chip pod): params bf16 fully sharded over
+model x data (FSDP) ~= 5.3GB/chip; grads bf16 ~5.3GB; Adafactor factored
+stats are MBs — AdamW would need ~10TB and cannot fit, which is exactly why
+the optimizer choice is part of the architecture config here."""
+
+from repro import optim
+from repro.configs.base import register
+from repro.configs.lm_common import make_lm_bundle, serve_rules_2d
+from repro.models.lm import LMConfig
+from repro.models.mla import MLAConfig
+from repro.models.moe import MoEConfig
+
+MLA = MLAConfig(d_model=7168, n_heads=128, q_lora_rank=1536,
+                kv_lora_rank=512, nope_head_dim=128, rope_head_dim=64,
+                v_head_dim=128, rope_theta=10_000.0)
+
+MOE = MoEConfig(d_model=7168, d_expert=2048, n_experts=256, top_k=8,
+                n_shared=1, capacity_factor=1.25, norm_topk=True,
+                router_bias=True)   # aux-loss-free bias routing
+
+CONFIG = LMConfig(
+    name="deepseek-v3-671b", n_layers=61, d_model=7168, n_heads=128,
+    n_kv_heads=128, d_ff=18432, vocab=129280, act="swiglu",
+    rope_theta=10_000.0, moe=MOE, n_dense_layers=3, mla=MLA, mtp=True,
+    ep_axis="model")
+
+
+def n_active() -> float:
+    c, m, a = CONFIG, MOE, MLA
+    mla_p = (c.d_model * a.q_lora_rank
+             + a.q_lora_rank * c.n_heads * a.qk_head_dim
+             + c.d_model * a.kv_lora_rank + c.d_model * a.rope_head_dim
+             + a.kv_lora_rank * c.n_heads * (a.nope_head_dim + a.v_head_dim)
+             + c.n_heads * a.v_head_dim * c.d_model)
+    expert = 3 * c.d_model * m.d_expert
+    dense_l = mla_p + 3 * c.d_model * c.d_ff
+    moe_l = mla_p + (m.top_k + m.n_shared) * expert + c.d_model * m.n_experts
+    return (c.vocab * c.d_model * 2
+            + CONFIG.n_dense_layers * dense_l
+            + (c.n_layers - c.n_dense_layers) * moe_l)
+
+
+@register("deepseek-v3-671b")
+def build():
+    return make_lm_bundle(
+        "deepseek-v3-671b", CONFIG, n_active=n_active(),
+        optimizer=optim.adafactor(1e-4),
+        fsdp=True, train_microbatch=4,
+        serve_ep_2d=True, serve_param_rules=serve_rules_2d(CONFIG),
+        prefill_ep_2d=True, prefill_token_chunk=2048,
+        extra_notes="FSDP over data axis (params+grads), Adafactor factored "
+                    "stats, MLA latent KV cache, MTP aux head, EP over model, "
+                    "8-way gradient accumulation")

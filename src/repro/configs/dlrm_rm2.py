@@ -1,0 +1,16 @@
+"""dlrm-rm2 [arXiv:1906.00091; recsys] — RM2-class DLRM: 13 dense +
+26 sparse fields, embed 64, bot 13-512-256-64, top 512-512-256-1, dot
+interaction. 1M rows/table, multi-hot 80 lookups/field (RM2 is the
+embedding-dominated, pooling-heavy class — RecNMP/RecSSD convention)."""
+
+from repro.configs.base import register
+from repro.configs.dlrm_mlperf import make_config, make_dlrm_bundle
+
+CONFIG = make_config(
+    name="dlrm-rm2", dim=64, bot=(13, 512, 256, 64),
+    top=(512, 512, 256, 1), vocabs=[1_000_000] * 26, lookups=80)
+
+
+@register("dlrm-rm2")
+def build():
+    return make_dlrm_bundle("dlrm-rm2", CONFIG)

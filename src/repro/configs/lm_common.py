@@ -1,0 +1,314 @@
+"""Shared plumbing for the five LM architectures.
+
+Builds ArchBundles whose cells cover: train_4k (train_step with optimizer
+update), prefill_32k (prompt processing + KV cache emission) and decode_32k
+(one serve_step over a 32k KV cache, cache donated). ``long_500k`` is
+skipped for all five (pure full-attention family — DESIGN.md §4).
+
+Sharding scheme (single- and multi-pod): Megatron TP over ``model`` (heads /
+ffn / vocab), DP over ``pod`` x ``data``; KV caches shard the *sequence* dim
+over ``model`` (flash-decoding split-K — GQA kv-head counts don't divide 16,
+sequence does); MoE experts shard over ``model`` via the replicated-
+activation EP of repro.models.moe. FSDP (param+optimizer sharding over
+``data``) is opt-in per arch for the models that don't fit otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ArchBundle, StepDef, LONG_500K_SKIP
+from repro.distributed.shardings import make_param_specs
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class CellPlan:
+    fn: Any
+    args: tuple
+    in_specs: tuple
+    out_specs: Any
+    donate: tuple = ()
+
+
+def bt_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ------------------------------------------------------------- LM shapes --
+LM_SHAPES = {
+    "train_4k": dict(seq=4096, batch=256),
+    "prefill_32k": dict(seq=32768, batch=32),
+    "decode_32k": dict(seq=32768, batch=128),
+}
+
+
+def lm_param_rules(cfg: lm.LMConfig, fsdp: bool = False,
+                   data_axes=("data",)):
+    """Path-substring -> PartitionSpec (stacked layers: leading L dim).
+
+    ``fsdp`` shards the listed dims over ``data_axes`` — pass
+    ("pod", "data") on the multi-pod mesh so a 671B model's param/grad
+    state halves again across pods."""
+    d = (data_axes if len(data_axes) > 1 else data_axes[0]) if fsdp else None
+    rules = []
+    if cfg.mtp:
+        # MTP sub-block params are unstacked (2D) — match them first.
+        rules += [
+            ("['mtp']['proj']", P(d, "model")),
+            ("['mtp']['norm']", P()),
+            ("['mtp']['layer']['ln", P()),
+            ("['mtp']['layer']['attn']['q_norm']", P()),
+            ("['mtp']['layer']['attn']['kv_norm']", P()),
+            ("['mtp']['layer']['attn']['w_o']", P("model", d)),
+            ("['mtp']['layer']['attn']['w_kr']", P()),
+            ("['mtp']['layer']['attn']", P(d, "model")),
+            ("['mtp']['layer']['ffn']['w_down']", P("model", d)),
+            ("['mtp']['layer']['ffn']['w_out']", P("model", d)),
+            ("['mtp']['layer']['ffn']", P(d, "model")),
+            ("['mtp']", P()),
+        ]
+    rules += [
+        ("['embed']", P("model", d)),
+        ("['head']", P(d, "model")),
+        # attention (GQA)
+        ("['wq']", P(None, d, "model")),
+        ("['wk']", P(None, d, "model")),
+        ("['wv']", P(None, d, "model")),
+        ("['wo']", P(None, "model", d)),
+        ("['bq']", P(None, "model")),
+        ("['bk']", P(None, "model")),
+        ("['bv']", P(None, "model")),
+        # attention (MLA)
+        ("['w_dq']", P(None, d, "model")),
+        ("['w_uq']", P(None, d, "model")),
+        ("['w_dkv']", P(None, d, "model")),
+        ("['w_ukv']", P(None, d, "model")),
+        ("['w_kr']", P(None, None, None)),
+        ("['w_o']", P(None, "model", d)),
+        # MoE experts: (L, E, D, F) — expert dim over model
+        ("['moe']['w_gate']", P(None, "model", d, None)),
+        ("['moe']['w_up']", P(None, "model", d, None)),
+        ("['moe']['w_down']", P(None, "model", d, None)),
+        ("['router']", P()),
+        ("['shared']['w_gate']", P(None, d, "model")),
+        ("['shared']['w_up']", P(None, d, "model")),
+        ("['shared']['w_down']", P(None, "model", d)),
+        # dense FFN: (L, D, F)
+        ("['w_gate']", P(None, d, "model")),
+        ("['w_up']", P(None, d, "model")),
+        ("['w_down']", P(None, "model", d)),
+        ("['w_in']", P(None, d, "model")),
+        ("['w_out']", P(None, "model", d)),
+    ]
+    return rules
+
+
+def _params_sds(bundle, dtype):
+    return jax.eval_shape(
+        functools.partial(bundle.init, dtype=dtype), jax.random.PRNGKey(0))
+
+
+def _specs_tree(tree_sds, rules):
+    return make_param_specs(tree_sds, rules)
+
+
+def _batch_specs(batch_sds, axes):
+    return jax.tree.map(
+        lambda x: P(axes, *([None] * (len(x.shape) - 1))), batch_sds)
+
+
+def build_train_plan(bundle: ArchBundle, mesh, multi_pod: bool,
+                     dtype=jnp.bfloat16,
+                     microbatch: int | None = None,
+                     seq_shard: bool = False,
+                     fsdp: bool = False) -> CellPlan:
+    """Train cell. ``microbatch=n`` accumulates gradients over ``n``
+    sequential chunks (scan + checkpoint): the per-layer scan residuals —
+    the dominant activation memory, tokens x d_model x n_layers — shrink
+    n-fold at the cost of one extra forward recompute per chunk.
+    ``seq_shard`` turns on Megatron sequence parallelism for the residual
+    stream (see LMConfig.seq_shard). Off by default: measured under GSPMD
+    auto-propagation it cut nemotron's peak 11.4->9.6 GB but multiplied
+    wire volume 9x (GSPMD inserts far more than the ideal AG/RS pair) —
+    recorded as a refuted hypothesis in EXPERIMENTS.md §Perf."""
+    cfg: lm.LMConfig = bundle.cfg
+    shp = LM_SHAPES["train_4k"]
+    axes = bt_axes(multi_pod)
+    cfg = dataclasses.replace(cfg, batch_axes=axes, seq_shard=seq_shard)
+    params = _params_sds(bundle, dtype)
+    opt = bundle.optimizer
+    opt_state = jax.eval_shape(opt.init, params)
+    if microbatch:
+        # each accumulation chunk must still shard over every DP shard
+        dp = 32 if multi_pod else 16
+        microbatch = min(microbatch, shp["batch"] // dp)
+    nmb = microbatch or 1
+    lead = (nmb, shp["batch"] // nmb) if microbatch else (shp["batch"],)
+    batch = {
+        "tokens": _sds(lead + (shp["seq"],), jnp.int32),
+        "targets": _sds(lead + (shp["seq"],), jnp.int32),
+    }
+    rules = bundle.param_rules
+    if multi_pod and fsdp:
+        rules = lm_param_rules(cfg, fsdp=True, data_axes=axes)
+    p_specs = _specs_tree(params, rules)
+    if opt.state_specs is not None:
+        o_specs = opt.state_specs(params, p_specs)
+    else:
+        o_specs = _specs_tree(opt_state, bundle.rules_for_opt())
+    if microbatch:
+        b_specs = jax.tree.map(
+            lambda x: P(None, axes, *([None] * (len(x.shape) - 2))), batch)
+    else:
+        b_specs = _batch_specs(batch, axes)
+
+    def full_loss(p, batch):
+        if not microbatch:
+            return lm.train_loss(p, batch, cfg, mesh)
+
+        def body(acc, mb):
+            return acc + lm.train_loss(p, mb, cfg, mesh), None
+
+        acc, _ = jax.lax.scan(jax.checkpoint(body),
+                              jnp.zeros((), jnp.float32), batch)
+        return acc / nmb
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: full_loss(p, batch))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return CellPlan(fn=train_step, args=(params, opt_state, batch),
+                    in_specs=(p_specs, o_specs, b_specs),
+                    out_specs=(p_specs, o_specs, P()),
+                    donate=(0, 1))
+
+
+def _cache_specs(cfg: lm.LMConfig, axes):
+    if cfg.mla is not None:
+        return {"c": P(None, axes, "model", None),
+                "kr": P(None, axes, "model", None)}
+    return {"k": P(None, axes, "model", None, None),
+            "v": P(None, axes, "model", None, None)}
+
+
+def build_decode_plan(bundle: ArchBundle, mesh, multi_pod: bool,
+                      dtype=jnp.bfloat16, ep_2d: bool = False,
+                      serve_rules=None) -> CellPlan:
+    """Decode cell. ``ep_2d``/``serve_rules`` switch MoE archs to the
+    weight-stationary serving layout (deployment-time reshard): experts
+    over model, expert-F over data, activations move instead of weights."""
+    cfg: lm.LMConfig = bundle.cfg
+    shp = LM_SHAPES["decode_32k"]
+    axes = bt_axes(multi_pod)
+    cfg = dataclasses.replace(cfg, batch_axes=axes, ep_2d=ep_2d)
+    params = _params_sds(bundle, dtype)
+    cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg, shp["batch"], shp["seq"], jnp.bfloat16))
+    tokens = _sds((shp["batch"],), jnp.int32)
+    p_specs = _specs_tree(params, serve_rules or bundle.param_rules)
+    c_specs = _cache_specs(cfg, axes)
+    length = shp["seq"] - 1   # static position: cache is full but one slot
+
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, length, cfg, mesh)
+
+    return CellPlan(fn=serve_step, args=(params, cache, tokens),
+                    in_specs=(p_specs, c_specs, P(axes)),
+                    out_specs=(P(axes, "model"), c_specs),
+                    donate=(1,))
+
+
+def build_prefill_plan(bundle: ArchBundle, mesh, multi_pod: bool,
+                       dtype=jnp.bfloat16, ep_2d: bool = False,
+                       serve_rules=None,
+                       ep_token_chunk: int | None = None) -> CellPlan:
+    cfg: lm.LMConfig = bundle.cfg
+    shp = LM_SHAPES["prefill_32k"]
+    axes = bt_axes(multi_pod)
+    cfg = dataclasses.replace(cfg, batch_axes=axes, ep_2d=ep_2d,
+                              ep_token_chunk=ep_token_chunk)
+    params = _params_sds(bundle, dtype)
+    tokens = _sds((shp["batch"], shp["seq"]), jnp.int32)
+    p_specs = _specs_tree(params, serve_rules or bundle.param_rules)
+    c_specs = _cache_specs(cfg, axes)
+
+    def prefill_step(params, tokens):
+        return lm.prefill(params, tokens, cfg, mesh)
+
+    return CellPlan(fn=prefill_step, args=(params, tokens),
+                    in_specs=(p_specs, P(axes, None)),
+                    out_specs=((P(axes, "model")), c_specs))
+
+
+def lm_model_flops(cfg: lm.LMConfig, n_active: float, shape: str) -> float:
+    """MODEL_FLOPS: 6ND (+attention) train, 2ND (+attn) inference."""
+    shp = LM_SHAPES[shape]
+    tokens = shp["batch"] * shp["seq"]
+    h_dh = cfg.n_heads * cfg.head_dim
+    if shape == "train_4k":
+        attn = 6 * cfg.n_layers * shp["seq"] * h_dh * tokens / 2
+        return 6.0 * n_active * tokens + attn
+    if shape == "prefill_32k":
+        attn = 2 * cfg.n_layers * shp["seq"] * h_dh * tokens / 2
+        return 2.0 * n_active * tokens + attn
+    # decode: one token per sequence over the full cache
+    attn = 2 * cfg.n_layers * shp["seq"] * h_dh * 2 * shp["batch"]
+    return 2.0 * n_active * shp["batch"] + attn
+
+
+def serve_rules_2d(cfg: lm.LMConfig):
+    """Deployment-time weight layout for MoE serving: experts over model,
+    expert-F over data, shared-expert F over (data x model); everything
+    else Megatron-TP (non-FSDP) so decode never gathers weights."""
+    return [
+        ("['moe']['w_gate']", P(None, "model", None, "data")),
+        ("['moe']['w_up']", P(None, "model", None, "data")),
+        ("['moe']['w_down']", P(None, "model", "data", None)),
+        ("['shared']['w_gate']", P(None, None, ("data", "model"))),
+        ("['shared']['w_up']", P(None, None, ("data", "model"))),
+        ("['shared']['w_down']", P(None, ("data", "model"), None)),
+    ] + lm_param_rules(cfg, fsdp=False)
+
+
+def make_lm_bundle(name: str, cfg: lm.LMConfig, n_active: float,
+                   optimizer, fsdp: bool = False,
+                   train_microbatch: int | None = None,
+                   serve_ep_2d: bool = False,
+                   serve_param_rules=None,
+                   prefill_ep_2d: bool = False,
+                   prefill_token_chunk: int | None = None,
+                   extra_notes: str = "") -> ArchBundle:
+    bundle = ArchBundle(
+        name=name, family="lm", cfg=cfg,
+        init=functools.partial(lm.init, cfg=cfg),
+        steps={}, param_rules=lm_param_rules(cfg, fsdp),
+        optimizer=optimizer, notes=extra_notes)
+    bundle.steps = {
+        "train_4k": StepDef("train", functools.partial(
+            build_train_plan, microbatch=train_microbatch, fsdp=fsdp), None),
+        "prefill_32k": StepDef("prefill", functools.partial(
+            build_prefill_plan, ep_2d=prefill_ep_2d,
+            serve_rules=serve_param_rules if prefill_ep_2d else None,
+            ep_token_chunk=prefill_token_chunk), None),
+        "decode_32k": StepDef("decode", functools.partial(
+            build_decode_plan, ep_2d=serve_ep_2d,
+            serve_rules=serve_param_rules), None),
+        "long_500k": StepDef("decode", None, None, skip=LONG_500K_SKIP),
+    }
+    bundle.model_flops = {s: lm_model_flops(cfg, n_active, s)
+                          for s in LM_SHAPES}
+    return bundle

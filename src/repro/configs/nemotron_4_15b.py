@@ -1,0 +1,45 @@
+"""nemotron-4-15b [arXiv:2402.16819; dense] — 32L d6144 48H (GQA kv=8)
+d_ff 24576, vocab 256000, squared-ReLU (non-gated) FFN, untied head."""
+
+from repro import optim
+from repro.configs.base import register
+from repro.configs.lm_common import make_lm_bundle
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="nemotron-4-15b", n_layers=32, d_model=6144, n_heads=48,
+    n_kv_heads=8, d_head=128, d_ff=24576, vocab=256000, act="squared_relu",
+    rope_theta=10_000.0, tie_embeddings=False)
+
+
+def n_params() -> float:
+    c = CONFIG
+    per_layer = (c.d_model * c.head_dim * (c.n_heads + 2 * c.n_kv_heads)
+                 + c.n_heads * c.head_dim * c.d_model
+                 + 2 * c.d_model * c.d_ff)      # non-gated: w_in + w_out
+    return 2 * c.vocab * c.d_model + c.n_layers * per_layer
+
+
+@register("nemotron-4-15b")
+def build():
+    from jax.sharding import PartitionSpec as P
+    bundle = make_lm_bundle("nemotron-4-15b", CONFIG, n_active=n_params(),
+                            optimizer=optim.adamw(3e-4, weight_decay=0.1),
+                            train_microbatch=16,
+                            extra_notes="AdamW moments ZeRO-sharded over "
+                                        "data (stacked-layer / vocab dims)")
+    # ZeRO: 15B of AdamW moments (3.9 GB/device replicated) shard the
+    # stacked-L (or vocab) dim over ``data`` — Megatron distributed-optimizer
+    # layout; GSPMD inserts the reduce-scatter/all-gather pair around the
+    # update.
+    bundle.opt_rules = [
+        ("['embed']", P("model", "data")),
+        ("['head']", P("data", "model")),
+        ("['wq']", P("data", None, "model")),
+        ("['wk']", P("data", None, "model")),
+        ("['wv']", P("data", None, "model")),
+        ("['wo']", P("data", "model", None)),
+        ("['w_in']", P("data", None, "model")),
+        ("['w_out']", P("data", "model", None)),
+    ] + bundle.param_rules
+    return bundle

@@ -1,0 +1,42 @@
+"""qwen2-0.5b [arXiv:2407.10671; dense] — 24L d896 14H (GQA kv=2)
+d_ff 4864, vocab 151936, QKV bias, tied embeddings."""
+
+from repro import optim
+from repro.configs.base import register
+from repro.configs.lm_common import make_lm_bundle
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="qwen2-0.5b", n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+    d_head=64, d_ff=4864, vocab=151936, act="swiglu", qkv_bias=True,
+    rope_theta=1_000_000.0, tie_embeddings=True,
+    # 14 heads x 64 = 896: neither 14 nor 896/16 tiles the 16-way model
+    # axis, so plain TP would replicate attention on all 16 model shards
+    # (measured MODEL/HLO 0.08). Context-parallel attention shards the
+    # O(T^2) compute on the sequence dim instead — §Perf H1.
+    context_parallel=True)
+
+
+def n_params() -> float:
+    c = CONFIG
+    per_layer = (c.d_model * c.head_dim * (c.n_heads + 2 * c.n_kv_heads)
+                 + c.n_heads * c.head_dim * c.d_model
+                 + 3 * c.d_model * c.d_ff)
+    return c.vocab * c.d_model + c.n_layers * per_layer
+
+
+@register("qwen2-0.5b")
+def build():
+    bundle = make_lm_bundle("qwen2-0.5b", CONFIG, n_active=n_params(),
+                            optimizer=optim.adamw(3e-4, weight_decay=0.1),
+                            train_microbatch=2)
+    from jax.sharding import PartitionSpec as P
+    # qwen2's head count (14) and d_ff (4864 = 16 x 304) interact with the
+    # 16-way model axis: d_ff divides (304 per shard) but the attention
+    # projections (14 x 64 = 896 cols) do not -> replicate attention, shard
+    # FFN + vocab. Overridden here after the generic rules.
+    bundle.param_rules = [
+        ("['wq']", P()), ("['wk']", P()), ("['wv']", P()), ("['wo']", P()),
+        ("['bq']", P()), ("['bk']", P()), ("['bv']", P()),
+    ] + bundle.param_rules
+    return bundle

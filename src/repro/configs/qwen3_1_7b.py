@@ -1,0 +1,29 @@
+"""qwen3-1.7b [hf:Qwen/Qwen3-8B family; dense] — 28L d2048 16H (GQA kv=8)
+d_ff 6144, vocab 151936, qk-norm, tied embeddings."""
+
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import register
+from repro.configs.lm_common import make_lm_bundle
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="qwen3-1.7b", n_layers=28, d_model=2048, n_heads=16, n_kv_heads=8,
+    d_head=128, d_ff=6144, vocab=151936, act="swiglu", qk_norm=True,
+    rope_theta=1_000_000.0, tie_embeddings=True)
+
+
+def n_params() -> float:
+    c = CONFIG
+    per_layer = (c.d_model * c.head_dim * (c.n_heads + 2 * c.n_kv_heads)
+                 + c.n_heads * c.head_dim * c.d_model
+                 + 3 * c.d_model * c.d_ff)
+    return c.vocab * c.d_model + c.n_layers * per_layer
+
+
+@register("qwen3-1.7b")
+def build():
+    return make_lm_bundle("qwen3-1.7b", CONFIG, n_active=n_params(),
+                          optimizer=optim.adamw(3e-4, weight_decay=0.1),
+                          train_microbatch=4)

@@ -1,0 +1,10 @@
+# The paper's primary contribution: access-frequency-based data remapping,
+# page-wise caching, and Algorithm-1 adaptive remapping for NAND-flash
+# in-storage recommendation inference (RecFlash).
+# (RecFlashEngine lives in repro.core.engine — imported lazily to avoid a
+# cycle with repro.flashsim.)
+from repro.core.adaptive import AdaptiveHashTable, UpdateReport
+from repro.core.freq import AccessStats
+from repro.core.page_cache import PageLRU
+from repro.core.remap import Mapping, build_mapping, build_mapping_from_order
+from repro.core.triggers import PeriodTrigger, ThresholdTrigger

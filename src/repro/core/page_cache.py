@@ -1,0 +1,52 @@
+"""Page-wise LRU cache (paper §III-C2, the ``P$`` of Fig. 5d).
+
+A 128 KB SRAM in the SSD controller holds whole flash pages; lookups that hit
+a cached page bypass the NAND array (no t_R). Replacement is page-granular
+LRU. The structure is tiny (8 slots for 16 KB TLC pages, 32 for 4 KB SLC) so
+an OrderedDict is exact and fast enough for trace-level simulation.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+
+class PageLRU:
+    """Page-granular LRU with ``n_slots`` page frames."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("cache needs at least one slot")
+        self.n_slots = int(n_slots)
+        self._slots: OrderedDict[int, None] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __contains__(self, page_id: int) -> bool:
+        return page_id in self._slots
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def access(self, page_id: int) -> bool:
+        """Touch ``page_id``; returns True on hit. Miss inserts (LRU evict)."""
+        if page_id in self._slots:
+            self._slots.move_to_end(page_id)
+            self.hits += 1
+            return True
+        self.misses += 1
+        if len(self._slots) >= self.n_slots:
+            self._slots.popitem(last=False)
+        self._slots[page_id] = None
+        return False
+
+    def invalidate(self, page_id: int) -> None:
+        self._slots.pop(page_id, None)
+
+    def clear(self) -> None:
+        self._slots.clear()
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0

@@ -1,0 +1,5 @@
+"""Distribution helpers: sharding rules, gradient compression, collectives."""
+
+from repro.distributed.shardings import (batch_spec, make_param_specs,
+                                         shard_batch, replicate)
+from repro.distributed.compression import compressed_psum, CompressionState

@@ -1,0 +1,47 @@
+"""Path-rule based PartitionSpec assignment.
+
+``make_param_specs(params, rules)`` walks the param pytree and returns a
+matching pytree of PartitionSpecs; ``rules`` is an ordered list of
+(substring, PartitionSpec) pairs matched against ``jax.tree_util.keystr`` of
+each leaf path (first hit wins, default replicated). Keeping sharding rules
+as data (per-arch in configs/) instead of code is what lets the dry-run
+sweep iterate sharding layouts quickly during §Perf hillclimbing.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import keystr, tree_flatten_with_path
+
+
+def make_param_specs(params, rules, default=P()):
+    leaves, treedef = tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in leaves:
+        ks = keystr(path)
+        for substr, spec in rules:
+            if substr in ks:
+                specs.append(spec)
+                break
+        else:
+            specs.append(default)
+    return treedef.unflatten(specs)
+
+
+def batch_spec(batch, axes=("pod", "data")):
+    """Shard the leading (batch) dim of every batch leaf over ``axes``."""
+    def one(x):
+        nd = getattr(x, "ndim", len(getattr(x, "shape", ())))
+        return P(axes, *([None] * (nd - 1))) if nd else P()
+    return jax.tree.map(one, batch)
+
+
+def shard_batch(mesh, batch, axes=("pod", "data")):
+    specs = batch_spec(batch, axes)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), batch, specs)
+
+
+def replicate(params):
+    return jax.tree.map(lambda _: P(), params)

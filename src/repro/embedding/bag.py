@@ -1,0 +1,63 @@
+"""EmbeddingBag in pure JAX (gather + segment-reduce).
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — the bag is built
+from ``jnp.take`` + ``jax.ops.segment_sum`` (kernel_taxonomy §RecSys). Two
+entry points:
+
+* ``embedding_bag_dense`` — fixed ``(batch, bag)`` index matrices, the DLRM
+  multi-hot case; reduction is a plain axis-sum/mean/max (no segment ids
+  needed, fastest path on TPU).
+* ``embedding_bag_ragged`` — flat indices + offsets (torch EmbeddingBag
+  layout), reduced with ``segment_sum`` over bag ids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_dense(table: jax.Array, indices: jax.Array,
+                        mode: str = "sum",
+                        weights: jax.Array | None = None) -> jax.Array:
+    """Pooled lookup: table (V, D), indices (..., L) -> (..., D)."""
+    vecs = jnp.take(table, indices, axis=0)          # (..., L, D)
+    if weights is not None:
+        vecs = vecs * weights[..., None]
+    if mode == "sum":
+        return vecs.sum(axis=-2)
+    if mode == "mean":
+        return vecs.mean(axis=-2)
+    if mode == "max":
+        return vecs.max(axis=-2)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def embedding_bag_ragged(table: jax.Array, indices: jax.Array,
+                         segment_ids: jax.Array, num_bags: int,
+                         mode: str = "sum",
+                         weights: jax.Array | None = None) -> jax.Array:
+    """Ragged pooled lookup: flat ``indices`` grouped by ``segment_ids``.
+
+    ``indices``/``segment_ids`` are (N,); output is (num_bags, D).
+    """
+    vecs = jnp.take(table, indices, axis=0)          # (N, D)
+    if weights is not None:
+        vecs = vecs * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(vecs, segment_ids, num_segments=num_bags)
+    if mode == "mean":
+        sums = jax.ops.segment_sum(vecs, segment_ids, num_segments=num_bags)
+        cnt = jax.ops.segment_sum(jnp.ones_like(segment_ids, jnp.float32),
+                                  segment_ids, num_segments=num_bags)
+        return sums / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(vecs, segment_ids, num_segments=num_bags)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def offsets_to_segment_ids(offsets: jax.Array, total: int) -> jax.Array:
+    """torch-style bag ``offsets`` (B,) -> per-element segment ids (total,)."""
+    return jnp.cumsum(
+        jnp.zeros(total, jnp.int32).at[offsets[1:]].add(1)) \
+        if offsets.shape[0] > 1 else jnp.zeros(total, jnp.int32)

@@ -1,0 +1,96 @@
+"""NAND flash device model — Table I timing + Table III part configs.
+
+The read operation (paper §III-A, Fig. 4) has three stages:
+
+  C/A stage   t_CA = (t_ALH + t_ALS - t_DS) + 5*t_WC + t_DS        (Eq. 1)
+  page read   t_R  = array -> page buffer (part-dependent, Table III)
+  data out    t_DO = t_RR + t_RC * N,  N = bytes fetched            (Eq. 2)
+
+With Table I numbers: t_CA = 0.115 us, t_R(SLC) = 25 us and, for a 128 B
+embedding vector, t_DO = 2.58 us — matching the paper's worked example
+(2 vectors, 2 pages: 55.39 us; 2 vectors, 1 page: 30.275 us).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashTiming:
+    """Table I — timing parameters, microseconds."""
+
+    t_alh: float = 0.005   # ALE hold
+    t_als: float = 0.01    # ALE setup
+    t_ds: float = 0.007    # data setup
+    t_wc: float = 0.02     # write-cycle (command/address strobe)
+    t_rr: float = 0.02     # ready -> RE# falling edge
+    t_rc: float = 0.02     # read-cycle per byte on the IO bus
+
+    @property
+    def t_ca(self) -> float:
+        """Eq. 1 — command/address stage."""
+        return (self.t_alh + self.t_als - self.t_ds) + self.t_wc * 5 + self.t_ds
+
+    def t_do(self, n_bytes: int) -> float:
+        """Eq. 2 — data-out stage for ``n_bytes`` streamed over IO pins."""
+        return self.t_rr + self.t_rc * n_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashPart:
+    """Table III — one NAND flash configuration.
+
+    t_prog / t_erase are not in the paper's tables; they only matter for the
+    online-remapping overhead (Fig. 14) and use public datasheet-typical
+    values (documented assumption, DESIGN.md §2.1).
+    """
+
+    name: str
+    page_bytes: int
+    n_planes: int
+    t_r: float              # us, array -> page buffer
+    e_page_read: float      # uJ per page read
+    die_area_mm2: float
+    t_prog: float           # us, page program
+    t_erase: float          # us, block erase
+    pages_per_block: int = 256
+    e_io_per_byte: float = 0.001     # uJ/byte on the IO bus (NVSim-scale)
+    e_page_prog: float | None = None  # uJ; default = 2x read energy
+
+    def __post_init__(self):
+        if self.e_page_prog is None:
+            object.__setattr__(self, "e_page_prog", 2.0 * self.e_page_read)
+
+
+# Table III parts. Program/erase constants: SLC ~200us/2ms, TLC ~660us/3.5ms,
+# QLC ~2ms/5ms (typical for the cited 8Gb SLC / 512Gb TLC / 1Tb QLC parts).
+SLC = FlashPart("SLC", page_bytes=4 * 1024, n_planes=2, t_r=25.0,
+                e_page_read=7.39, die_area_mm2=89.65,
+                t_prog=200.0, t_erase=2_000.0)
+TLC = FlashPart("TLC", page_bytes=16 * 1024, n_planes=2, t_r=60.0,
+                e_page_read=69.06, die_area_mm2=128.64,
+                t_prog=660.0, t_erase=3_500.0)
+QLC = FlashPart("QLC", page_bytes=16 * 1024, n_planes=2, t_r=140.0,
+                e_page_read=110.99, die_area_mm2=181.88,
+                t_prog=2_000.0, t_erase=5_000.0)
+
+PARTS = {"SLC": SLC, "TLC": TLC, "QLC": QLC}
+
+TIMING = FlashTiming()
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Page-wise SRAM cache in the SSD controller (paper §III-C2).
+
+    128 KB SRAM, 0.44 mm^2 @ 28 nm. Hits bypass the flash array entirely;
+    we charge a small SRAM access time/energy per vector served.
+    """
+
+    sram_bytes: int = 128 * 1024
+    t_sram_vec: float = 0.05        # us per vector served from SRAM
+    e_sram_per_byte: float = 1e-5   # uJ/byte (28nm SRAM read, NVSim-scale)
+
+    def n_slots(self, page_bytes: int) -> int:
+        return max(1, self.sram_bytes // page_bytes)

@@ -1,0 +1,307 @@
+"""Trace-exact SLS simulator over the NAND device model (paper §IV setup).
+
+Per embedding access the pipeline is:
+
+  1. page-wise SRAM cache probe (RecFlash ``P$`` only) — a hit serves the
+     vector from controller SRAM, no flash activity;
+  2. page-buffer probe — each plane's page buffer holds the last page it
+     latched; a match costs only the data-out stage;
+  3. page read — ``t_CA + t_R`` on that plane.
+
+Policy capability model (faithful to paper §III):
+
+* Baselines (RecSSD / RM-SSD) issue lookups **serially in arrival order**
+  (Fig. 4a: two vectors in two pages cost ``2 x (t_CA + t_R + t_DO)``), with
+  no multi-plane overlap. RecSSD drains the page buffer sequentially from
+  byte 0 to the needed vector; RM-SSD reads only the vector's slot
+  (selective read, §III-B).
+* RecFlash's FTL knows the whole SLS command, so it **coalesces** accesses
+  by (plane, page) — remapping is what makes that profitable — and with PD
+  it issues **multi-plane reads** whose ``t_R`` overlap across planes
+  (§III-C1: "plane-level parallelism, allowing more page buffers to be
+  active"). With P$ it adds the page-wise LRU cache (§III-C2).
+
+Latency for one batch:
+
+  T = sum(t_CA over page reads)
+    + [max over planes if plane_parallel else sum](per-plane t_R totals)
+    + sum(t_DO over flash-served lookups) + sum(t_SRAM over cache hits)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.page_cache import PageLRU
+from repro.core.remap import Mapping
+from repro.flashsim.device import CacheConfig, FlashPart, FlashTiming, TIMING
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """An access policy = mapping mode + controller capabilities."""
+
+    name: str
+    mapping_mode: str        # baseline | af | af_pd
+    sequential_drain: bool   # True -> RecSSD-style drain from byte 0
+    use_cache: bool          # True -> page-wise LRU in controller SRAM
+    coalesce: bool           # sort each SLS command's accesses by (plane,page)
+    plane_parallel: bool     # overlap t_R across planes (PD)
+
+
+POLICIES = {
+    "recssd": PolicyConfig("recssd", "baseline", True, False, False, False),
+    "rmssd": PolicyConfig("rmssd", "baseline", False, False, False, False),
+    "recflash_af": PolicyConfig("recflash_af", "af", False, False, True, False),
+    "recflash_af_pd": PolicyConfig("recflash_af_pd", "af_pd", False, False,
+                                   True, True),
+    "recflash": PolicyConfig("recflash", "af_pd", False, True, True, True),
+}
+
+
+@dataclasses.dataclass
+class SimResult:
+    latency_us: float = 0.0
+    energy_uj: float = 0.0        # total: array + IO bus + SRAM
+    read_energy_uj: float = 0.0   # array reads + SRAM only (paper Fig. 11 scope)
+    n_lookups: int = 0
+    n_page_reads: int = 0
+    n_buffer_hits: int = 0
+    n_cache_hits: int = 0
+    bytes_out: int = 0
+
+    def merge(self, other: "SimResult") -> "SimResult":
+        return SimResult(
+            self.latency_us + other.latency_us,
+            self.energy_uj + other.energy_uj,
+            self.read_energy_uj + other.read_energy_uj,
+            self.n_lookups + other.n_lookups,
+            self.n_page_reads + other.n_page_reads,
+            self.n_buffer_hits + other.n_buffer_hits,
+            self.n_cache_hits + other.n_cache_hits,
+            self.bytes_out + other.bytes_out,
+        )
+
+    @property
+    def reads_per_lookup(self) -> float:
+        return self.n_page_reads / max(1, self.n_lookups)
+
+
+class SLSSimulator:
+    """Stateful SLS access simulator for one device + policy + table set."""
+
+    def __init__(self, part: FlashPart, policy: PolicyConfig,
+                 mappings: list[Mapping], timing: FlashTiming = TIMING,
+                 cache_cfg: CacheConfig | None = None):
+        self.part = part
+        self.policy = policy
+        self.timing = timing
+        self.mappings = mappings
+        self.cache_cfg = cache_cfg or CacheConfig()
+        self.cache = (PageLRU(self.cache_cfg.n_slots(part.page_bytes))
+                      if policy.use_cache else None)
+        # page buffer state per plane: last page latched (-1 = empty) and,
+        # for sequential drain, how many bytes have been streamed already.
+        self._buffer = np.full(part.n_planes, -1, dtype=np.int64)
+        self._drain_pos = np.zeros(part.n_planes, dtype=np.int64)
+        # page-id namespace must be unique across tables
+        self._page_offset = np.zeros(len(mappings), dtype=np.int64)
+        off = 0
+        for t, m in enumerate(mappings):
+            self._page_offset[t] = off
+            off += m.n_pages + 1
+
+    def reset_state(self) -> None:
+        self._buffer[:] = -1
+        self._drain_pos[:] = 0
+        if self.cache is not None:
+            self.cache.clear()
+
+    def replace_mapping(self, table: int, mapping: Mapping) -> None:
+        """Swap in a new remapped layout (after online remapping)."""
+        self.mappings[table] = mapping
+        self.reset_state()
+
+    def run(self, tables: np.ndarray, rows: np.ndarray,
+            window: int = 0, force_exact: bool = False) -> SimResult:
+        """Simulate a stream of SLS accesses. Returns accumulated totals.
+
+        ``window`` is the SLS command size (accesses per inference request);
+        coalescing policies sort accesses by (plane, page) within each
+        window. ``window=0`` treats the whole call as one command.
+
+        No-cache policies take a vectorised fast path (identical results —
+        property-tested against the exact loop); ``force_exact`` disables it.
+        """
+        tables = np.asarray(tables, dtype=np.int64).ravel()
+        rows = np.asarray(rows, dtype=np.int64).ravel()
+        n = rows.size
+        t = self.timing
+        part = self.part
+        t_ca = t.t_ca
+        t_rr, t_rc = t.t_rr, t.t_rc
+        pol = self.policy
+        cache = self.cache
+        ccfg = self.cache_cfg
+        buffer = self._buffer
+        drain_pos = self._drain_pos
+
+        # resolve physical addresses vectorised, per table
+        planes = np.empty(n, dtype=np.int64)
+        pages = np.empty(n, dtype=np.int64)
+        slots = np.empty(n, dtype=np.int64)
+        vec_bytes = np.empty(n, dtype=np.int64)
+        for tid in np.unique(tables):
+            m = self.mappings[tid]
+            sel = tables == tid
+            p, g, s = m.lookup(rows[sel])
+            planes[sel] = p
+            pages[sel] = g + self._page_offset[tid]
+            slots[sel] = s
+            vec_bytes[sel] = m.vec_bytes
+
+        if pol.coalesce:
+            wid = (np.arange(n) // window) if window else np.zeros(n)
+            order = np.lexsort((slots, pages, planes, wid))
+            planes, pages, slots, vec_bytes = (
+                planes[order], pages[order], slots[order], vec_bytes[order])
+
+        if self.cache is None and not force_exact:
+            return self._run_vectorized(planes, pages, slots, vec_bytes)
+
+        res = SimResult(n_lookups=int(n))
+        plane_tr = np.zeros(part.n_planes, dtype=np.float64)
+        n_reads = 0
+        buf_hits = 0
+        cache_hits = 0
+        do_time = 0.0
+        sram_time = 0.0
+        bytes_out = 0
+        e_sram = 0.0
+        seq_drain = pol.sequential_drain
+
+        for pl, pg, sl, vb in zip(planes.tolist(), pages.tolist(),
+                                  slots.tolist(), vec_bytes.tolist()):
+            if cache is not None and cache.access(pg):
+                cache_hits += 1
+                sram_time += ccfg.t_sram_vec
+                e_sram += vb * ccfg.e_sram_per_byte
+                continue
+            if buffer[pl] != pg:
+                buffer[pl] = pg
+                drain_pos[pl] = 0
+                plane_tr[pl] += part.t_r
+                n_reads += 1
+            else:
+                buf_hits += 1
+            if seq_drain:
+                # one sequential stream per latched page: drain from the
+                # current position up to the end of the needed vector.
+                end = (sl + 1) * vb
+                nbytes = max(0, end - int(drain_pos[pl]))
+                drain_pos[pl] = max(int(drain_pos[pl]), end)
+            else:
+                nbytes = vb
+            do_time += t_rr + t_rc * nbytes
+            bytes_out += nbytes
+
+        res.n_page_reads = n_reads
+        res.n_buffer_hits = buf_hits
+        res.n_cache_hits = cache_hits
+        res.bytes_out = bytes_out
+        tr_total = (float(plane_tr.max(initial=0.0)) if pol.plane_parallel
+                    else float(plane_tr.sum()))
+        res.latency_us = n_reads * t_ca + tr_total + do_time + sram_time
+        res.read_energy_uj = n_reads * part.e_page_read + e_sram
+        res.energy_uj = res.read_energy_uj + bytes_out * part.e_io_per_byte
+        return res
+
+    def _run_vectorized(self, planes, pages, slots, vec_bytes) -> SimResult:
+        """Fast path for no-cache policies — bitwise identical to the loop."""
+        n = pages.size
+        part = self.part
+        t = self.timing
+        res = SimResult(n_lookups=int(n))
+        if n == 0:
+            return res
+        buffer = self._buffer
+        drain_pos = self._drain_pos
+
+        # page-read positions: page differs from the previous access on the
+        # same plane (first access per plane compares against buffer state).
+        reads = np.empty(n, dtype=bool)
+        plane_tr = np.zeros(part.n_planes, dtype=np.float64)
+        bytes_out = 0
+        for p in range(part.n_planes):
+            idx = np.flatnonzero(planes == p)
+            if idx.size == 0:
+                continue
+            pp = pages[idx]
+            r = np.empty(idx.size, dtype=bool)
+            r[0] = pp[0] != buffer[p]
+            r[1:] = pp[1:] != pp[:-1]
+            reads[idx] = r
+            plane_tr[p] = float(r.sum()) * part.t_r
+            if self.policy.sequential_drain:
+                # Drained-bytes model: within each buffer-residency segment
+                # (starts at a page read), the stream position is the running
+                # max of vector end offsets; each access drains from the
+                # current position to its own end. Vectorised as a keyed
+                # segment-cummax: key = seg_id * base + end, base > any end.
+                end = (slots[idx] + 1) * vec_bytes[idx]
+                seg = np.cumsum(r)                 # segment id per access
+                carry = np.int64(drain_pos[p]) if not r[0] else np.int64(0)
+                base = np.int64(end.max()) + carry + 1
+                keyed = seg * base + end
+                shifted = np.empty_like(keyed)
+                shifted[0] = seg[0] * base + carry  # carry-in drain position
+                shifted[1:] = keyed[:-1]
+                cum_prev = np.maximum.accumulate(shifted)
+                # a carried max from an older segment means nothing has been
+                # drained in this segment yet.
+                prev_drained = np.where(cum_prev // base == seg,
+                                        cum_prev % base, 0)
+                nb = np.maximum(0, end - prev_drained)
+                bytes_out += int(nb.sum())
+                res.latency_us += t.t_rr * idx.size + t.t_rc * float(nb.sum())
+                in_last = seg == seg[-1]
+                last_max = int(end[in_last].max())
+                if seg[-1] == seg[0] and not r[0]:
+                    last_max = max(last_max, int(carry))
+                drain_pos[p] = last_max
+            else:
+                nb_total = int(vec_bytes[idx].sum())
+                bytes_out += nb_total
+                res.latency_us += t.t_rr * idx.size + t.t_rc * nb_total
+                drain_pos[p] = 0
+            buffer[p] = pages[idx][-1]
+
+        n_reads = int(reads.sum())
+        res.n_page_reads = n_reads
+        res.n_buffer_hits = int(n - n_reads)
+        res.bytes_out = bytes_out
+        tr_total = (float(plane_tr.max(initial=0.0))
+                    if self.policy.plane_parallel else float(plane_tr.sum()))
+        res.latency_us += n_reads * t.t_ca + tr_total
+        res.read_energy_uj = n_reads * part.e_page_read
+        res.energy_uj = res.read_energy_uj + bytes_out * part.e_io_per_byte
+        return res
+
+    # -- remapping overhead (paper §III-C4, Fig. 7/14) ----------------------
+    def remap_cost(self, n_rows: int, vec_bytes: int) -> tuple[float, float]:
+        """Latency (us) and energy (uJ) to physically rewrite ``n_rows``.
+
+        Read old pages + program new pages + erase retired blocks. Used for
+        the online-remapping overhead: RecFlash rewrites only the hot region;
+        a full-table remap rewrites every page.
+        """
+        part = self.part
+        vpp = max(1, part.page_bytes // vec_bytes)
+        n_pages = -(-n_rows // vpp)
+        n_blocks = -(-n_pages // part.pages_per_block)
+        lat = n_pages * (self.timing.t_ca + part.t_r + part.t_prog) \
+            + n_blocks * part.t_erase
+        energy = n_pages * (part.e_page_read + part.e_page_prog)
+        return lat, energy

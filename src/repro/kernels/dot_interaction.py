@@ -1,0 +1,42 @@
+"""DLRM pairwise-dot interaction Pallas TPU kernel.
+
+Per sample: Gram matrix of the (T, D) stack of bottom-MLP output + SLS bags
+(T = n_tables + 1 <= 33, D <= 128). The batched matmul runs on the MXU with
+a (block_b*T, D) x (D, block_b*T)-style blocking: we tile over the batch and
+compute ``z_blk @ z_blk^T`` head-on; T and D are below one MXU tile so the
+win comes from batching many samples per grid step and keeping the triangle
+extraction out of the kernel (ops.py slices the static upper triangle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dot_kernel(z_ref, out_ref, *, block_b: int):
+    z = z_ref[...]                                   # (block_b, T, D)
+    out_ref[...] = jax.lax.dot_general(
+        z, z, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)          # (block_b, T, T)
+
+
+def dot_interaction(z: jax.Array, block_b: int = 64,
+                    interpret: bool = False) -> jax.Array:
+    """z (B, T, D) -> (B, T, T) float32 Gram matrices."""
+    b, t, d = z.shape
+    block_b = min(block_b, b)
+    if b % block_b:
+        raise ValueError(f"batch {b} must divide by block_b {block_b}")
+    kernel = functools.partial(_dot_kernel, block_b=block_b)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_b,),
+        in_specs=[pl.BlockSpec((block_b, t, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_b, t, t), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, t), jnp.float32),
+        interpret=interpret,
+    )(z)

@@ -1,0 +1,85 @@
+"""RecFlash SLS Pallas TPU kernel — two-tier (VMEM-hot / HBM-cold) bag sum.
+
+TPU adaptation of the paper's page-buffer insight (DESIGN.md §2.2): the AF
+remap concentrates almost all lookups in a compact hot prefix of the stored
+table. The kernel pins that prefix in VMEM for the whole grid (the page-wise
+cache analogue — deterministic, not LRU, because the frequency order is
+known ahead of time) and fetches the rare cold rows from HBM with explicit
+row DMAs (the page-read analogue). The SLS reduction happens in-register, so
+one (batch-block, D) VMEM tile is the only output traffic.
+
+Layout contract: ``indices`` are ranks into [hot; cold] (the RemapSpec
+translation has already been applied — it is the paper's hash table).
+
+Memory plan per grid step (block_b bags x L lookups):
+  hot table   H x D x 4B       VMEM, resident across the grid (index_map
+                               pins block (0,0) for every i)
+  indices     block_b x L x 4B SMEM (scalar reads drive control flow)
+  cold table  (V-H) x D        stays in HBM/ANY; one row DMA per cold hit
+  scratch     1 x D            VMEM DMA landing buffer + 1 DMA semaphore
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sls_kernel(idx_ref, hot_ref, cold_ref, out_ref, scratch, sem, *,
+                hot_size: int, block_b: int, n_lookups: int):
+    d = out_ref.shape[-1]
+
+    def bag(i, _):
+        def lookup(l, acc):
+            idx = idx_ref[i, l]
+
+            def from_hot():
+                return hot_ref[pl.dslice(idx, 1), :]
+
+            def from_cold():
+                copy = pltpu.make_async_copy(
+                    cold_ref.at[pl.dslice(idx - hot_size, 1)], scratch, sem)
+                copy.start()
+                copy.wait()
+                return scratch[...]
+
+            row = jax.lax.cond(idx < hot_size, from_hot, from_cold)
+            return acc + row.astype(jnp.float32)
+
+        acc = jax.lax.fori_loop(0, n_lookups, lookup,
+                                jnp.zeros((1, d), jnp.float32))
+        out_ref[i, :] = acc[0]
+        return 0
+
+    jax.lax.fori_loop(0, block_b, bag, 0)
+
+
+def recflash_sls(hot: jax.Array, cold: jax.Array, indices: jax.Array,
+                 block_b: int = 8, interpret: bool = False) -> jax.Array:
+    """Two-tier SLS. hot (H,D), cold (V-H,D), indices (B,L) -> (B,D) f32."""
+    h, d = hot.shape
+    b, l = indices.shape
+    if b % block_b:
+        raise ValueError(f"batch {b} must divide by block_b {block_b}")
+    grid = (b // block_b,)
+    kernel = functools.partial(_sls_kernel, hot_size=h, block_b=block_b,
+                               n_lookups=l)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, l), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((h, d), lambda i: (0, 0)),          # VMEM, pinned
+            pl.BlockSpec(memory_space=pl.ANY),               # cold in HBM
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, d), cold.dtype),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(indices, hot, cold)

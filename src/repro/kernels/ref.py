@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def recflash_sls_ref(hot: jnp.ndarray, cold: jnp.ndarray,
+                     indices: jnp.ndarray) -> jnp.ndarray:
+    """Two-tier SLS oracle.
+
+    ``hot`` (H, D) is the VMEM-resident prefix of the frequency-remapped
+    table; ``cold`` (V-H, D) the HBM remainder; ``indices`` (B, L) are ranks
+    into the conceptual concatenation [hot; cold]. Returns (B, D) bag sums
+    in float32.
+    """
+    table = jnp.concatenate([hot, cold], axis=0)
+    return jnp.take(table, indices, axis=0).astype(jnp.float32).sum(axis=-2)
+
+
+def dot_interaction_ref(z: jnp.ndarray) -> jnp.ndarray:
+    """DLRM pairwise-dot oracle. z (B, T, D) -> (B, T, T) Gram matrices."""
+    return jnp.einsum("bid,bjd->bij", z, z,
+                      preferred_element_type=jnp.float32)

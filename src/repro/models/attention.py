@@ -1,0 +1,249 @@
+"""Attention: chunked online-softmax (flash-style) in pure jnp + decode path.
+
+``flash_attention`` is a memory-bounded attention for long sequences: an
+outer ``lax.scan`` over query chunks and an inner scan over KV chunks carry
+the running (max, denom, acc) triple, so the materialised score block is
+``(B, H, q_chunk, kv_chunk)`` instead of ``(B, H, T, S)``. This is the
+HLO-level flash algorithm (no Pallas needed for the dry-run; FLOPs are what
+cost_analysis sees).
+
+Crucially it carries a **custom VJP implementing the FlashAttention-2
+backward** (Dao, arXiv:2307.08691): the forward saves only
+``(q, k, v, out, lse)`` and the backward recomputes probability blocks
+chunk-by-chunk from the log-sum-exp. Without this, ``lax.scan`` autodiff
+saves every per-chunk score block as a residual — O(T*S) memory — which
+silently defeats the flash algorithm (measured on the qwen2-0.5b train cell:
+65 GB of temps via plain autodiff vs ~4 GB with the custom VJP).
+
+``decode_attention`` is the single-token serve path over a (possibly
+seq-sharded) KV cache; reductions over the sharded S axis lower to
+collectives under GSPMD (flash-decoding-style split-K for free).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, KV, dh) -> (B, S, KV*n_rep, dh) for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, dh)) \
+        .reshape(b, s, kv * n_rep, dh)
+
+
+def attention_dense(q, k, v, causal: bool = True, scale: float | None = None):
+    """Reference full-materialisation attention. q (B,T,H,dh) k/v (B,S,KV,dh)."""
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    n_rep = h // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = scale if scale is not None else dh ** -0.5
+    logits = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((t, s), bool), k=s - t)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhts,bshd->bthd", w, v)
+
+
+def _chunk_q(x, nq, chunk):
+    """(B, T, H, dh) -> (nq, B, H, chunk, dh)."""
+    b, _, h, dh = x.shape
+    return x.reshape(b, nq, chunk, h, dh).transpose(1, 0, 3, 2, 4)
+
+
+def _flash_fwd_impl(q, k, v, q_start, causal, q_chunk, kv_chunk, scale):
+    """Returns (out (B,T,H,dv), lse (nq,B,H,qc)).
+
+    ``v`` may have a different head dim than q/k (MLA: qk 192, v 128).
+    ``q_start`` is the global position of query row 0 — context-parallel
+    attention shards the query/sequence dim, so each shard's causal mask
+    needs its global offset (a traced scalar from ``axis_index``)."""
+    b, t, h, dh = q.shape
+    dv = v.shape[3]
+    s = k.shape[1]
+    n_rep = h // k.shape[2]
+    nq, nk = t // q_chunk, s // kv_chunk
+
+    qc = _chunk_q(q, nq, q_chunk)
+    kc = _chunk_q(k, nk, kv_chunk)
+    vc = _chunk_q(v, nk, kv_chunk)
+    q_pos = q_start + jnp.arange(t).reshape(nq, q_chunk)
+    k_pos = jnp.arange(s).reshape(nk, kv_chunk)
+    offset = 0        # q_pos/k_pos are global: query i attends keys j <= i
+
+    def outer(_, qi):
+        qblk, qp = qi           # (B,H,qc,dh), (qc,)
+
+        def inner(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp = ki  # (B,KV,kc,dh) x2, (kc,)
+            kr = jnp.repeat(kblk, n_rep, axis=1) if n_rep > 1 else kblk
+            vr = jnp.repeat(vblk, n_rep, axis=1) if n_rep > 1 else vblk
+            logits = jnp.einsum("bhqd,bhkd->bhqk", qblk, kr) * scale
+            logits = logits.astype(jnp.float32)
+            if causal:
+                msk = (kp[None, :] - offset) <= qp[:, None]
+                logits = jnp.where(msk[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(q.dtype), vr).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), (kc, vc, k_pos))
+        l_safe = jnp.maximum(l, 1e-37)
+        out = (acc / l_safe[..., None]).astype(q.dtype)
+        lse = m + jnp.log(l_safe)                       # (B,H,qc)
+        return None, (out, lse)
+
+    _, (out, lse) = jax.lax.scan(outer, None, (qc, q_pos))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, t, h, dv)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash_attention(q, k, v, q_start, causal, q_chunk, kv_chunk, scale):
+    out, _ = _flash_fwd_impl(q, k, v, q_start, causal, q_chunk, kv_chunk,
+                             scale)
+    return out
+
+
+def _fa_fwd(q, k, v, q_start, causal, q_chunk, kv_chunk, scale):
+    out, lse = _flash_fwd_impl(q, k, v, q_start, causal, q_chunk, kv_chunk,
+                               scale)
+    return out, (q, k, v, q_start, out, lse)
+
+
+def _fa_bwd(causal, q_chunk, kv_chunk, scale, res, dout):
+    """FlashAttention-2 backward: recompute p-blocks from the saved lse."""
+    q, k, v, q_start, out, lse = res
+    b, t, h, dh = q.shape
+    dv = v.shape[3]
+    s = k.shape[1]
+    kv = k.shape[2]
+    n_rep = h // kv
+    nq, nk = t // q_chunk, s // kv_chunk
+    offset = 0
+
+    qc = _chunk_q(q, nq, q_chunk)                      # (nq,B,H,qc,dh)
+    oc = _chunk_q(out, nq, q_chunk)
+    doc = _chunk_q(dout, nq, q_chunk)
+    kc = _chunk_q(k, nk, kv_chunk)                     # (nk,B,KV,kc,dh)
+    vc = _chunk_q(v, nk, kv_chunk)
+    q_pos = q_start + jnp.arange(t).reshape(nq, q_chunk)
+    k_pos = jnp.arange(s).reshape(nk, kv_chunk)
+    # delta_i = rowsum(dO_i * O_i)  (B,H,qc) f32, per q chunk
+    delta = (doc.astype(jnp.float32) * oc.astype(jnp.float32)).sum(-1)
+
+    def outer(carry, qi):
+        dk_acc, dv_acc = carry                         # (nk,B,KV,kc,dh) f32
+        qblk, doblk, lseblk, dblk, qp = qi
+
+        def inner(c2, ki):
+            dq_blk = c2                                # (B,H,qc,dh) f32
+            kblk, vblk, kp, j = ki
+            kr = jnp.repeat(kblk, n_rep, axis=1) if n_rep > 1 else kblk
+            vr = jnp.repeat(vblk, n_rep, axis=1) if n_rep > 1 else vblk
+            logits = jnp.einsum("bhqd,bhkd->bhqk", qblk, kr) * scale
+            logits = logits.astype(jnp.float32)
+            if causal:
+                msk = (kp[None, :] - offset) <= qp[:, None]
+                logits = jnp.where(msk[None, None], logits, NEG_INF)
+            p = jnp.exp(logits - lseblk[..., None])    # (B,H,qc,kc) f32
+            pb = p.astype(q.dtype)
+            dv_c = jnp.einsum("bhqk,bhqd->bhkd", pb, doblk)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", doblk, vr).astype(jnp.float32)
+            ds = (p * (dp - dblk[..., None]) * scale).astype(q.dtype)
+            dq_blk = dq_blk + jnp.einsum(
+                "bhqk,bhkd->bhqd", ds, kr).astype(jnp.float32)
+            dk_c = jnp.einsum("bhqk,bhqd->bhkd", ds, qblk)
+            if n_rep > 1:
+                dk_c = dk_c.reshape(b, kv, n_rep, kv_chunk, dh).sum(2)
+                dv_c = dv_c.reshape(b, kv, n_rep, kv_chunk, dv).sum(2)
+            return dq_blk, (dk_c.astype(jnp.float32),
+                            dv_c.astype(jnp.float32))
+
+        dq0 = jnp.zeros((b, h, q_chunk, dh), jnp.float32)
+        dq_blk, (dk_cs, dv_cs) = jax.lax.scan(
+            inner, dq0, (kc, vc, k_pos, jnp.arange(nk)))
+        return (dk_acc + dk_cs, dv_acc + dv_cs), dq_blk
+
+    zk = jnp.zeros((nk, b, kv, kv_chunk, dh), jnp.float32)
+    zv = jnp.zeros((nk, b, kv, kv_chunk, dv), jnp.float32)
+    (dk_acc, dv_acc), dq_stack = jax.lax.scan(
+        outer, (zk, zv), (qc, doc, lse, delta, q_pos))
+
+    def _unchunk(x, n, chunk, heads, d_last):
+        # (n,B,heads,chunk,d) -> (B, n*chunk, heads, d)
+        return x.transpose(1, 0, 3, 2, 4).reshape(b, n * chunk, heads,
+                                                  d_last)
+
+    dq = _unchunk(dq_stack, nq, q_chunk, h, dh).astype(q.dtype)
+    dk = _unchunk(dk_acc, nk, kv_chunk, kv, dh).astype(k.dtype)
+    dv = _unchunk(dv_acc, nk, kv_chunk, kv, dv).astype(v.dtype)
+    return dq, dk, dv, None           # no cotangent for integer q_start
+
+
+_flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    scale: float | None = None, q_start=None):
+    """Chunked online-softmax attention; same contract as attention_dense.
+
+    ``q_start`` (int scalar, may be traced): global position of query row 0
+    for context-parallel callers whose q block is a sequence shard. When
+    given, the implied k/v positions are 0..S and causality is evaluated in
+    global coordinates (q_start defaults to S - T, the standard suffix
+    alignment)."""
+    t, dh = q.shape[1], q.shape[3]
+    s = k.shape[1]
+    q_chunk = min(q_chunk, t)
+    kv_chunk = min(kv_chunk, s)
+    if t % q_chunk or s % kv_chunk:
+        # shapes in this framework are powers of two; fall back when tiny.
+        if q_start is not None:
+            raise ValueError("q_start needs chunkable shapes")
+        return attention_dense(q, k, v, causal, scale)
+    scale = scale if scale is not None else dh ** -0.5
+    if q_start is None:
+        q_start = s - t
+    return _flash_attention(q, k, v, q_start, causal, q_chunk, kv_chunk,
+                            scale)
+
+
+def decode_attention(q, k_cache, v_cache, length, scale: float | None = None):
+    """One-token attention over a KV cache.
+
+    q (B, H, dh); caches (B, S, KV, dh); ``length`` = #valid cache slots
+    (scalar or (B,)). S may be sharded — the masked softmax reductions lower
+    to split-K collectives under GSPMD.
+    """
+    b, s, kv, dh = k_cache.shape
+    h = q.shape[1]
+    n_rep = h // kv
+    scale = scale if scale is not None else dh ** -0.5
+    qr = q.reshape(b, kv, n_rep, dh)
+    logits = jnp.einsum("bknd,bskd->bkns", qr, k_cache) * scale
+    valid = jnp.arange(s)[None, :] < jnp.asarray(length).reshape(-1, 1)
+    logits = jnp.where(valid[:, None, None, :], logits.astype(jnp.float32),
+                       NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkns,bskd->bknd", w, v_cache)
+    return out.reshape(b, h, dh)

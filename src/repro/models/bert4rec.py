@@ -1,0 +1,120 @@
+"""BERT4Rec (arXiv:1904.06690) — bidirectional transformer over item seqs.
+
+Cloze training: random positions are masked and predicted with a full
+softmax over the item vocabulary through the tied item-embedding matrix.
+Serving scores the last position's hidden state against candidate items
+(dot product) — encoder-only, so there is no autoregressive decode path
+(DESIGN.md §4). Assigned config: d=64, 2 blocks, 2 heads, seq 200.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention_dense
+from repro.models.common import (dense, dense_init, layer_norm, ln_init,
+                                 normal_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    n_items: int = 26_744          # ML-20m item count (paper's dataset)
+    d_ff: int = 256                # 4x
+    mask_token: int = 0            # item 0 reserved as [mask]
+
+    def flops_per_sample(self) -> int:
+        d, t = self.embed_dim, self.seq_len
+        per_block = 2 * t * (4 * d * d) + 2 * t * t * d * 2 \
+            + 2 * t * (2 * d * self.d_ff)
+        return self.n_blocks * per_block + 2 * t * d * self.n_items
+
+
+def init(key, cfg: Bert4RecConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 2 + cfg.n_blocks)
+    params = {
+        "items": normal_init(keys[0], (cfg.n_items, cfg.embed_dim), 0.02,
+                             dtype),
+        "pos": normal_init(keys[1], (cfg.seq_len, cfg.embed_dim), 0.02,
+                           dtype),
+        "blocks": [],
+        "final_ln": ln_init(cfg.embed_dim, dtype),
+    }
+    d = cfg.embed_dim
+    for i in range(cfg.n_blocks):
+        ks = jax.random.split(keys[2 + i], 6)
+        params["blocks"].append({
+            "wq": dense_init(ks[0], d, d, dtype, bias=True),
+            "wk": dense_init(ks[1], d, d, dtype, bias=True),
+            "wv": dense_init(ks[2], d, d, dtype, bias=True),
+            "wo": dense_init(ks[3], d, d, dtype, bias=True),
+            "ln1": ln_init(d, dtype),
+            "ff1": dense_init(ks[4], d, cfg.d_ff, dtype, bias=True),
+            "ff2": dense_init(ks[5], cfg.d_ff, d, dtype, bias=True),
+            "ln2": ln_init(d, dtype),
+        })
+    return params
+
+
+def encode(params, items, pad_mask, cfg: Bert4RecConfig):
+    """items (B,T) i32, pad_mask (B,T) bool -> hidden (B,T,D)."""
+    b, t = items.shape
+    d, h = cfg.embed_dim, cfg.n_heads
+    dh = d // h
+    x = jnp.take(params["items"], items, axis=0) + params["pos"][None, :t]
+    for blk in params["blocks"]:
+        q = dense(blk["wq"], x).reshape(b, t, h, dh)
+        k = dense(blk["wk"], x).reshape(b, t, h, dh)
+        v = dense(blk["wv"], x).reshape(b, t, h, dh)
+        logits = jnp.einsum("bthd,bshd->bhts", q, k) * dh ** -0.5
+        logits = jnp.where(pad_mask[:, None, None, :], logits, -1e30)
+        w = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(x.dtype)
+        attn = jnp.einsum("bhts,bshd->bthd", w, v).reshape(b, t, d)
+        x = layer_norm(x + dense(blk["wo"], attn),
+                       blk["ln1"]["gamma"], blk["ln1"]["beta"])
+        ff = dense(blk["ff2"], jax.nn.gelu(dense(blk["ff1"], x)))
+        x = layer_norm(x + ff, blk["ln2"]["gamma"], blk["ln2"]["beta"])
+    return layer_norm(x, params["final_ln"]["gamma"],
+                      params["final_ln"]["beta"])
+
+
+def loss(params, batch, cfg: Bert4RecConfig):
+    """Cloze loss over gathered masked positions.
+
+    batch: items (B,T) with [mask] inserted, mask_pos (B,M) i32 positions,
+    targets (B,M) true ids at those positions, target_mask (B,M) bool
+    (valid entries), pad_mask (B,T) bool. Gathering M << T positions keeps
+    the (B,M,V) logits tensor tractable at batch 65,536 — full-position
+    logits would be ~100x larger.
+    """
+    hidden = encode(params, batch["items"], batch["pad_mask"], cfg)
+    h = jnp.take_along_axis(
+        hidden, batch["mask_pos"][..., None], axis=1)       # (B, M, D)
+    logits = (h @ params["items"].T).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, batch["targets"][..., None], -1)[..., 0]
+    m = batch["target_mask"].astype(jnp.float32)
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def score(params, batch, cfg: Bert4RecConfig):
+    """Next-item scores for serving. Returns (B, n_items) logits of the
+    last (mask-appended) position."""
+    hidden = encode(params, batch["items"], batch["pad_mask"], cfg)
+    last = hidden[:, -1]                                  # (B, D)
+    return last @ params["items"].T
+
+
+def retrieval_score(params, batch, cfg: Bert4RecConfig):
+    """One user vs N candidate items (retrieval_cand shape)."""
+    hidden = encode(params, batch["items"], batch["pad_mask"], cfg)
+    last = hidden[:, -1]                                  # (1, D)
+    cands = jnp.take(params["items"], batch["candidates"], axis=0)
+    return (last @ cands.T)[0]                            # (N,)

@@ -1,0 +1,138 @@
+"""GraphSAGE (arXiv:1706.02216) — mean aggregator, 2 layers, d_hidden=128.
+
+Three execution regimes (assigned shapes):
+
+* full-graph (Cora-sized ``full_graph_sm`` and OGB-products-sized
+  ``ogb_products``): message passing over the true edge list via
+  ``jax.ops.segment_sum`` — JAX has no CSR SpMM, the edge-index scatter IS
+  the sparse matmul (kernel_taxonomy §GNN).
+* sampled minibatch (``minibatch_lg``, Reddit-scale): the host-side neighbor
+  sampler (repro.data.sampler) emits fixed-fanout padded neighbor blocks,
+  so the device computation is dense gathers + masked means — TPU-friendly
+  static shapes.
+* batched small graphs (``molecule``): per-graph edge lists flattened into
+  one segment_sum over ``B x N`` nodes + masked mean readout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, dense_init, mlp, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 602                  # Reddit features
+    n_classes: int = 41
+    fanouts: tuple = (25, 10)
+    aggregator: str = "mean"
+    readout: str | None = None       # "mean" -> graph-level classification
+
+
+def init(key, cfg: SAGEConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, 2 * cfg.n_layers + 1)
+    layers = []
+    d_prev = cfg.d_in
+    for i in range(cfg.n_layers):
+        d_out = cfg.d_hidden
+        layers.append({
+            "w_self": dense_init(keys[2 * i], d_prev, d_out, dtype, bias=True),
+            "w_neigh": dense_init(keys[2 * i + 1], d_prev, d_out, dtype),
+        })
+        d_prev = d_out
+    return {"layers": layers,
+            "cls": mlp_init(keys[-1], (d_prev, cfg.n_classes), dtype)}
+
+
+def _sage_layer(p, h_self, h_neigh, is_last: bool):
+    out = dense(p["w_self"], h_self) + dense(p["w_neigh"], h_neigh)
+    if not is_last:
+        out = jax.nn.relu(out)
+        out = out / jnp.maximum(
+            jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+    return out
+
+
+def forward_full(params, x, edge_src, edge_dst, cfg: SAGEConfig,
+                 n_nodes: int | None = None):
+    """Full-graph forward. x (N,F); edges src->dst (E,) each."""
+    n = n_nodes or x.shape[0]
+    deg = jax.ops.segment_sum(jnp.ones_like(edge_dst, jnp.float32),
+                              edge_dst, num_segments=n)
+    deg = jnp.maximum(deg, 1.0)[:, None]
+    h = x
+    for i, p in enumerate(params["layers"]):
+        neigh = jax.ops.segment_sum(jnp.take(h, edge_src, axis=0),
+                                    edge_dst, num_segments=n) / deg
+        h = _sage_layer(p, h, neigh, is_last=(i == cfg.n_layers - 1))
+    return mlp(params["cls"], h)                      # (N, n_classes)
+
+
+def forward_sampled(params, blocks, cfg: SAGEConfig):
+    """Minibatch forward over fixed-fanout sampled blocks.
+
+    ``blocks`` = {"feats": (n0, F) input-node features,
+                  "nbrs": [(n_{l+1}, fanout_l) indices into layer-l nodes],
+                  "self_idx": [(n_{l+1},) index of each dst in layer-l
+                  nodes], "mask": [(n_{l+1}, fanout_l) bool]}.
+    Layer l maps n_l nodes -> n_{l+1} dst nodes; n_{last} = batch seeds.
+    """
+    h = blocks["feats"]
+    for i, p in enumerate(params["layers"]):
+        nbrs = blocks["nbrs"][i]                      # (nd, f)
+        mask = blocks["mask"][i].astype(h.dtype)      # (nd, f)
+        gathered = jnp.take(h, nbrs, axis=0)          # (nd, f, F)
+        neigh = (gathered * mask[..., None]).sum(1) \
+            / jnp.maximum(mask.sum(1, keepdims=True), 1.0)
+        h_self = jnp.take(h, blocks["self_idx"][i], axis=0)
+        h = _sage_layer(p, h_self, neigh, is_last=(i == cfg.n_layers - 1))
+    return mlp(params["cls"], h)                      # (batch, n_classes)
+
+
+def forward_batched_graphs(params, x, edges, edge_mask, node_mask,
+                           cfg: SAGEConfig):
+    """Batched small graphs (``molecule`` shape), batch-shardable.
+
+    x (B,N,F); edges (B,E,2) per-graph-local (src,dst); edge_mask (B,E);
+    node_mask (B,N). Aggregation is vmapped per graph so every op stays
+    batch-local (shards cleanly over the data axis). Graph-level mean
+    readout -> (B, n_classes).
+    """
+    n = x.shape[1]
+
+    def one_graph(xg, eg, em, nm):
+        src, dst = eg[:, 0], eg[:, 1]
+        w = em.astype(xg.dtype)
+        deg = jax.ops.segment_sum(w, dst, num_segments=n)
+        deg = jnp.maximum(deg, 1.0)[:, None]
+        h = xg
+        for i, p in enumerate(params["layers"]):
+            msg = jnp.take(h, src, axis=0) * w[:, None]
+            neigh = jax.ops.segment_sum(msg, dst, num_segments=n) / deg
+            h = _sage_layer(p, h, neigh, is_last=(i == cfg.n_layers - 1))
+        m = nm[:, None].astype(h.dtype)
+        return (h * m).sum(0) / jnp.maximum(m.sum(), 1.0)
+
+    pooled = jax.vmap(one_graph)(x, edges, edge_mask, node_mask)
+    return mlp(params["cls"], pooled)
+
+
+def loss_node(params, batch, cfg: SAGEConfig, mode: str = "full"):
+    if mode == "full":
+        logits = forward_full(params, batch["feats"], batch["edge_src"],
+                              batch["edge_dst"], cfg)
+        sel = batch["train_mask"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][:, None], -1)[:, 0]
+        return (nll * sel).sum() / jnp.maximum(sel.sum(), 1.0)
+    logits = forward_sampled(params, batch, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], -1)[:, 0]
+    return nll.mean()

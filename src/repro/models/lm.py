@@ -1,0 +1,494 @@
+"""Decoder-only LM: GQA or MLA attention, dense or MoE FFN, scanned layers.
+
+One config covers the five assigned LM architectures:
+
+  qwen3-1.7b        GQA(16/8) + qk-norm + SwiGLU
+  qwen2-0.5b        GQA(14/2) + QKV bias + SwiGLU
+  nemotron-4-15b    GQA(48/8) + squared-ReLU (non-gated) FFN
+  qwen3-moe-30b     GQA(32/4, d_head 128) + 128-expert top-8 MoE
+  deepseek-v3-671b  MLA + (1 shared + 256 routed top-8) MoE + MTP head
+
+Layers are stacked and driven by ``lax.scan`` (compact HLO, fast compiles)
+with optional remat. Entry points: ``init``, ``train_loss``, ``prefill``,
+``decode_step``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import moe as moe_lib
+from repro.models import mla as mla_lib
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.common import (apply_rope, normal_init, rms_init, rms_norm,
+                                 rope_angles, squared_relu)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                      # 0 -> d_model // n_heads
+    act: str = "swiglu"                  # swiglu | squared_relu
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    tie_embeddings: bool = False
+    # MoE (None -> dense FFN); n_dense_layers leading layers stay dense.
+    moe: moe_lib.MoEConfig | None = None
+    n_dense_layers: int = 0
+    # MLA (None -> GQA)
+    mla: mla_lib.MLAConfig | None = None
+    # DeepSeek multi-token-prediction head (predicts t+2)
+    mtp: bool = False
+    mtp_weight: float = 0.3
+    remat: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    # mesh axis for expert parallelism inside shard_map (None = local MoE)
+    ep_axis: str | None = None
+    # serving layout: weight-stationary 2D expert sharding (moe_ffn_2d)
+    ep_2d: bool = False
+    ep_token_chunk: int | None = None    # bound the 2D-EP gather (prefill)
+    # Megatron sequence parallelism: keep the between-layer residual stream
+    # sharded over ("model", seq dim). The scan-over-layers remat residuals
+    # — the dominant train-time activation memory — shrink model-ways; the
+    # all-gather before attention + reduce-scatter after o_proj that GSPMD
+    # inserts carry the same wire volume as the TP all-reduce they replace.
+    seq_shard: bool = False
+    # two-level remat: scan over groups of ``remat_group`` layers, each
+    # group checkpointed, layers within a group checkpointed again — saved
+    # residuals drop from L x (B,T,D) to (L/g + g) x (B,T,D).
+    remat_group: int | None = None
+    # context-parallel attention: shard the O(T*S) attention compute over
+    # the ``model`` axis on the query/sequence dim (shard_map; k/v gathered
+    # — they are small for low-KV-head GQA). The escape hatch for archs
+    # whose head count does not divide the model axis (qwen2: 14 heads),
+    # where plain TP would replicate attention model-ways. §Perf H1.
+    context_parallel: bool = False
+    batch_axes: tuple = ("pod", "data")
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------- params --
+def _init_attn(key, cfg: LMConfig, dtype):
+    if cfg.mla is not None:
+        return mla_lib.init_mla(key, cfg.mla, dtype)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": normal_init(ks[0], (d, h * dh), s, dtype),
+        "wk": normal_init(ks[1], (d, kv * dh), s, dtype),
+        "wv": normal_init(ks[2], (d, kv * dh), s, dtype),
+        "wo": normal_init(ks[3], (h * dh, d), (h * dh) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rms_init(dh, dtype)
+        p["k_norm"] = rms_init(dh, dtype)
+    return p
+
+
+def _init_ffn(key, cfg: LMConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"w_gate": normal_init(ks[0], (d, f), d ** -0.5, dtype),
+                "w_up": normal_init(ks[1], (d, f), d ** -0.5, dtype),
+                "w_down": normal_init(ks[2], (f, d), f ** -0.5, dtype)}
+    return {"w_in": normal_init(ks[0], (d, f), d ** -0.5, dtype),
+            "w_out": normal_init(ks[1], (f, d), f ** -0.5, dtype)}
+
+
+def _init_layer(key, cfg: LMConfig, dtype, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": rms_init(cfg.d_model, dtype),
+         "ln2": rms_init(cfg.d_model, dtype),
+         "attn": _init_attn(k1, cfg, dtype)}
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(k2, cfg.moe, dtype)
+    else:
+        p["ffn"] = _init_ffn(k2, cfg, dtype)
+    return p
+
+
+def _stack(layers):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init(key, cfg: LMConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    n_dense = cfg.n_dense_layers if cfg.moe is not None else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense
+    params: dict[str, Any] = {
+        "embed": normal_init(keys[0], (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "final_norm": rms_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = normal_init(keys[1], (cfg.d_model, cfg.vocab),
+                                     cfg.d_model ** -0.5, dtype)
+    if n_dense:
+        params["dense_layers"] = _stack(
+            [_init_layer(keys[2 + i], cfg, dtype, False)
+             for i in range(n_dense)])
+    if n_moe:
+        params["moe_layers"] = _stack(
+            [_init_layer(keys[2 + n_dense + i], cfg, dtype, True)
+             for i in range(n_moe)])
+    if cfg.mtp:
+        k = jax.random.split(keys[-1], 3)
+        params["mtp"] = {
+            "proj": normal_init(k[0], (2 * cfg.d_model, cfg.d_model),
+                                (2 * cfg.d_model) ** -0.5, dtype),
+            "norm": rms_init(cfg.d_model, dtype),
+            "layer": _init_layer(k[1], cfg, dtype, False),
+        }
+    return params
+
+
+# --------------------------------------------------------------- forward --
+def _cp_attention(q, k, v, cfg: LMConfig, mesh):
+    """Context-parallel attention: queries sharded over ``model`` on T."""
+    qspec = P(cfg.batch_axes, "model", None, None)
+    kvspec = P(cfg.batch_axes, None, None, None)
+
+    def inner(q_loc, k_full, v_full):
+        t_loc = q_loc.shape[1]
+        start = jax.lax.axis_index("model") * t_loc
+        return flash_attention(
+            q_loc, k_full, v_full, causal=True,
+            q_chunk=min(cfg.q_chunk, t_loc), kv_chunk=cfg.kv_chunk,
+            q_start=start)
+
+    fn = jax.shard_map(inner, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
+                       out_specs=qspec, check_vma=False)
+    return fn(q, k, v)
+
+
+def _gqa_attention(p, x, cfg: LMConfig, positions, mesh=None):
+    b, t, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    q = q.reshape(b, t, h, dh)
+    k = k.reshape(b, t, kv, dh)
+    v = v.reshape(b, t, kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["gamma"])
+        k = rms_norm(k, p["k_norm"]["gamma"])
+    cos, sin = rope_angles(positions, dh, cfg.rope_theta, x.dtype)
+    q = apply_rope(q, cos[:, :, None], sin[:, :, None])
+    k = apply_rope(k, cos[:, :, None], sin[:, :, None])
+    if cfg.context_parallel and mesh is not None \
+            and t % mesh.shape["model"] == 0:
+        out = _cp_attention(q, k, v, cfg, mesh)
+    else:
+        out = flash_attention(q, k, v, causal=True,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    return out.reshape(b, t, h * dh) @ p["wo"], (k, v)
+
+
+def _dense_ffn(p, x, cfg: LMConfig):
+    if cfg.act == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return squared_relu(x @ p["w_in"]) @ p["w_out"]
+
+
+def _moe_specs(cfg: LMConfig):
+    """shard_map in_specs for one MoE layer's params under EP."""
+    ep = cfg.ep_axis
+    specs = {"router": P(), "w_gate": P(ep), "w_up": P(ep), "w_down": P(ep)}
+    if cfg.moe.n_shared:
+        specs["shared"] = {"w_gate": {"w": P(None, ep)},
+                           "w_up": {"w": P(None, ep)},
+                           "w_down": {"w": P(ep, None)}}
+    if cfg.moe.router_bias:
+        specs["router_b"] = P()
+    return specs
+
+
+def _moe_specs_2d(cfg: LMConfig):
+    """shard_map in_specs for the serving layout (moe_ffn_2d)."""
+    ep = cfg.ep_axis
+    specs = {"router": P(),
+             "w_gate": P(ep, None, "data"),
+             "w_up": P(ep, None, "data"),
+             "w_down": P(ep, "data", None)}
+    if cfg.moe.n_shared:
+        specs["shared"] = {"w_gate": {"w": P(None, ("data", ep))},
+                           "w_up": {"w": P(None, ("data", ep))},
+                           "w_down": {"w": P(("data", ep), None)}}
+    if cfg.moe.router_bias:
+        specs["router_b"] = P()
+    return specs
+
+
+def _moe_block(p, x, cfg: LMConfig, mesh):
+    if cfg.ep_axis is None or mesh is None:
+        return moe_lib.moe_ffn(p, x, cfg.moe)
+    xspec = P(cfg.batch_axes, None, None)
+    if cfg.ep_2d:
+        fn = jax.shard_map(
+            functools.partial(moe_lib.moe_ffn_2d, cfg=cfg.moe,
+                              model_axis=cfg.ep_axis, data_axis="data",
+                              batch_axes=cfg.batch_axes,
+                              token_chunk=cfg.ep_token_chunk),
+            mesh=mesh, in_specs=(_moe_specs_2d(cfg), xspec), out_specs=xspec,
+            check_vma=False)
+        return fn(p, x)
+    fn = jax.shard_map(
+        functools.partial(moe_lib.moe_ffn_sharded, cfg=cfg.moe,
+                          axis_name=cfg.ep_axis),
+        mesh=mesh, in_specs=(_moe_specs(cfg), xspec), out_specs=xspec,
+        check_vma=False)
+    return fn(p, x)
+
+
+def _layer_fwd(p, x, cfg: LMConfig, positions, use_moe: bool, mesh):
+    if cfg.mla is not None:
+        attn, kv = mla_lib.mla_attention(
+            p["attn"], rms_norm(x, p["ln1"]["gamma"]), cfg.mla, positions)
+    else:
+        attn, kv = _gqa_attention(p["attn"], rms_norm(x, p["ln1"]["gamma"]),
+                                  cfg, positions, mesh)
+    x = x + attn
+    h = rms_norm(x, p["ln2"]["gamma"])
+    ffn = _moe_block(p["moe"], h, cfg, mesh) if use_moe \
+        else _dense_ffn(p["ffn"], h, cfg)
+    return x + ffn, kv
+
+
+def _seq_sharded(x, cfg: LMConfig, mesh):
+    """Constrain (B, T, D) activations to sequence-parallel sharding."""
+    from jax.sharding import NamedSharding
+    spec = P(cfg.batch_axes, "model", None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _scan_layers(stacked, x, cfg: LMConfig, positions, use_moe: bool, mesh,
+                 with_cache: bool = False):
+    sp = cfg.seq_shard and mesh is not None and not with_cache
+
+    def body(carry, layer_p):
+        if sp:
+            carry = _seq_sharded(carry, cfg, mesh)
+        y, kv = _layer_fwd(layer_p, carry, cfg, positions, use_moe, mesh)
+        if sp:
+            y = _seq_sharded(y, cfg, mesh)
+        return y, (kv if with_cache else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    n_layers = jax.tree.leaves(stacked)[0].shape[0]
+    g = cfg.remat_group
+    if g and not with_cache and 1 < g < n_layers and n_layers % g == 0:
+        grouped = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] // g, g) + a.shape[1:]), stacked)
+
+        def group_body(carry, group_p):
+            y, _ = jax.lax.scan(body, carry, group_p)
+            return y, None
+
+        y, _ = jax.lax.scan(jax.checkpoint(group_body), x, grouped)
+        return y, None
+    return jax.lax.scan(body, x, stacked)
+
+
+def backbone(params, tokens, cfg: LMConfig, mesh=None, positions=None,
+             with_cache: bool = False):
+    """tokens (B,T) -> final hidden (B,T,D) [+ stacked KV caches]."""
+    b, t = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    caches = []
+    if "dense_layers" in params:
+        x, kv = _scan_layers(params["dense_layers"], x, cfg, positions,
+                             False, mesh, with_cache)
+        caches.append(kv)
+    if "moe_layers" in params:
+        x, kv = _scan_layers(params["moe_layers"], x, cfg, positions,
+                             True, mesh, with_cache)
+        caches.append(kv)
+    x = rms_norm(x, params["final_norm"]["gamma"])
+    return (x, caches) if with_cache else x
+
+
+def logits_fn(params, hidden, cfg: LMConfig):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return hidden @ head
+
+
+def chunked_ce(params, hidden, targets, cfg: LMConfig, t_chunk: int = 512,
+               weights=None):
+    """Mean token NLL with seq-chunked logits (memory-efficient CE).
+
+    ``hidden`` (B,T,D), ``targets`` (B,T). The (B, chunk, V) logits block is
+    the only vocab-sized tensor alive at once; ``jax.checkpoint`` makes the
+    backward recompute it per chunk instead of saving (B, T, V) residuals —
+    at vocab 152k that is the difference between ~0.3 GB and ~7.5 GB of
+    temps per device on the train_4k cell.
+    """
+    b, t, d = hidden.shape
+    if weights is None:
+        weights = jnp.ones((b, t), jnp.float32)
+    pad = (-t) % t_chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad)))
+        t += pad
+    nc = t // t_chunk
+    hc = jnp.moveaxis(hidden.reshape(b, nc, t_chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, nc, t_chunk), 1, 0)
+    wc = jnp.moveaxis(weights.reshape(b, nc, t_chunk), 1, 0)
+
+    def body(acc, xs):
+        h, tgt, w = xs
+        logits = logits_fn(params, h, cfg).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], -1)[..., 0]
+        return acc + (nll * w).sum(), None
+
+    acc, _ = jax.lax.scan(jax.checkpoint(body),
+                          jnp.zeros((), jnp.float32), (hc, tc, wc))
+    return acc / jnp.maximum(weights.sum(), 1.0)
+
+
+def train_loss(params, batch, cfg: LMConfig, mesh=None):
+    """batch: {tokens (B,T), targets (B,T)}; mean next-token CE (+ MTP)."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    hidden = backbone(params, tokens, cfg, mesh)
+    loss = chunked_ce(params, hidden, targets, cfg)
+    if cfg.mtp and "mtp" in params:
+        # predict t+2: combine h_t with emb(t+1), one extra block.
+        emb_next = jnp.take(params["embed"], tokens, axis=0)
+        h = jnp.concatenate(
+            [hidden[:, :-1], emb_next[:, 1:]], -1) @ params["mtp"]["proj"]
+        h = rms_norm(h, params["mtp"]["norm"]["gamma"])
+        b, tm1, _ = h.shape
+        pos = jnp.broadcast_to(jnp.arange(tm1)[None], (b, tm1))
+        h, _ = _layer_fwd(params["mtp"]["layer"], h, cfg, pos, False, mesh)
+        # position i of h fuses hidden_i with emb(token_{i+1}) and predicts
+        # token_{i+2} = targets[i+1], for i in [0, T-2].
+        loss = loss + cfg.mtp_weight * chunked_ce(
+            params, h, targets[:, 1:], cfg)
+    return loss
+
+
+# ---------------------------------------------------------------- decode --
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.mla is not None:
+        return {
+            "c": jnp.zeros((cfg.n_layers, batch, max_len,
+                            cfg.mla.kv_lora_rank), dtype),
+            "kr": jnp.zeros((cfg.n_layers, batch, max_len,
+                             cfg.mla.rope_head_dim), dtype),
+        }
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((cfg.n_layers, batch, max_len, kv, dh), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, kv, dh), dtype)}
+
+
+def _decode_layer(p, x, cache_slice, length, cfg: LMConfig, mesh):
+    """x (B,1,D) one layer with cache update; returns (x, new_cache_slice)."""
+    b = x.shape[0]
+    h = rms_norm(x, p["ln1"]["gamma"])
+    if cfg.mla is not None:
+        attn, c, kr = mla_lib.mla_decode(p["attn"], h, cache_slice["c"],
+                                         cache_slice["kr"], length, cfg.mla)
+        new_cache = {"c": c, "kr": kr}
+    else:
+        hh, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        pa = p["attn"]
+        q = (h @ pa["wq"] + (pa["bq"] if "bq" in pa else 0)).reshape(b, 1, hh, dh)
+        k = (h @ pa["wk"] + (pa["bk"] if "bk" in pa else 0)).reshape(b, 1, kv, dh)
+        v = (h @ pa["wv"] + (pa["bv"] if "bv" in pa else 0)).reshape(b, 1, kv, dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, pa["q_norm"]["gamma"])
+            k = rms_norm(k, pa["k_norm"]["gamma"])
+        pos = jnp.full((b, 1), length, jnp.int32)
+        cos, sin = rope_angles(pos, dh, cfg.rope_theta, h.dtype)
+        q = apply_rope(q, cos[:, :, None], sin[:, :, None])
+        k = apply_rope(k, cos[:, :, None], sin[:, :, None])
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache_slice["k"], k.astype(cache_slice["k"].dtype), length, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache_slice["v"], v.astype(cache_slice["v"].dtype), length, axis=1)
+        out = decode_attention(q[:, 0], ck, cv, length + 1)
+        attn = out.reshape(b, 1, hh * dh) @ pa["wo"]
+        new_cache = {"k": ck, "v": cv}
+    x = x + attn
+    hh2 = rms_norm(x, p["ln2"]["gamma"])
+    use_moe = "moe" in p
+    ffn = _moe_block(p["moe"], hh2, cfg, mesh) if use_moe \
+        else _dense_ffn(p["ffn"], hh2, cfg)
+    return x + ffn, new_cache
+
+
+def decode_step(params, cache, tokens, length, cfg: LMConfig, mesh=None):
+    """One serve step: tokens (B,) int32, ``length`` tokens already cached.
+
+    Returns (logits (B,V), new cache). Layers scan over the stacked cache.
+    """
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+
+    def split_cache(c, lo, hi):
+        return jax.tree.map(lambda a: a[lo:hi], c)
+
+    n_dense = cfg.n_dense_layers if cfg.moe is not None else cfg.n_layers
+    offset = 0
+    new_caches = []
+    for name, n in (("dense_layers", n_dense),
+                    ("moe_layers", cfg.n_layers - n_dense)):
+        if n == 0 or name not in params:
+            continue
+        sub = split_cache(cache, offset, offset + n)
+
+        def body(carry, xs):
+            layer_p, cache_slice = xs
+            y, nc = _decode_layer(layer_p, carry, cache_slice, length, cfg,
+                                  mesh)
+            return y, nc
+
+        x, nc = jax.lax.scan(body, x, (params[name], sub))
+        new_caches.append(nc)
+        offset += n
+    x = rms_norm(x, params["final_norm"]["gamma"])
+    logits = logits_fn(params, x[:, 0], cfg)
+    new_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_caches) \
+        if len(new_caches) > 1 else new_caches[0]
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg: LMConfig, mesh=None):
+    """tokens (B,T) -> (last-position logits (B,V), stacked caches)."""
+    hidden, caches = backbone(params, tokens, cfg, mesh, with_cache=True)
+    kv_parts = [c for c in caches if c is not None]
+    if cfg.mla is not None:
+        cache = {"c": jnp.concatenate([c[0] for c in kv_parts]),
+                 "kr": jnp.concatenate([c[1] for c in kv_parts])}
+    else:
+        cache = {"k": jnp.concatenate([c[0] for c in kv_parts]),
+                 "v": jnp.concatenate([c[1] for c in kv_parts])}
+    logits = logits_fn(params, hidden[:, -1], cfg)
+    return logits, cache

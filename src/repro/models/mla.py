@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries come from a low-rank path (w_dq -> RMS -> w_uq); keys/values are
+decompressed from a shared 512-d latent ``c_kv``; a separate small RoPE key
+(64-d, shared across heads) carries position. Train/prefill decompress K/V
+and run flash attention. Decode uses the **absorption trick**: scores are
+computed directly in latent space (q_nope absorbed through W_uk, context
+re-expanded through W_uv), so the KV cache is just
+``(c_kv: kv_lora_rank, k_rope: rope_dim)`` per token — 576 dims instead of
+128 heads x 256 dims. This is MLA's serving advantage and what makes the
+decode_32k cell fit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import flash_attention
+from repro.models.common import normal_init, rms_init, rms_norm, rope_angles, apply_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    nope_head_dim: int = 128
+    rope_head_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.nope_head_dim + self.rope_head_dim
+
+
+def init_mla(key, cfg: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    s = d ** -0.5
+    return {
+        "w_dq": normal_init(ks[0], (d, cfg.q_lora_rank), s, dtype),
+        "q_norm": rms_init(cfg.q_lora_rank, dtype),
+        "w_uq": normal_init(ks[1], (cfg.q_lora_rank, h * cfg.qk_head_dim),
+                            cfg.q_lora_rank ** -0.5, dtype),
+        "w_dkv": normal_init(ks[2], (d, cfg.kv_lora_rank), s, dtype),
+        "kv_norm": rms_init(cfg.kv_lora_rank, dtype),
+        "w_ukv": normal_init(
+            ks[3], (cfg.kv_lora_rank,
+                    h * (cfg.nope_head_dim + cfg.v_head_dim)),
+            cfg.kv_lora_rank ** -0.5, dtype),
+        "w_kr": normal_init(ks[4], (d, cfg.rope_head_dim), s, dtype),
+        "w_o": normal_init(ks[5], (h * cfg.v_head_dim, d),
+                           (h * cfg.v_head_dim) ** -0.5, dtype),
+    }
+
+
+def _project_qkv(params, x, cfg: MLAConfig, positions):
+    """Shared projections. x (B,T,D) -> q (B,T,H,qk), latent c (B,T,R), k_rope."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    q = rms_norm(x @ params["w_dq"], params["q_norm"]["gamma"])
+    q = (q @ params["w_uq"]).reshape(b, t, h, cfg.qk_head_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.nope_head_dim], axis=-1)
+    c_kv = rms_norm(x @ params["w_dkv"], params["kv_norm"]["gamma"])
+    k_rope = (x @ params["w_kr"])[:, :, None, :]        # (B,T,1,rope)
+    cos, sin = rope_angles(positions, cfg.rope_head_dim, cfg.rope_theta,
+                           x.dtype)
+    q_rope = apply_rope(q_rope, cos[:, :, None], sin[:, :, None])
+    k_rope = apply_rope(k_rope, cos[:, :, None], sin[:, :, None])
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(params, x, cfg: MLAConfig, positions=None):
+    """Full (train/prefill) MLA. x (B,T,D) -> (B,T,D), plus decode cache."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _project_qkv(params, x, cfg, positions)
+    kv = (c_kv @ params["w_ukv"]).reshape(
+        b, t, h, cfg.nope_head_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.nope_head_dim], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, t, h, cfg.rope_head_dim))], -1)
+    out = flash_attention(q, k, v, causal=True,
+                          scale=cfg.qk_head_dim ** -0.5)
+    out = out.reshape(b, t, h * cfg.v_head_dim) @ params["w_o"]
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(params, x, cache_c, cache_kr, length, cfg: MLAConfig):
+    """Absorbed single-token decode.
+
+    x (B,1,D); cache_c (B,S,R); cache_kr (B,S,rope); ``length`` = current
+    position. Returns (out (B,1,D), new caches).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    pos = jnp.full((b, 1), length, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _project_qkv(params, x, cfg, pos)
+    # write the new token's latent into the cache
+    cache_c = jax.lax.dynamic_update_slice_in_dim(
+        cache_c, c_new.astype(cache_c.dtype), length, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, kr_new[:, :, 0, :].astype(cache_kr.dtype), length, axis=1)
+
+    w_ukv = params["w_ukv"].reshape(
+        cfg.kv_lora_rank, h, cfg.nope_head_dim + cfg.v_head_dim)
+    w_uk = w_ukv[:, :, :cfg.nope_head_dim]              # (R,H,nope)
+    w_uv = w_ukv[:, :, cfg.nope_head_dim:]              # (R,H,v)
+    # absorb: q_abs (B,H,R)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    logits = jnp.einsum("bhr,bsr->bhs", q_abs, cache_c)
+    logits = logits + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], cache_kr)
+    logits = logits * (cfg.qk_head_dim ** -0.5)
+    s = cache_c.shape[1]
+    valid = jnp.arange(s)[None, None, :] <= length
+    w = jax.nn.softmax(
+        jnp.where(valid, logits.astype(jnp.float32), -1e30), -1
+    ).astype(x.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, cache_c)        # latent context
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv)         # (B,H,v)
+    out = out.reshape(b, 1, h * cfg.v_head_dim) @ params["w_o"]
+    return out, cache_c, cache_kr

@@ -1,0 +1,122 @@
+"""Algorithm 1 — adaptive hash-table update + trigger policies (Fig. 6/7)."""
+
+import numpy as np
+import pytest
+
+from repro.core.adaptive import AdaptiveHashTable
+from repro.core.triggers import PeriodTrigger, ThresholdTrigger
+
+
+def make_table(n=100, hot_frac=0.1, seed=0):
+    rng = np.random.default_rng(seed)
+    freqs = np.sort(rng.integers(10, 1000, n))[::-1]
+    keys = rng.permutation(n)
+    return AdaptiveHashTable(keys=keys, freqs=freqs,
+                             addrs=np.arange(n), hot_frac=hot_frac), \
+        keys, freqs
+
+
+class TestAlgorithm1:
+    def test_initial_structure(self):
+        ht, keys, freqs = make_table()
+        assert len(ht) == 100
+        assert ht.hot_size == 10
+        assert ht.hot_keys() == keys[:10].tolist()
+        assert ht.threshold_key == keys[9]
+        assert ht.threshold_freq == freqs[9]
+
+    def test_rejects_unsorted(self):
+        with pytest.raises(ValueError):
+            AdaptiveHashTable(keys=[0, 1], freqs=[1, 5], addrs=[0, 1],
+                              hot_frac=0.5)
+
+    def test_hot_size_invariant(self):
+        """Insertions displace tau: |hot region| never changes (Step 3)."""
+        ht, keys, _ = make_table()
+        new = {int(k) + 1000: 10_000 + i for i, k in enumerate(range(20))}
+        ht.update(new)
+        assert len(ht._hot) == ht.hot_size
+
+    def test_new_hot_key_displaces_tau(self):
+        ht, keys, freqs = make_table()
+        tau = ht.threshold_key
+        rep = ht.update({9999: int(freqs[0]) + 1})
+        assert ht.hot_keys()[0] == 9999          # strongest key leads
+        assert tau not in ht.hot_keys()          # old tau retired
+        assert 9999 in ht and tau in ht          # retired = moved, not lost
+        assert rep.n_inserted_hot == 1
+
+    def test_cold_key_appends_tail(self):
+        ht, keys, _ = make_table()
+        rep = ht.update({5555: 1})               # below everything
+        assert 5555 not in ht.hot_keys()
+        assert rep.n_appended_tail == 1
+        assert ht.keys_in_order()[-1] == 5555
+
+    def test_address_reassignment_rules(self):
+        """Step 4: hot rows remapped, fresh tail assigned, cold unchanged."""
+        ht, keys, freqs = make_table()
+        cold_key = keys[50]
+        cold_addr = ht.addr_of(cold_key)
+        rep = ht.update({7777: int(freqs[0]) + 5, 8888: 1})
+        assert ht.addr_of(cold_key) == cold_addr       # untouched cold
+        assert rep.n_remapped == ht.hot_size           # hot region rewritten
+        assert rep.n_direct_assigned >= 1              # 8888 placed fresh
+        addrs = [ht.addr_of(k) for k in ht.keys_in_order()]
+        assert len(set(addrs)) == len(addrs)           # no collisions
+        assert min(addrs) >= 0
+
+    def test_existing_key_accumulates(self):
+        ht, keys, freqs = make_table()
+        k = int(keys[0])
+        f = int(freqs[0])
+        ht.update({k: 100})
+        assert ht.freq_of(k) == f + 100
+
+    def test_bounded_search_cost(self):
+        """Comparisons bounded by hot size per key (the paper's key claim)."""
+        ht, _, _ = make_table(n=1000, hot_frac=0.05)
+        rep = ht.update({10_000 + i: 1 for i in range(50)})
+        assert rep.n_comparisons <= 50 * ht.hot_size
+
+    def test_update_keeps_hot_prefix_sorted(self):
+        ht, _, _ = make_table(n=200, hot_frac=0.1, seed=3)
+        rng = np.random.default_rng(4)
+        ht.update({int(10_000 + k): int(f) for k, f in zip(
+            range(40), rng.integers(1, 2000, 40))})
+        hot_freqs = [ht.freq_of(k) for k in ht.hot_keys()]
+        assert hot_freqs == sorted(hot_freqs, reverse=True)
+
+    def test_compact_removes_tombstones(self):
+        ht, keys, freqs = make_table()
+        ht.update({int(keys[50]): int(freqs[0]) + 10})   # cold -> hot splice
+        ht.compact()
+        order = ht.keys_in_order()
+        assert len(order) == len(ht)
+        assert None not in order
+
+
+class TestTriggers:
+    def test_threshold_fires_on_hot_influx(self):
+        trig = ThresholdTrigger(top_frac=0.05, portion=0.001)
+        window = {i: 100 for i in range(100)}            # all above threshold
+        assert trig.should_trigger(window, threshold_freq=10)
+        assert not trig.should_trigger(window, threshold_freq=1000)
+
+    def test_threshold_portion_boundary(self):
+        trig = ThresholdTrigger(portion=0.5)
+        window = {1: 100, 2: 1, 3: 1, 4: 1}
+        # exactly 1 of 4 hot (25%) <= 50% -> no fire
+        assert not trig.should_trigger(window, threshold_freq=10)
+        window = {1: 100, 2: 100, 3: 100, 4: 1}          # 75% > 50%
+        assert trig.should_trigger(window, threshold_freq=10)
+
+    def test_empty_window_never_fires(self):
+        assert not ThresholdTrigger().should_trigger({}, 0)
+
+    def test_period_trigger(self):
+        daily = PeriodTrigger(period_days=1)
+        assert all(daily.should_trigger(d) for d in range(5))
+        weekly = PeriodTrigger(period_days=7)
+        assert weekly.should_trigger(6)
+        assert not weekly.should_trigger(5)

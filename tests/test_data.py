@@ -1,0 +1,122 @@
+"""Data substrate: locality-calibrated traces, Criteo day streams, sampler."""
+
+import numpy as np
+import pytest
+
+from repro.data.criteo import CRITEO_KAGGLE, CRITEO_TB, CriteoDayStream, \
+    CriteoSpec
+from repro.data.sampler import CSRGraph, sample_blocks
+from repro.data.tracegen import (K_UNIQUE_RATE, calibrate_alpha,
+                                 generate_sls_batch, generate_trace)
+
+
+class TestTraceGen:
+    @pytest.mark.parametrize("k", sorted(K_UNIQUE_RATE))
+    def test_unique_rate_hits_target(self, k):
+        n_rows, n = 100_000, 20_000
+        trace = generate_trace(n_rows, n, k, seed=1)
+        rate = len(np.unique(trace)) / n
+        assert abs(rate - K_UNIQUE_RATE[k]) < 0.05, (k, rate)
+
+    def test_popularity_stable_across_draws(self):
+        """Same pop_seed => same hot rows (training stats transfer)."""
+        a = generate_trace(10_000, 5_000, 0.0, seed=1, pop_seed=7)
+        b = generate_trace(10_000, 5_000, 0.0, seed=2, pop_seed=7)
+        hot_a = set(np.argsort(-np.bincount(a, minlength=10_000))[:50])
+        hot_b = set(np.argsort(-np.bincount(b, minlength=10_000))[:50])
+        assert len(hot_a & hot_b) > 25
+
+    def test_different_pop_seed_scatters(self):
+        a = generate_trace(10_000, 5_000, 0.0, seed=1, pop_seed=7)
+        b = generate_trace(10_000, 5_000, 0.0, seed=1, pop_seed=8)
+        hot_a = set(np.argsort(-np.bincount(a, minlength=10_000))[:50])
+        hot_b = set(np.argsort(-np.bincount(b, minlength=10_000))[:50])
+        assert len(hot_a & hot_b) < 25
+
+    def test_sls_batch_shapes(self):
+        tables, rows = generate_sls_batch(4, 1000, 10, 8, k=0.3)
+        assert tables.shape == rows.shape == (4 * 10 * 8,)
+        assert tables.min() == 0 and tables.max() == 3
+        assert rows.min() >= 0 and rows.max() < 1000
+
+    def test_rejects_unknown_k(self):
+        with pytest.raises(ValueError):
+            generate_trace(100, 10, 0.5)
+
+    def test_calibration_monotone(self):
+        a_low = calibrate_alpha(100_000, 10_000, 0.08)
+        a_high = calibrate_alpha(100_000, 10_000, 0.66)
+        assert a_low > a_high      # more locality needs more skew
+
+
+class TestCriteoStream:
+    def test_day_batch_shapes(self):
+        spec = CriteoSpec("t", n_days=3, rows_per_field=10_000)
+        s = CriteoDayStream(spec, seed=0)
+        tables, rows, dense = s.day_batch(0, n_samples=100)
+        assert tables.shape == rows.shape == (100 * 26,)
+        assert dense.shape == (100, 13)
+        assert rows.max() < 10_000
+
+    def test_drift_changes_popularity(self):
+        spec = CriteoSpec("t", n_days=3, rows_per_field=5_000,
+                          drift_frac=0.2)
+        s = CriteoDayStream(spec, seed=0)
+        before = [p.copy() for p in s.perms]
+        s.advance_day()
+        changed = sum(int((a != b).sum()) for a, b in zip(before, s.perms))
+        assert changed > 0
+
+    def test_sampled_stats_skewed(self):
+        spec = CriteoSpec("t", n_days=2, rows_per_field=5_000)
+        s = CriteoDayStream(spec, seed=0)
+        counts = s.sample_training_stats(5_000)
+        assert counts.shape == (26, 5_000)
+        for f in range(3):
+            top = np.sort(counts[f])[::-1]
+            # paper Fig. 3: a tiny fraction of rows absorbs most accesses
+            assert top[:50].sum() > 0.3 * top.sum()
+
+    def test_specs_match_paper(self):
+        assert CRITEO_TB.n_days == 24
+        assert CRITEO_KAGGLE.n_days == 6
+        assert CRITEO_TB.n_fields == 26 and CRITEO_TB.n_dense == 13
+
+
+class TestNeighborSampler:
+    def test_blocks_valid_indices(self):
+        g = CSRGraph.random(200, avg_degree=6, d_feat=8, n_classes=3)
+        rng = np.random.default_rng(0)
+        blocks = sample_blocks(g, np.arange(32), (5, 3), rng)
+        assert blocks["feats"].shape[1] == 8
+        n0 = blocks["feats"].shape[0]
+        # layer-0 indices address the input node set
+        assert blocks["nbrs"][0].max() < n0
+        assert blocks["self_idx"][0].max() < n0
+        # final layer emits one row per seed
+        assert blocks["self_idx"][1].shape[0] == 32
+        assert blocks["labels"].shape == (32,)
+
+    def test_isolated_nodes_masked(self):
+        # star graph: node 0 has in-edges, the rest none
+        n = 10
+        src = np.arange(1, n)
+        dst = np.zeros(n - 1, dtype=np.int64)
+        feats = np.zeros((n, 4), np.float32)
+        g = CSRGraph.from_edges(n, src, dst, feats, np.zeros(n, np.int64))
+        blocks = sample_blocks(g, np.arange(n), (3,),
+                               np.random.default_rng(0))
+        mask = blocks["mask"][0]
+        assert mask[1:].sum() == 0          # all isolated => fully masked
+        assert mask[0].all()
+
+    def test_csr_construction(self):
+        src = np.array([0, 1, 2])
+        dst = np.array([1, 2, 0])
+        g = CSRGraph.from_edges(3, src, dst,
+                                np.zeros((3, 2), np.float32),
+                                np.zeros(3, np.int64))
+        assert g.n_nodes == 3
+        # node 1's in-neighbors: src where dst==1 -> {0}
+        s, e = g.indptr[1], g.indptr[2]
+        assert list(g.indices[s:e]) == [0]

@@ -1,0 +1,98 @@
+"""EmbeddingBag (dense/ragged), remapped two-tier layout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.embedding.bag import (embedding_bag_dense, embedding_bag_ragged,
+                                 offsets_to_segment_ids)
+from repro.embedding.layout import (RemapSpec, lookup_remapped, remap_table,
+                                    translate)
+
+
+@pytest.fixture
+def table():
+    return jax.random.normal(jax.random.PRNGKey(0), (100, 8))
+
+
+class TestDenseBag:
+    def test_sum_matches_loop(self, table):
+        idx = jax.random.randint(jax.random.PRNGKey(1), (4, 5), 0, 100,
+                                 jnp.int32)
+        out = embedding_bag_dense(table, idx)
+        ref = np.stack([np.asarray(table)[np.asarray(idx[i])].sum(0)
+                        for i in range(4)])
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+    @pytest.mark.parametrize("mode", ["sum", "mean", "max"])
+    def test_modes(self, table, mode):
+        idx = jax.random.randint(jax.random.PRNGKey(2), (3, 4), 0, 100,
+                                 jnp.int32)
+        out = embedding_bag_dense(table, idx, mode=mode)
+        rows = np.asarray(table)[np.asarray(idx)]
+        ref = {"sum": rows.sum(1), "mean": rows.mean(1),
+               "max": rows.max(1)}[mode]
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+    def test_per_sample_weights(self, table):
+        idx = jnp.array([[1, 2], [3, 4]], jnp.int32)
+        w = jnp.array([[0.5, 2.0], [1.0, 0.0]])
+        out = embedding_bag_dense(table, idx, weights=w)
+        ref = (np.asarray(table)[np.asarray(idx)]
+               * np.asarray(w)[..., None]).sum(1)
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+class TestRaggedBag:
+    def test_matches_dense_on_uniform_bags(self, table):
+        idx2d = jax.random.randint(jax.random.PRNGKey(3), (4, 5), 0, 100,
+                                   jnp.int32)
+        flat = idx2d.reshape(-1)
+        seg = jnp.repeat(jnp.arange(4), 5)
+        out = embedding_bag_ragged(table, flat, seg, 4)
+        ref = embedding_bag_dense(table, idx2d)
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+    @pytest.mark.parametrize("mode", ["sum", "mean", "max"])
+    def test_variable_bags(self, table, mode):
+        flat = jnp.array([5, 7, 2, 9, 11, 3], jnp.int32)
+        seg = jnp.array([0, 0, 0, 1, 2, 2], jnp.int32)
+        out = embedding_bag_ragged(table, flat, seg, 3, mode=mode)
+        t = np.asarray(table)
+        bags = [t[[5, 7, 2]], t[[9]], t[[11, 3]]]
+        ref = np.stack([
+            {"sum": b.sum(0), "mean": b.mean(0), "max": b.max(0)}[mode]
+            for b in bags])
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+    def test_offsets_conversion(self):
+        offsets = jnp.array([0, 3, 4], jnp.int32)
+        seg = offsets_to_segment_ids(offsets, 6)
+        np.testing.assert_array_equal(seg, [0, 0, 0, 1, 2, 2])
+
+
+class TestRemappedLayout:
+    def test_lookup_equals_plain_take(self, table):
+        counts = np.random.default_rng(0).integers(0, 50, 100)
+        spec = RemapSpec.from_counts(counts, hot_size=10)
+        stored = remap_table(table, spec)
+        idx = jnp.array([0, 17, 99, 3], jnp.int32)
+        out = lookup_remapped(stored, jnp.asarray(spec.rank_of), idx)
+        np.testing.assert_allclose(out, jnp.take(table, idx, axis=0),
+                                   rtol=1e-6)
+
+    def test_hot_rows_occupy_prefix(self, table):
+        counts = np.zeros(100, np.int64)
+        counts[[42, 7, 99]] = [100, 50, 25]
+        spec = RemapSpec.from_counts(counts, hot_size=3)
+        stored = remap_table(table, spec)
+        np.testing.assert_allclose(stored[0], table[42], rtol=1e-6)
+        np.testing.assert_allclose(stored[1], table[7], rtol=1e-6)
+        np.testing.assert_allclose(stored[2], table[99], rtol=1e-6)
+
+    def test_translate(self):
+        counts = np.array([1, 5, 3])
+        spec = RemapSpec.from_counts(counts, hot_size=1)
+        ranks = translate(jnp.array([1, 2, 0]), spec)
+        np.testing.assert_array_equal(ranks, [0, 1, 2])

@@ -1,0 +1,120 @@
+"""RecFlashEngine end-to-end: offline remap, serving, online adaptive remap.
+
+These are the system-level behaviour tests of the paper's claims: RecFlash
+must beat RecSSD/RM-SSD on latency and energy on high-locality traces, and
+the online remapping flow must fire/skip triggers and charge remap costs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import RecFlashEngine, TableSpec
+from repro.core.freq import AccessStats
+from repro.core.triggers import PeriodTrigger, ThresholdTrigger
+from repro.data.tracegen import generate_sls_batch
+from repro.flashsim.device import SLC, TLC
+
+
+def build(policy, n_tables=2, n_rows=20_000, k=0.0, part=TLC, seed=0):
+    tables = [TableSpec(n_rows=n_rows, vec_bytes=128)
+              for _ in range(n_tables)]
+    tb, rows = generate_sls_batch(n_tables, n_rows, 20, 128, k=k, seed=seed)
+    stats = []
+    for t in range(n_tables):
+        sel = tb == t
+        stats.append(AccessStats.from_trace(rows[sel], n_rows))
+    eng = RecFlashEngine(tables, part, policy=policy, sample_stats=stats)
+    return eng, tb, rows
+
+
+class TestServing:
+    def test_recflash_beats_baselines_high_locality(self):
+        results = {}
+        for pol in ("recssd", "rmssd", "recflash"):
+            eng, tb, rows = build(pol, k=0.0)
+            results[pol] = eng.serve(tb, rows)
+        assert results["recflash"].latency_us < results["rmssd"].latency_us
+        assert results["rmssd"].latency_us < results["recssd"].latency_us
+        assert results["recflash"].read_energy_uj \
+            < results["rmssd"].read_energy_uj
+
+    def test_gap_shrinks_at_low_locality(self):
+        gaps = {}
+        for k in (0.0, 2.0):
+            eng_b, tb, rows = build("rmssd", k=k, seed=3)
+            eng_r, _, _ = build("recflash", k=k, seed=3)
+            gaps[k] = (eng_b.serve(tb, rows).latency_us
+                       / eng_r.serve(tb, rows).latency_us)
+        assert gaps[0.0] > gaps[2.0]
+
+    def test_remap_reduces_page_reads(self):
+        eng_b, tb, rows = build("rmssd")
+        eng_r, _, _ = build("recflash_af_pd")
+        rb = eng_b.serve(tb, rows)
+        rr = eng_r.serve(tb, rows)
+        assert rr.n_page_reads < rb.n_page_reads
+        assert rr.reads_per_lookup < rb.reads_per_lookup
+
+    def test_window_recording(self):
+        eng, tb, rows = build("recflash")
+        eng.serve(tb, rows, record_window=True)
+        assert sum(len(w) for w in eng._window) > 0
+        # the window counts match the trace counts
+        t0 = eng._window[0]
+        sel = tb == 0
+        uniq, cnt = np.unique(rows[sel], return_counts=True)
+        assert t0[int(uniq[0])] == int(cnt[0])
+
+
+class TestOnlineRemap:
+    def test_period_trigger_fires_daily(self):
+        eng, tb, rows = build("recflash")
+        eng.serve(tb, rows, record_window=True)
+        log = eng.maybe_remap(day=0, trigger=PeriodTrigger(1))
+        assert log is not None and log.triggered
+        assert log.remap_latency_us > 0
+        assert log.update_report.n_remapped > 0
+
+    def test_threshold_trigger_skips_stable_distribution(self):
+        """The same distribution as the offline sample must not trigger."""
+        eng, tb, rows = build("recflash")
+        eng.serve(tb, rows, record_window=True)
+        trig = ThresholdTrigger(top_frac=0.05, portion=0.5)   # strict
+        log = eng.maybe_remap(day=0, trigger=trig)
+        assert log is None
+
+    def test_threshold_trigger_fires_on_shift(self):
+        eng, tb, rows = build("recflash", n_tables=1)
+        # shifted popularity: new hot rows the offline sample never saw
+        new_rows = (rows + 9_000) % 20_000
+        eng.serve(np.zeros_like(new_rows), new_rows, record_window=True)
+        trig = ThresholdTrigger(top_frac=0.05, portion=0.001)
+        log = eng.maybe_remap(day=0, trigger=trig)
+        assert log is not None and log.triggered
+
+    def test_remap_improves_after_shift(self):
+        """After a popularity shift, adaptive remapping restores locality."""
+        eng, tb, rows = build("recflash", n_tables=1, seed=5)
+        shifted = (rows * 7919 + 13) % 20_000     # decorrelate hot set
+        tb0 = np.zeros_like(shifted)
+        before = eng.serve(tb0, shifted, record_window=True)
+        eng.maybe_remap(day=0, trigger=PeriodTrigger(1))
+        eng.sim.reset_state()
+        after = eng.serve(tb0, shifted)
+        assert after.n_page_reads <= before.n_page_reads
+        assert after.latency_us < before.latency_us
+
+    def test_baseline_policy_never_remaps(self):
+        eng, tb, rows = build("rmssd")
+        eng.serve(tb, rows, record_window=True)
+        assert eng.maybe_remap(day=0, trigger=PeriodTrigger(1)) is None
+
+    def test_remap_cost_bounded_by_hot_region(self):
+        """Adaptive remap touches O(hot) rows, not the whole table."""
+        eng, tb, rows = build("recflash", n_tables=1, n_rows=50_000)
+        eng.serve(tb, rows, record_window=True)
+        log = eng.maybe_remap(day=0, trigger=PeriodTrigger(1))
+        n_total = 50_000
+        touched = log.update_report.n_remapped \
+            + log.update_report.n_direct_assigned
+        assert touched < 0.25 * n_total

@@ -1,0 +1,153 @@
+"""NAND device model + SLS simulator vs the paper's worked examples."""
+
+import numpy as np
+import pytest
+
+from repro.core.freq import AccessStats
+from repro.core.remap import build_mapping
+from repro.flashsim.device import PARTS, SLC, TIMING, CacheConfig, FlashPart
+from repro.flashsim.timeline import POLICIES, SLSSimulator
+
+
+def make_sim(policy, n_rows=1024, vec_bytes=128, part=SLC, stats=None,
+             cache_cfg=None):
+    pol = POLICIES[policy]
+    m = build_mapping(n_rows, vec_bytes, part.page_bytes, part.n_planes,
+                      mode=pol.mapping_mode, stats=stats)
+    return SLSSimulator(part, pol, [m], TIMING, cache_cfg)
+
+
+class TestTimingModel:
+    def test_table1_constants(self):
+        # paper §III-A: t_CA = 0.115us, t_DO(128B) = 2.58us
+        assert TIMING.t_ca == pytest.approx(0.115)
+        assert TIMING.t_do(128) == pytest.approx(2.58)
+
+    def test_two_vectors_two_pages_worked_example(self):
+        """Fig. 4a: 2 vectors in 2 pages -> 2x(t_CA + t_R + t_DO) = 55.39us."""
+        sim = make_sim("rmssd")
+        # rows 0 and 40 sit in different pages (32 vectors per 4KB page)
+        res = sim.run(np.array([0, 0]), np.array([0, 40]))
+        assert res.n_page_reads == 2
+        assert res.latency_us == pytest.approx(55.39)
+
+    def test_two_vectors_one_page_worked_example(self):
+        """Fig. 4b: 2 vectors in 1 page -> t_CA + t_R + 2 t_DO = 30.275us."""
+        sim = make_sim("rmssd")
+        res = sim.run(np.array([0, 0]), np.array([3, 7]))  # same page
+        assert res.n_page_reads == 1
+        assert res.n_buffer_hits == 1
+        assert res.latency_us == pytest.approx(30.275)
+
+    def test_recssd_sequential_drain(self):
+        """RecSSD drains the buffer from byte 0 (paper §III-B)."""
+        sim = make_sim("recssd")
+        res = sim.run(np.array([0]), np.array([7]))      # slot 7
+        drain = TIMING.t_rr + TIMING.t_rc * 8 * 128      # bytes 0..8*128
+        assert res.latency_us == pytest.approx(TIMING.t_ca + SLC.t_r + drain)
+        # second read behind the drain position costs a re-drain of 0 bytes
+        res2 = sim.run(np.array([0]), np.array([3]))
+        assert res2.n_page_reads == 0
+        assert res2.bytes_out == 0
+
+    def test_rmssd_selective_read(self):
+        """RM-SSD reads only the needed slot regardless of position."""
+        sim = make_sim("rmssd")
+        res = sim.run(np.array([0]), np.array([31]))     # last slot
+        assert res.bytes_out == 128
+        assert res.latency_us == pytest.approx(
+            TIMING.t_ca + SLC.t_r + TIMING.t_do(128))
+
+
+class TestPolicies:
+    def test_af_coalescing_reduces_page_reads(self):
+        rng = np.random.default_rng(0)
+        n_rows = 4096
+        # zipf-ish trace: few hot rows
+        rows = rng.zipf(1.5, size=2000) % n_rows
+        stats = AccessStats.from_trace(rows, n_rows)
+        base = make_sim("rmssd", n_rows)
+        af = make_sim("recflash_af", n_rows, stats=stats)
+        tb = np.zeros_like(rows)
+        r_base = base.run(tb, rows)
+        r_af = af.run(tb, rows)
+        assert r_af.n_page_reads < r_base.n_page_reads
+        assert r_af.latency_us < r_base.latency_us
+
+    def test_pd_overlaps_planes(self):
+        """AF+PD must not be slower than AF for plane-spread traffic."""
+        n_rows = 4096
+        rng = np.random.default_rng(1)
+        rows = rng.integers(0, n_rows, 500)
+        stats = AccessStats.from_trace(rows, n_rows)
+        af = make_sim("recflash_af", n_rows, stats=stats)
+        pd = make_sim("recflash_af_pd", n_rows, stats=stats)
+        tb = np.zeros_like(rows)
+        r_af = af.run(tb, rows)
+        r_pd = pd.run(tb, rows)
+        assert r_pd.latency_us <= r_af.latency_us
+
+    def test_cache_hits_bypass_flash(self):
+        n_rows = 4096
+        rows = np.array([0, 1, 2, 3] * 50)
+        stats = AccessStats.from_trace(rows, n_rows)
+        sim = make_sim("recflash", n_rows, stats=stats,
+                       cache_cfg=CacheConfig())
+        res = sim.run(np.zeros_like(rows), rows)
+        assert res.n_page_reads == 1          # all 4 rows in page 0 after AF
+        assert res.n_cache_hits == len(rows) - 1
+
+    def test_vectorized_equals_exact(self):
+        """No-cache fast path must be identical to the stateful loop."""
+        rng = np.random.default_rng(2)
+        n_rows = 2048
+        rows = rng.integers(0, n_rows, 800)
+        tb = np.zeros_like(rows)
+        stats = AccessStats.from_trace(rows[:200], n_rows)
+        for pol in ("recssd", "rmssd", "recflash_af", "recflash_af_pd"):
+            s1 = make_sim(pol, n_rows, stats=stats)
+            s2 = make_sim(pol, n_rows, stats=stats)
+            r1 = s1.run(tb, rows)
+            r2 = s2.run(tb, rows, force_exact=True)
+            assert r1.n_page_reads == r2.n_page_reads, pol
+            assert r1.bytes_out == r2.bytes_out, pol
+            assert r1.latency_us == pytest.approx(r2.latency_us), pol
+            assert r1.energy_uj == pytest.approx(r2.energy_uj), pol
+
+
+class TestEnergyAndParts:
+    def test_energy_accounting(self):
+        sim = make_sim("rmssd")
+        res = sim.run(np.array([0, 0]), np.array([0, 40]))
+        assert res.read_energy_uj == pytest.approx(2 * SLC.e_page_read)
+        assert res.energy_uj == pytest.approx(
+            2 * SLC.e_page_read + 256 * SLC.e_io_per_byte)
+
+    @pytest.mark.parametrize("name", ["SLC", "TLC", "QLC"])
+    def test_part_configs_match_table3(self, name):
+        part = PARTS[name]
+        expect = {"SLC": (4096, 25.0, 7.39), "TLC": (16384, 60.0, 69.06),
+                  "QLC": (16384, 140.0, 110.99)}[name]
+        assert (part.page_bytes, part.t_r, part.e_page_read) == expect
+        assert part.n_planes == 2
+
+    def test_remap_cost_scales_with_rows(self):
+        sim = make_sim("rmssd")
+        lat1, en1 = sim.remap_cost(1000, 128)
+        lat2, en2 = sim.remap_cost(10_000, 128)
+        assert lat2 > lat1 and en2 > en1
+
+    def test_multi_level_cells_hurt_baseline_more(self):
+        """TLC/QLC larger t_R widens the RecFlash gap (paper §II-B)."""
+        rng = np.random.default_rng(3)
+        n_rows = 4096
+        rows = rng.zipf(1.5, size=1000) % n_rows
+        tb = np.zeros_like(rows)
+        stats = AccessStats.from_trace(rows, n_rows)
+        gaps = {}
+        for name, part in PARTS.items():
+            base = make_sim("rmssd", n_rows, part=part)
+            rf = make_sim("recflash_af_pd", n_rows, part=part, stats=stats)
+            gaps[name] = (base.run(tb, rows).latency_us
+                          / rf.run(tb, rows).latency_us)
+        assert gaps["QLC"] >= gaps["TLC"] >= gaps["SLC"] * 0.9

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Shape/dtype sweeps per kernel; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.recflash_sls import recflash_sls as sls_raw
+from repro.kernels.dot_interaction import dot_interaction as dot_raw
+
+
+def _inputs(h, v, d, b, l, dtype, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    hot = jax.random.normal(k1, (h, d), dtype)
+    cold = jax.random.normal(k2, (v - h, d), dtype)
+    idx = jax.random.randint(k3, (b, l), 0, v, jnp.int32)
+    return hot, cold, idx
+
+
+class TestRecFlashSLS:
+    @pytest.mark.parametrize("h,v,d,b,l", [
+        (32, 128, 8, 16, 4),
+        (64, 512, 16, 32, 20),
+        (16, 64, 32, 8, 1),       # single lookup per bag
+        (128, 130, 64, 8, 7),     # nearly-all-hot table
+    ])
+    def test_shapes_vs_oracle(self, h, v, d, b, l):
+        hot, cold, idx = _inputs(h, v, d, b, l, jnp.float32)
+        out = sls_raw(hot, cold, idx, block_b=8, interpret=True)
+        ref = ops.sls_ref(hot, cold, idx)
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+    @pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-6),
+                                            (jnp.bfloat16, 2e-2)])
+    def test_dtypes(self, dtype, rtol):
+        hot, cold, idx = _inputs(32, 256, 16, 16, 8, dtype)
+        out = sls_raw(hot, cold, idx, block_b=8, interpret=True)
+        ref = ops.sls_ref(hot, cold, idx)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), rtol=rtol)
+
+    def test_all_hot_and_all_cold_paths(self):
+        hot, cold, _ = _inputs(32, 64, 8, 8, 4, jnp.float32)
+        idx_hot = jnp.zeros((8, 4), jnp.int32)               # hot row 0
+        idx_cold = jnp.full((8, 4), 40, jnp.int32)           # cold row
+        for idx in (idx_hot, idx_cold):
+            out = sls_raw(hot, cold, idx, block_b=8, interpret=True)
+            np.testing.assert_allclose(out, ops.sls_ref(hot, cold, idx),
+                                       rtol=1e-6)
+
+    def test_block_b_must_divide(self):
+        hot, cold, idx = _inputs(32, 64, 8, 10, 4, jnp.float32)
+        with pytest.raises(ValueError):
+            sls_raw(hot, cold, idx, block_b=8, interpret=True)
+
+    def test_jitted_wrapper(self):
+        hot, cold, idx = _inputs(32, 128, 8, 16, 4, jnp.float32)
+        out = ops.recflash_sls(hot, cold, idx)
+        np.testing.assert_allclose(out, ops.sls_ref(hot, cold, idx),
+                                   rtol=1e-6)
+
+
+class TestDotInteraction:
+    @pytest.mark.parametrize("b,t,d", [(64, 9, 16), (128, 27, 64),
+                                       (64, 33, 128), (8, 3, 18)])
+    def test_shapes_vs_oracle(self, b, t, d):
+        z = jax.random.normal(jax.random.PRNGKey(0), (b, t, d))
+        gram = dot_raw(z, block_b=min(64, b), interpret=True)
+        np.testing.assert_allclose(gram, ops.dot_ref(z), rtol=1e-5)
+
+    def test_triangle_extraction(self):
+        z = jax.random.normal(jax.random.PRNGKey(1), (16, 5, 8))
+        flat = ops.dot_interaction(z)
+        assert flat.shape == (16, 10)      # 5C2
+        gram = ops.dot_ref(z)
+        iu, ju = np.triu_indices(5, k=1)
+        np.testing.assert_allclose(flat, gram[:, iu, ju], rtol=1e-5)
+
+    @pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5),
+                                            (jnp.bfloat16, 3e-2)])
+    def test_dtypes(self, dtype, rtol):
+        z = jax.random.normal(jax.random.PRNGKey(2), (32, 9, 32), dtype)
+        gram = dot_raw(z, block_b=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(gram, np.float32),
+                                   np.asarray(ops.dot_ref(z), np.float32),
+                                   rtol=rtol)

@@ -1,0 +1,141 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+import jax.numpy as jnp
+
+from repro.core.adaptive import AdaptiveHashTable
+from repro.core.freq import AccessStats
+from repro.core.remap import build_mapping
+from repro.embedding.layout import RemapSpec
+from repro.flashsim.device import PARTS, TIMING
+from repro.flashsim.timeline import POLICIES, SLSSimulator
+from repro.models import lm
+
+
+@st.composite
+def trace_case(draw):
+    n_rows = draw(st.integers(64, 2048))
+    n_acc = draw(st.integers(1, 400))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    rows = rng.zipf(draw(st.sampled_from([1.2, 1.5, 2.0])),
+                    size=n_acc) % n_rows
+    part = draw(st.sampled_from(sorted(PARTS)))
+    policy = draw(st.sampled_from(sorted(POLICIES)))
+    return n_rows, rows, part, policy
+
+
+class TestSimulatorInvariants:
+    @given(trace_case())
+    @settings(max_examples=40, deadline=None)
+    def test_vectorized_equals_exact_loop(self, case):
+        """The fast path must be bit-identical to the stateful loop."""
+        n_rows, rows, part_name, policy = case
+        part = PARTS[part_name]
+        stats = AccessStats.from_trace(rows, n_rows)
+        pol = POLICIES[policy]
+        m = build_mapping(n_rows, 128, part.page_bytes, part.n_planes,
+                          mode=pol.mapping_mode, stats=stats)
+        s1 = SLSSimulator(part, pol, [m], TIMING)
+        s2 = SLSSimulator(part, pol, [m], TIMING)
+        tb = np.zeros_like(rows)
+        r1 = s1.run(tb, rows)
+        r2 = s2.run(tb, rows, force_exact=True)
+        assert r1.n_page_reads == r2.n_page_reads
+        assert r1.n_buffer_hits == r2.n_buffer_hits
+        assert r1.bytes_out == r2.bytes_out
+        assert abs(r1.latency_us - r2.latency_us) < 1e-6 * max(
+            1.0, r1.latency_us)
+
+    @given(trace_case())
+    @settings(max_examples=40, deadline=None)
+    def test_latency_lower_bound(self, case):
+        """Latency >= #page-reads x t_R / n_planes (overlap cannot exceed
+        plane parallelism) and energy >= reads x page energy."""
+        n_rows, rows, part_name, policy = case
+        part = PARTS[part_name]
+        stats = AccessStats.from_trace(rows, n_rows)
+        pol = POLICIES[policy]
+        m = build_mapping(n_rows, 128, part.page_bytes, part.n_planes,
+                          mode=pol.mapping_mode, stats=stats)
+        sim = SLSSimulator(part, pol, [m], TIMING)
+        r = sim.run(np.zeros_like(rows), rows)
+        assert r.latency_us >= r.n_page_reads * part.t_r / part.n_planes
+        assert r.energy_uj >= r.n_page_reads * part.e_page_read
+
+
+class TestMappingInvariants:
+    @given(st.integers(16, 4096), st.sampled_from(["baseline", "af",
+                                                   "af_pd"]),
+           st.integers(0, 2 ** 16))
+    @settings(max_examples=40, deadline=None)
+    def test_mapping_is_bijective(self, n_rows, mode, seed):
+        rng = np.random.default_rng(seed)
+        stats = AccessStats(rng.integers(0, 1000, n_rows).astype(np.int64))
+        m = build_mapping(n_rows, 128, 4096, 2, mode=mode, stats=stats)
+        assert sorted(m.perm.tolist()) == list(range(n_rows))
+        keys = (m.page.astype(np.int64) * m.vectors_per_page
+                + m.slot.astype(np.int64))
+        assert len(set(keys.tolist())) == n_rows
+
+    @given(st.integers(8, 2000), st.integers(1, 16), st.integers(0, 2 ** 16))
+    @settings(max_examples=40, deadline=None)
+    def test_remapspec_inverse(self, n_rows, n_shards, seed):
+        rng = np.random.default_rng(seed)
+        counts = rng.integers(0, 1000, n_rows)
+        spec = RemapSpec.from_counts(counts, n_shards=n_shards)
+        np.testing.assert_array_equal(spec.perm[spec.rank_of],
+                                      np.arange(n_rows))
+        np.testing.assert_array_equal(spec.rank_of[spec.perm],
+                                      np.arange(n_rows))
+
+
+class TestAdaptiveInvariants:
+    @given(st.integers(10, 300), st.floats(0.02, 0.5),
+           st.dictionaries(st.integers(0, 5000), st.integers(1, 10_000),
+                           min_size=1, max_size=60),
+           st.integers(0, 2 ** 16))
+    @settings(max_examples=40, deadline=None)
+    def test_update_invariants(self, n, hot_frac, window, seed):
+        rng = np.random.default_rng(seed)
+        freqs = np.sort(rng.integers(0, 10_000, n))[::-1]
+        keys = rng.permutation(n) + 10_000        # disjoint from window keys
+        ht = AdaptiveHashTable(keys=keys, freqs=freqs,
+                               addrs=np.arange(n), hot_frac=hot_frac)
+        hot_size = ht.hot_size
+        ht.update(window)
+        # 1) hot size invariant
+        assert len(ht._hot) == hot_size
+        # 2) hot prefix sorted descending by freq
+        hf = [ht.freq_of(k) for k in ht.hot_keys()]
+        assert hf == sorted(hf, reverse=True)
+        # 3) addresses unique
+        ht.compact()
+        addrs = [ht.addr_of(k) for k in ht.keys_in_order()]
+        assert len(set(addrs)) == len(addrs)
+        # 4) no key lost
+        assert len(ht) == n + len(window)
+
+
+class TestChunkedCEProperty:
+    @given(st.integers(1, 4), st.integers(4, 64), st.integers(8, 64),
+           st.integers(2, 40), st.integers(0, 2 ** 16))
+    @settings(max_examples=20, deadline=None)
+    def test_chunked_ce_matches_full(self, b, t, vocab, chunk, seed):
+        import jax
+        cfg = lm.LMConfig(name="t", n_layers=1, d_model=8, n_heads=2,
+                          n_kv_heads=2, d_ff=16, vocab=vocab,
+                          tie_embeddings=False, remat=False)
+        params = lm.init(jax.random.PRNGKey(seed % 100), cfg)
+        hidden = jax.random.normal(jax.random.PRNGKey(seed % 97), (b, t, 8))
+        targets = jax.random.randint(jax.random.PRNGKey(seed % 89),
+                                     (b, t), 0, vocab, jnp.int32)
+        logits = lm.logits_fn(params, hidden, cfg).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, -1)
+        ref = -jnp.take_along_axis(logp, targets[..., None], -1).mean()
+        out = lm.chunked_ce(params, hidden, targets, cfg, t_chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=1e-6)

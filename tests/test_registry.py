@@ -1,0 +1,78 @@
+"""Arch registry completeness: all 10 assigned archs (+ the paper's RMCs)
+are selectable, each with the full shape-cell set and metadata."""
+
+import pytest
+
+from repro.configs.base import get_arch, list_archs
+
+ASSIGNED = ["qwen3-1.7b", "qwen2-0.5b", "nemotron-4-15b",
+            "qwen3-moe-30b-a3b", "deepseek-v3-671b", "graphsage-reddit",
+            "din", "dlrm-mlperf", "dlrm-rm2", "bert4rec"]
+
+LM_SHAPES = {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+GNN_SHAPES = {"full_graph_sm", "minibatch_lg", "ogb_products", "molecule"}
+REC_SHAPES = {"train_batch", "serve_p99", "serve_bulk", "retrieval_cand"}
+
+
+class TestRegistry:
+    def test_all_assigned_archs_registered(self):
+        archs = list_archs()
+        for name in ASSIGNED + ["rmc1", "rmc2", "rmc3"]:
+            assert name in archs, name
+
+    @pytest.mark.parametrize("name", ASSIGNED)
+    def test_bundle_has_full_cell_set(self, name):
+        b = get_arch(name)
+        expect = {"lm": LM_SHAPES, "gnn": GNN_SHAPES,
+                  "recsys": REC_SHAPES}[b.family]
+        assert set(b.steps) == expect, (name, set(b.steps))
+        for shape, step in b.steps.items():
+            if step.skip:
+                assert "long_500k" == shape     # only allowed skip
+                assert "full-attention" in step.skip
+            else:
+                assert callable(step.make_fn), (name, shape)
+        assert b.model_flops, name
+        assert callable(b.init)
+        assert b.optimizer is not None or b.family != "lm"
+
+    def test_long500k_skips_are_exactly_the_lm_family(self):
+        skipped = [n for n in ASSIGNED
+                   if get_arch(n).steps.get("long_500k")
+                   and get_arch(n).steps["long_500k"].skip]
+        assert sorted(skipped) == sorted(
+            [n for n in ASSIGNED if get_arch(n).family == "lm"])
+
+    def test_assigned_configs_match_spec(self):
+        """Spot-check the exact assigned hyper-parameters."""
+        q3 = get_arch("qwen3-1.7b").cfg
+        assert (q3.n_layers, q3.d_model, q3.n_heads, q3.n_kv_heads,
+                q3.d_ff, q3.vocab) == (28, 2048, 16, 8, 6144, 151936)
+        assert q3.qk_norm
+        ds = get_arch("deepseek-v3-671b").cfg
+        assert (ds.n_layers, ds.d_model, ds.n_heads) == (61, 7168, 128)
+        assert ds.moe.n_experts == 256 and ds.moe.top_k == 8
+        assert ds.moe.n_shared == 1 and ds.mtp and ds.mla is not None
+        qm = get_arch("qwen3-moe-30b-a3b").cfg
+        assert qm.moe.n_experts == 128 and qm.moe.top_k == 8
+        assert qm.moe.d_expert == 768
+        dl = get_arch("dlrm-mlperf").cfg
+        assert dl.n_tables == 26 and dl.embed_dim == 128
+        assert dl.bot_mlp[-1] == 128 and dl.top_mlp[0] == 1024
+        gs = get_arch("graphsage-reddit").cfg
+        assert gs.n_layers == 2 and gs.d_hidden == 128
+        assert gs.aggregator == "mean"
+        dn = get_arch("din").cfg
+        assert (dn.embed_dim, dn.seq_len, dn.attn_mlp, dn.mlp) == \
+            (18, 100, (80, 40), (200, 80))
+        b4 = get_arch("bert4rec").cfg
+        assert (b4.embed_dim, b4.n_blocks, b4.n_heads, b4.seq_len) == \
+            (64, 2, 2, 200)
+        nm = get_arch("nemotron-4-15b").cfg
+        assert (nm.n_layers, nm.d_model, nm.n_heads, nm.n_kv_heads,
+                nm.d_ff, nm.vocab) == (32, 6144, 48, 8, 24576, 256000)
+        assert nm.act == "squared_relu"
+        q2 = get_arch("qwen2-0.5b").cfg
+        assert (q2.n_layers, q2.d_model, q2.n_heads, q2.n_kv_heads,
+                q2.d_ff) == (24, 896, 14, 2, 4864)
+        assert q2.qkv_bias

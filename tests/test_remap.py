@@ -1,0 +1,128 @@
+"""AF / PD mapping construction + the TPU-side RemapSpec layout."""
+
+import numpy as np
+import pytest
+
+from repro.core.freq import AccessStats
+from repro.core.remap import build_mapping, build_mapping_from_order
+from repro.embedding.layout import RemapSpec
+
+
+def _stats(n_rows=256, seed=0):
+    rng = np.random.default_rng(seed)
+    counts = rng.zipf(1.3, size=n_rows).astype(np.int64)
+    return AccessStats(counts)
+
+
+class TestMapping:
+    def test_baseline_identity_order(self):
+        m = build_mapping(100, 128, 4096, 2, mode="baseline")
+        assert np.array_equal(m.perm, np.arange(100))
+        assert m.vectors_per_page == 32
+        # rows 0..31 share page 0
+        assert len(set(m.page[:32])) == 1
+
+    def test_af_packs_hot_rows_together(self):
+        stats = _stats()
+        m = build_mapping(256, 128, 4096, 2, mode="af", stats=stats)
+        order = stats.rank_order()
+        # the 32 hottest rows all land in page 0
+        assert len(set(m.page[order[:32]])) == 1
+        # af fills plane 0 before plane 1
+        pages_plane0 = set(m.page[m.plane == 0])
+        pages_plane1 = set(m.page[m.plane == 1])
+        if pages_plane1:
+            assert max(pages_plane0) < min(pages_plane1)
+
+    def test_af_pd_round_robins_planes(self):
+        stats = _stats()
+        m = build_mapping(256, 128, 4096, 2, mode="af_pd", stats=stats)
+        # consecutive hot pages alternate planes
+        order = stats.rank_order()
+        p0 = m.plane[order[0]]          # hottest page
+        p1 = m.plane[order[32]]         # second-hottest page
+        assert p0 != p1
+
+    def test_mapping_is_permutation(self):
+        stats = _stats()
+        for mode in ("baseline", "af", "af_pd"):
+            m = build_mapping(256, 128, 4096, 2, mode=mode, stats=stats)
+            assert sorted(m.perm.tolist()) == list(range(256))
+            # (page, slot) unique per row
+            keys = m.page * 1000 + m.slot
+            assert len(set(keys.tolist())) == 256
+
+    def test_lookup_vectorised(self):
+        stats = _stats()
+        m = build_mapping(256, 128, 4096, 2, mode="af_pd", stats=stats)
+        rows = np.array([0, 5, 250])
+        pl, pg, sl = m.lookup(rows)
+        for i, r in enumerate(rows):
+            assert pl[i] == m.plane[r]
+            assert pg[i] == m.page[r]
+            assert sl[i] == m.slot[r]
+
+    def test_build_from_explicit_order(self):
+        order = np.arange(100)[::-1].copy()
+        m = build_mapping_from_order(order, 128, 4096, 2, mode="af_pd")
+        # row 99 (first in order) sits at slot 0 of page 0
+        assert m.page[99] == 0 and m.slot[99] == 0
+
+    def test_needs_stats(self):
+        with pytest.raises(ValueError):
+            build_mapping(10, 128, 4096, 2, mode="af")
+        with pytest.raises(ValueError):
+            build_mapping(10, 128, 4096, 2, mode="nope", stats=_stats(10))
+
+
+class TestAccessStats:
+    def test_from_trace_counts(self):
+        s = AccessStats.from_trace(np.array([1, 1, 3]), 5)
+        assert s.counts.tolist() == [0, 2, 0, 1, 0]
+
+    def test_rank_order_stable_desc(self):
+        s = AccessStats(np.array([5, 9, 5, 1]))
+        assert s.rank_order().tolist() == [1, 0, 2, 3]
+
+    def test_hot_threshold(self):
+        s = AccessStats(np.array([10, 50, 30, 5]))
+        assert s.hot_threshold(0.25) == 50
+        assert s.hot_threshold(0.5) == 30
+
+    def test_unique_access_rate(self):
+        s = AccessStats.from_trace(np.array([0, 0, 0, 1]), 4)
+        assert s.unique_access_rate() == pytest.approx(0.5)
+
+
+class TestRemapSpec:
+    def test_inverse_permutation(self):
+        counts = np.array([3, 9, 1, 7, 5])
+        spec = RemapSpec.from_counts(counts, hot_size=2)
+        assert np.array_equal(spec.perm[spec.rank_of], np.arange(5))
+        assert spec.perm[0] == 1        # hottest row first
+
+    def test_pd_striping_balances_shards(self):
+        n, shards = 1024, 8
+        rng = np.random.default_rng(0)
+        counts = rng.zipf(1.3, size=n).astype(np.int64)
+        spec = RemapSpec.from_counts(counts, hot_size=64, n_shards=shards,
+                                     plane_distribute=True)
+        order = np.argsort(-counts, kind="stable")
+        rows_per_shard = -(-n // shards)
+        hot_rows = set(order[:64].tolist())
+        per_shard = [
+            sum(1 for r in hot_rows
+                if spec.rank_of[r] // rows_per_shard == s)
+            for s in range(shards)]
+        assert max(per_shard) - min(per_shard) <= 1
+
+    def test_pd_striping_still_permutation(self):
+        counts = np.random.default_rng(1).zipf(1.2, size=999)
+        spec = RemapSpec.from_counts(counts, n_shards=7,
+                                     plane_distribute=True)
+        assert sorted(spec.perm.tolist()) == list(range(999))
+        assert np.array_equal(spec.perm[spec.rank_of], np.arange(999))
+
+    def test_identity(self):
+        spec = RemapSpec.identity(10)
+        assert np.array_equal(spec.perm, np.arange(10))

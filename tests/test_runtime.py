@@ -1,0 +1,121 @@
+"""Fault-tolerant runtime: checkpoint/restart, straggler hook, retry."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.runtime import LoopConfig, StepFailure, TrainLoop
+
+
+def make_step():
+    @jax.jit
+    def step(state, batch):
+        p, count = state
+        return (p - 0.1 * (p - batch), count + 1)
+    return step
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6).reshape(2, 3),
+                "b": [jnp.ones(4), jnp.zeros(2)]}
+        ckpt.save(str(tmp_path), 7, tree, meta={"loss": 1.5})
+        assert ckpt.latest_step(str(tmp_path)) == 7
+        like = jax.tree.map(jnp.zeros_like, tree)
+        out = ckpt.restore(str(tmp_path), 7, like)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+            np.testing.assert_array_equal(a, b)
+        assert ckpt.load_meta(str(tmp_path), 7)["loss"] == 1.5
+
+    def test_atomicity_tmpdirs_ignored(self, tmp_path):
+        os.makedirs(tmp_path / ".tmp_half_written")
+        assert ckpt.latest_step(str(tmp_path)) is None
+        ckpt.save(str(tmp_path), 3, {"x": jnp.ones(2)})
+        assert ckpt.latest_step(str(tmp_path)) == 3
+
+    def test_gc_keeps_newest(self, tmp_path):
+        for s in (1, 2, 3, 4):
+            ckpt.save(str(tmp_path), s, {"x": jnp.ones(1) * s})
+        ckpt.gc_old(str(tmp_path), keep=2)
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                       if d.startswith("step_"))
+        assert steps == [3, 4]
+
+    def test_restore_with_new_sharding(self, tmp_path):
+        """Elastic re-mesh: restore onto an explicit (new) sharding."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        tree = {"x": jnp.arange(8, dtype=jnp.float32)}
+        ckpt.save(str(tmp_path), 1, tree)
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        sh = {"x": NamedSharding(mesh, P())}
+        out = ckpt.restore(str(tmp_path), 1, tree, sh)
+        np.testing.assert_array_equal(out["x"], tree["x"])
+        assert out["x"].sharding == sh["x"]
+
+
+class TestTrainLoop:
+    def _loop(self, tmp_path, total=20, **kw):
+        cfg = LoopConfig(total_steps=total, ckpt_dir=str(tmp_path),
+                         ckpt_every=5, **kw)
+        return TrainLoop(cfg=cfg, step_fn=make_step(),
+                         batch_fn=lambda step: jnp.float32(step))
+
+    def test_runs_to_completion(self, tmp_path):
+        loop = self._loop(tmp_path)
+        state = loop.run((jnp.zeros(()), jnp.zeros((), jnp.int32)))
+        assert int(state[1]) == 20
+
+    def test_crash_and_resume_loses_at_most_one_interval(self, tmp_path):
+        loop = self._loop(tmp_path)
+        loop.fail_after_steps = 12
+        with pytest.raises(StepFailure):
+            loop.run((jnp.zeros(()), jnp.zeros((), jnp.int32)))
+        assert ckpt.latest_step(str(tmp_path)) == 10
+        # restart: a fresh loop resumes from step 10 and finishes
+        loop2 = self._loop(tmp_path)
+        state = loop2.run((jnp.zeros(()), jnp.zeros((), jnp.int32)))
+        assert int(state[1]) == 20
+
+    def test_resume_matches_uninterrupted(self, tmp_path):
+        """Loss-free resume: final state identical to a never-killed run."""
+        ref_loop = self._loop(tmp_path / "ref")
+        ref = ref_loop.run((jnp.zeros(()), jnp.zeros((), jnp.int32)))
+
+        loop = self._loop(tmp_path / "crashy")
+        loop.fail_after_steps = 7
+        with pytest.raises(StepFailure):
+            loop.run((jnp.zeros(()), jnp.zeros((), jnp.int32)))
+        loop2 = self._loop(tmp_path / "crashy")
+        out = loop2.run((jnp.zeros(()), jnp.zeros((), jnp.int32)))
+        np.testing.assert_allclose(out[0], ref[0], rtol=1e-6)
+        assert int(out[1]) == int(ref[1])
+
+    def test_straggler_hook_fires(self, tmp_path):
+        times = iter([float(i) for i in range(1000)])
+        clock_state = {"t": 0.0, "slow_at": 15}
+        calls = []
+
+        def clock():
+            clock_state["t"] += 0.01
+            return clock_state["t"]
+
+        loop = self._loop(tmp_path, straggler_factor=2.0,
+                          straggler_warmup=4)
+        orig_attempt = loop._attempt
+
+        def slow_attempt(state, batch):
+            out = orig_attempt(state, batch)
+            if int(state[1]) == 10:          # one slow step
+                clock_state["t"] += 5.0
+            return out
+
+        loop._attempt = slow_attempt
+        loop.clock = clock
+        loop.on_straggler = lambda step, dt, med: calls.append(step)
+        loop.run((jnp.zeros(()), jnp.zeros((), jnp.int32)))
+        assert calls, "straggler hook never fired"
