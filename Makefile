@@ -1,0 +1,20 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench serve-demo
+
+# tier-1 verify
+test:
+	$(PY) -m pytest -x -q
+
+# fast serving-benchmark smoke pass (CI-sized)
+bench-smoke:
+	$(PY) benchmarks/fig_serving_tail.py --smoke
+
+# full figure regeneration + claim table
+bench:
+	$(PY) -m benchmarks.run
+
+# the serving stack end-to-end
+serve-demo:
+	$(PY) -m repro.launch.serve --requests 200 --batch 64

@@ -1,0 +1,118 @@
+"""Serving tail latency — arrival rate x batcher settings x policy sweep.
+
+A scenario the paper only gestures at (its latency claim is per-command):
+replay the *same* open-loop request stream through RecSSD / RM-SSD /
+RecFlash lanes and measure per-request p50/p95/p99 and sustained
+throughput as a function of the offered load and the dynamic batcher's
+(max_batch, max_wait) point (DESIGN.md §3.5). Two effects compose:
+
+* batching amplifies RecFlash — a coalesced batch is one SLS command, so
+  co-batched requests share hot-page reads; the serial baselines gain
+  nothing from coalescing;
+* queueing punishes the baselines — at rates beyond a lane's service
+  capacity the queue grows without bound and tail latency explodes, which
+  is exactly where the 81%-per-command gap turns into orders of magnitude
+  at the tail.
+
+Emits CSV rows:
+
+    fig_serving,arrival,rate_rps,max_batch,max_wait_us,policy,
+    p50_ms,p95_ms,p99_ms,throughput_rps,mean_batch,util
+"""
+
+from __future__ import annotations
+
+from repro.flashsim.device import PARTS
+from repro.serving import (BatcherConfig, ServingScheduler,
+                           build_policy_engines, bursty_arrivals,
+                           make_requests, poisson_arrivals)
+
+POLICY_NAMES = ("recssd", "rmssd", "recflash")
+
+# serving-scale table set: RMC1-like shape scaled to keep the sweep fast
+N_TABLES = 8
+N_ROWS = 100_000
+LOOKUPS = 20
+VEC_BYTES = 128
+
+RATES_RPS = (100.0, 500.0, 2000.0)
+BATCHER_POINTS = ((1, 0.0), (16, 500.0), (64, 1000.0), (64, 5000.0))
+ARRIVALS = {"poisson": poisson_arrivals, "bursty": bursty_arrivals}
+
+
+def build_engines(part_name: str = "TLC", k: float = 0.0, seed: int = 0):
+    engines, _ = build_policy_engines(
+        N_TABLES, N_ROWS, LOOKUPS, VEC_BYTES, PARTS[part_name],
+        policies=POLICY_NAMES, k=k, seed=seed + 100)
+    return engines
+
+
+def run(n_requests: int = 2000, rates=RATES_RPS, points=BATCHER_POINTS,
+        arrivals=("poisson", "bursty"), part: str = "TLC", k: float = 0.0,
+        seed: int = 0):
+    rows = []
+    # engines depend only on (part, k, seed); replay() resets device state,
+    # so one pool serves the whole sweep.
+    engines = build_engines(part, k, seed)
+    for arrival in arrivals:
+        for rate in rates:
+            ts = ARRIVALS[arrival](n_requests, rate, seed=seed + 7)
+            reqs = make_requests(n_requests, N_TABLES, N_ROWS, LOOKUPS, ts,
+                                 k=k, seed=seed)
+            for max_batch, max_wait in points:
+                sched = ServingScheduler(
+                    engines, BatcherConfig(max_batch=max_batch,
+                                           max_wait_us=max_wait))
+                for pol, tr in sched.run(reqs).items():
+                    r = tr.report
+                    rows.append(dict(
+                        arrival=arrival, rate=rate, max_batch=max_batch,
+                        max_wait_us=max_wait, policy=pol,
+                        p50_ms=r.p50_us / 1e3, p95_ms=r.p95_us / 1e3,
+                        p99_ms=r.p99_us / 1e3,
+                        throughput_rps=r.throughput_rps,
+                        mean_batch=r.mean_batch_size,
+                        util=r.device_busy_frac))
+    return rows
+
+
+def tail_amplification(rows) -> dict:
+    """Per (arrival, rate, batcher point): rmssd p99 / recflash p99."""
+    idx = {(r["arrival"], r["rate"], r["max_batch"], r["max_wait_us"],
+            r["policy"]): r for r in rows}
+    out = {}
+    for key, r in idx.items():
+        if r["policy"] != "recflash":
+            continue
+        base = idx[key[:4] + ("rmssd",)]
+        out[key[:4]] = base["p99_ms"] / max(r["p99_ms"], 1e-9)
+    return out
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (one rate, two batcher points)")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(n_requests=300, rates=(500.0,),
+                   points=((1, 0.0), (64, 1000.0)), arrivals=("poisson",))
+    else:
+        rows = run(n_requests=args.requests)
+    print("figure,arrival,rate_rps,max_batch,max_wait_us,policy,"
+          "p50_ms,p95_ms,p99_ms,throughput_rps,mean_batch,util")
+    for r in rows:
+        print(f"fig_serving,{r['arrival']},{r['rate']:.0f},{r['max_batch']},"
+              f"{r['max_wait_us']:.0f},{r['policy']},{r['p50_ms']:.3f},"
+              f"{r['p95_ms']:.3f},{r['p99_ms']:.3f},"
+              f"{r['throughput_rps']:.1f},{r['mean_batch']:.2f},"
+              f"{r['util']:.3f}")
+    amp = tail_amplification(rows)
+    worst = max(amp.values())
+    print(f"\nmax_p99_amplification_rmssd_over_recflash,{worst:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -63,8 +63,11 @@ class RecFlashEngine:
                 self.hash_tables.append(AdaptiveHashTable(
                     keys=order, freqs=s.counts[order],
                     addrs=np.arange(t.n_rows), hot_frac=hot_frac))
-        # online window accumulation (Fig. 6a)
-        self._window: list[dict[int, int]] = [dict() for _ in tables]
+        # online window accumulation (Fig. 6a) — dense per-table count
+        # arrays; np.bincount keeps recording O(1) python work per serve()
+        # call so the serving stack can stream tens of thousands of requests.
+        self._window: list[np.ndarray] = [
+            np.zeros(t.n_rows, dtype=np.int64) for t in tables]
 
     def _build(self, spec: TableSpec, stats: AccessStats) -> Mapping:
         return build_mapping(spec.n_rows, spec.vec_bytes,
@@ -73,17 +76,31 @@ class RecFlashEngine:
 
     # -- serving -------------------------------------------------------------
     def serve(self, tables: np.ndarray, rows: np.ndarray,
-              record_window: bool = False) -> SimResult:
+              record_window: bool = False, window: int = 0) -> SimResult:
+        """Serve one SLS command stream; optionally record the online window.
+
+        ``window`` is forwarded to the simulator as the SLS command size
+        (``0`` = the whole call is one command — what the dynamic batcher
+        wants, since a coalesced batch IS one command, DESIGN.md §3).
+        """
         if record_window:
-            tables_arr = np.asarray(tables).ravel()
-            rows_arr = np.asarray(rows).ravel()
+            tables_arr = np.asarray(tables, dtype=np.int64).ravel()
+            rows_arr = np.asarray(rows, dtype=np.int64).ravel()
             for tid in np.unique(tables_arr):
-                sel = tables_arr == tid
-                idx, cnt = np.unique(rows_arr[sel], return_counts=True)
-                w = self._window[tid]
-                for i, c in zip(idx.tolist(), cnt.tolist()):
-                    w[i] = w.get(i, 0) + c
-        return self.sim.run(tables, rows)
+                cnt = np.bincount(rows_arr[tables_arr == tid],
+                                  minlength=self.tables[tid].n_rows)
+                self._window[tid] += cnt
+        return self.sim.run(tables, rows, window=window)
+
+    def window_counts(self, tid: int) -> np.ndarray:
+        """Dense access-count array for table ``tid``'s online window."""
+        return self._window[tid]
+
+    def window_dict(self, tid: int) -> dict[int, int]:
+        """Sparse {row: count} view of the window (trigger/Alg.-1 input)."""
+        w = self._window[tid]
+        idx = np.flatnonzero(w)
+        return dict(zip(idx.tolist(), w[idx].tolist()))
 
     # -- online training / adaptive remap -------------------------------------
     def maybe_remap(self, day: int,
@@ -98,11 +115,14 @@ class RecFlashEngine:
         if self.policy.mapping_mode == "baseline" or not self.hash_tables:
             self._clear_window()
             return None
+        # sparse views are O(n_rows) to build — materialise once per table
+        # and share between the trigger check and the Algorithm-1 update.
+        windows = [self.window_dict(t) for t in range(len(self.tables))]
         if isinstance(trigger, PeriodTrigger):
             fired = trigger.should_trigger(day)
         else:
             fired = any(
-                trigger.should_trigger(self._window[t], ht.threshold_freq,
+                trigger.should_trigger(windows[t], ht.threshold_freq,
                                        frozenset(ht.hot_keys()))
                 for t, ht in enumerate(self.hash_tables))
         if not fired:
@@ -113,7 +133,7 @@ class RecFlashEngine:
         total_energy = 0.0
         reports = []
         for tid, (spec, ht) in enumerate(zip(self.tables, self.hash_tables)):
-            window = self._window[tid]
+            window = windows[tid]
             if not window:
                 continue
             report = ht.update(window)
@@ -146,4 +166,4 @@ class RecFlashEngine:
 
     def _clear_window(self) -> None:
         for w in self._window:
-            w.clear()
+            w[:] = 0

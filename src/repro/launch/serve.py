@@ -1,12 +1,16 @@
-"""Batched serving driver — the RecFlash inference service in miniature.
+"""Serving driver — the RecFlash inference service on the serving subsystem.
 
-Serves a small DLRM with batched requests through the full RecFlash stack:
-the embedding tables are stored frequency-remapped (AF+PD RemapSpec), the
-jitted forward consumes logical ids through the rank_of hash table, and —
-in parallel — the flashsim half reports what the same request stream would
-cost on the NAND device for each access policy (the paper's latency story).
+Requests (one DLRM inference each) arrive on a Poisson or bursty open-loop
+stream, wait in the ``RequestQueue``, are coalesced by the ``DynamicBatcher``
+(max-batch / max-wait) and scheduled onto a pool of ``RecFlashEngine``s —
+one per NAND access policy — so the identical stream is replayed against
+RecSSD / RM-SSD / RecFlash and per-request p50/p95/p99 latency and
+throughput come out per policy (DESIGN.md §3). In parallel, the TPU half
+scores the RecFlash lane's batches through the jitted DLRM forward (tables
+stored frequency-remapped, logical ids translated via the rank_of hash
+table), padded to a single compiled shape.
 
-    PYTHONPATH=src python -m repro.launch.serve --requests 50 --batch 64
+    PYTHONPATH=src python -m repro.launch.serve --requests 200 --batch 64
 """
 
 from __future__ import annotations
@@ -20,80 +24,117 @@ import jax
 import jax.numpy as jnp
 
 import repro.models.dlrm as dlrm
-from repro.core.engine import RecFlashEngine, TableSpec
-from repro.core.freq import AccessStats
-from repro.data.tracegen import generate_sls_batch
 from repro.embedding.layout import RemapSpec, remap_table
 from repro.flashsim.device import PARTS
 from repro.launch.train import small_dlrm
+from repro.serving import (BatcherConfig, ServingScheduler,
+                           build_policy_engines, bursty_arrivals,
+                           make_requests, poisson_arrivals)
+
+POLICY_NAMES = ("recssd", "rmssd", "recflash")
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--requests", type=int, default=50)
-    ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--part", choices=("SLC", "TLC", "QLC"), default="TLC")
-    ap.add_argument("--k", type=float, default=0.0,
-                    help="trace locality knob (0 = most local)")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def score_batches(batches, params, cfg, rank_ofs, dense_all, max_batch: int):
+    """TPU half: jitted forward over the lane's batches, one compiled shape.
 
-    cfg = small_dlrm()
-    params = dlrm.init(jax.random.PRNGKey(args.seed), cfg)
-
-    # --- offline phase: sampled stats -> AF remap + flashsim engines ----
-    tb, rows = generate_sls_batch(cfg.n_tables, cfg.n_rows[0], cfg.lookups,
-                                  512, k=args.k, seed=args.seed + 1)
-    stats, specs = [], []
-    for t in range(cfg.n_tables):
-        s = AccessStats.from_trace(rows[tb == t], cfg.n_rows[0])
-        stats.append(s)
-        specs.append(RemapSpec.from_counts(s.counts))
-    params["tables"] = [remap_table(tbl, s)
-                        for tbl, s in zip(params["tables"], specs)]
-    rank_ofs = [jnp.asarray(s.rank_of) for s in specs]
-    engines = {
-        pol: RecFlashEngine(
-            [TableSpec(cfg.n_rows[0], cfg.embed_dim * 4)] * cfg.n_tables,
-            PARTS[args.part], policy=pol, sample_stats=stats)
-        for pol in ("recssd", "rmssd", "recflash")}
+    Batches are padded to ``max_batch`` rows (row 0 replicated) so every
+    dispatch hits the same jit cache entry; only real rows are counted.
+    """
 
     @jax.jit
     def serve_step(p, batch):
         return dlrm.forward(dlrm.add_remap(p, rank_ofs), batch, cfg)
 
-    # --- serving loop ----------------------------------------------------
-    sim_lat = {pol: 0.0 for pol in engines}
     t_compute = 0.0
     n_scored = 0
-    for req in range(args.requests):
-        rng = np.random.default_rng(args.seed * 7919 + req)
-        tbr, rowr = generate_sls_batch(cfg.n_tables, cfg.n_rows[0],
-                                       cfg.lookups, args.batch, k=args.k,
-                                       seed=req)
-        batch = {
-            "dense": jnp.asarray(
-                rng.normal(size=(args.batch, cfg.n_dense)), jnp.float32),
-            "indices": jnp.asarray(
-                rowr.reshape(args.batch, cfg.n_tables, cfg.lookups),
-                jnp.int32),
-        }
+    for b in batches:
+        rids = np.array([r.rid for r in b.requests])
+        idx = np.stack([r.rows.reshape(cfg.n_tables, cfg.lookups)
+                        for r in b.requests])
+        pad = max_batch - idx.shape[0]
+        if pad:
+            idx = np.concatenate([idx, np.repeat(idx[:1], pad, axis=0)])
+        dense = dense_all[rids]
+        if pad:
+            dense = np.concatenate([dense, np.repeat(dense[:1], pad, axis=0)])
+        batch = {"dense": jnp.asarray(dense, jnp.float32),
+                 "indices": jnp.asarray(idx, jnp.int32)}
         t0 = time.time()
-        logits = jax.block_until_ready(serve_step(params, batch))
+        jax.block_until_ready(serve_step(params, batch))
         t_compute += time.time() - t0
-        n_scored += int(logits.shape[0])
-        for pol, eng in engines.items():
-            sim_lat[pol] += eng.serve(tbr, rowr).latency_us
+        n_scored += len(b.requests)
+    return t_compute, n_scored
 
-    print(f"scored {n_scored} requests in {t_compute:.2f}s "
-          f"({1e3 * t_compute / args.requests:.2f} ms/batch compute)")
-    print(f"\nsimulated {args.part} embedding latency per batch (us):")
-    for pol, lat in sorted(sim_lat.items(), key=lambda kv: -kv[1]):
-        print(f"  {pol:10s} {lat / args.requests:12.1f}"
-              + ("" if pol == "recssd" else
-                 f"   ({1 - lat / sim_lat['recssd']:.1%} vs recssd)"))
-    print(f"\nrecflash vs rmssd: "
-          f"{1 - sim_lat['recflash'] / sim_lat['rmssd']:.1%} faster")
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=50,
+                    help="number of inference requests in the stream")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="dynamic batcher max batch size (requests)")
+    ap.add_argument("--max-wait-us", type=float, default=1000.0,
+                    help="batcher max-wait budget for the oldest request")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="mean arrival rate, requests/sec (simulated)")
+    ap.add_argument("--arrival", choices=("poisson", "bursty"),
+                    default="poisson")
+    ap.add_argument("--part", choices=("SLC", "TLC", "QLC"), default="TLC")
+    ap.add_argument("--k", type=float, default=0.0,
+                    help="trace locality knob (0 = most local)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-compute", action="store_true",
+                    help="storage-side simulation only (no jit forward)")
+    args = ap.parse_args()
+
+    cfg = small_dlrm()
+    engines, stats = build_policy_engines(
+        cfg.n_tables, cfg.n_rows[0], cfg.lookups, cfg.embed_dim * 4,
+        PARTS[args.part], policies=POLICY_NAMES, k=args.k, seed=args.seed)
+    specs = [RemapSpec.from_counts(s.counts) for s in stats]
+
+    # --- request stream ---------------------------------------------------
+    arrival_fn = (poisson_arrivals if args.arrival == "poisson"
+                  else bursty_arrivals)
+    arrivals = arrival_fn(args.requests, args.rate, seed=args.seed + 2)
+    requests = make_requests(args.requests, cfg.n_tables, cfg.n_rows[0],
+                             cfg.lookups, arrivals, k=args.k, seed=args.seed)
+
+    # --- storage half: replay the stream against every policy -------------
+    sched = ServingScheduler(
+        engines, BatcherConfig(max_batch=args.batch,
+                               max_wait_us=args.max_wait_us))
+    t0 = time.time()
+    traces = sched.run(requests)
+    t_sim = time.time() - t0
+
+    # --- compute half: score the RecFlash lane's batches on the TPU -------
+    if not args.skip_compute:
+        params = dlrm.init(jax.random.PRNGKey(args.seed), cfg)
+        params["tables"] = [remap_table(tbl, s)
+                            for tbl, s in zip(params["tables"], specs)]
+        rank_ofs = [jnp.asarray(s.rank_of) for s in specs]
+        dense_all = np.random.default_rng(args.seed * 7919).normal(
+            size=(args.requests, cfg.n_dense)).astype(np.float32)
+        t_compute, n_scored = score_batches(
+            traces["recflash"].batches, params, cfg, rank_ofs, dense_all,
+            args.batch)
+        n_b = max(1, len(traces["recflash"].batches))
+        print(f"scored {n_scored} requests in {t_compute:.2f}s compute "
+              f"({1e3 * t_compute / n_b:.2f} ms/batch jit forward)")
+
+    # --- report -----------------------------------------------------------
+    print(f"\n{args.arrival} arrivals @ {args.rate:.0f} req/s, "
+          f"batcher <= {args.batch} reqs / {args.max_wait_us:.0f} us wait, "
+          f"{args.part} part  (simulated in {t_sim:.2f}s wall):\n")
+    for pol in POLICY_NAMES:
+        print("  " + traces[pol].report.row())
+    r_flash = traces["recflash"].report
+    r_rmssd = traces["rmssd"].report
+    if r_rmssd.p99_us > 0:
+        print(f"\nrecflash vs rmssd: "
+              f"{1 - r_flash.p99_us / r_rmssd.p99_us:.1%} lower p99, "
+              f"{r_flash.throughput_rps / max(r_rmssd.throughput_rps, 1e-9):.2f}x "
+              f"throughput")
     return 0
 
 

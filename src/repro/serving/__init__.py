@@ -1,0 +1,18 @@
+"""Serving subsystem: request queue + dynamic batcher + multi-policy
+scheduler over the flashsim device model (DESIGN.md §3)."""
+
+from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
+from repro.serving.metrics import LatencyReport, percentiles, summarize
+from repro.serving.queueing import RequestQueue
+from repro.serving.scheduler import (LaneTrace, ServingScheduler,
+                                     build_policy_engines, replay)
+from repro.serving.workload import (Request, bursty_arrivals, make_requests,
+                                    poisson_arrivals)
+
+__all__ = [
+    "Batch", "BatcherConfig", "DynamicBatcher",
+    "LatencyReport", "percentiles", "summarize",
+    "RequestQueue",
+    "LaneTrace", "ServingScheduler", "build_policy_engines", "replay",
+    "Request", "bursty_arrivals", "make_requests", "poisson_arrivals",
+]

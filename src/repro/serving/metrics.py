@@ -1,0 +1,68 @@
+"""Per-request latency / throughput accounting (DESIGN.md §3.4).
+
+A request's latency is completion minus arrival: queueing delay + batching
+delay + device service time of the batch it rode in. Percentiles use the
+linear-interpolation definition (``np.percentile`` default) so p50 of an
+odd-length sample is the median element exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LatencyReport:
+    """Tail-latency + throughput summary for one policy's replay."""
+
+    policy: str
+    n_requests: int
+    p50_us: float
+    p95_us: float
+    p99_us: float
+    mean_us: float
+    max_us: float
+    throughput_rps: float      # completed requests / makespan
+    mean_batch_size: float
+    n_batches: int
+    device_busy_frac: float    # service time / makespan (utilisation)
+    energy_uj: float
+
+    def row(self) -> str:
+        return (f"{self.policy:14s} p50 {self.p50_us / 1e3:9.2f}  "
+                f"p95 {self.p95_us / 1e3:9.2f}  "
+                f"p99 {self.p99_us / 1e3:9.2f} ms   "
+                f"{self.throughput_rps:8.0f} req/s   "
+                f"batch {self.mean_batch_size:5.1f}   "
+                f"util {self.device_busy_frac:5.1%}")
+
+
+def percentiles(latencies_us: np.ndarray,
+                qs=(50.0, 95.0, 99.0)) -> tuple[float, ...]:
+    lat = np.asarray(latencies_us, dtype=np.float64)
+    if lat.size == 0:
+        return tuple(0.0 for _ in qs)
+    return tuple(float(np.percentile(lat, q)) for q in qs)
+
+
+def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,
+              batch_sizes: list[int], busy_us: float,
+              energy_uj: float = 0.0) -> LatencyReport:
+    lat = np.asarray(latencies_us, dtype=np.float64)
+    p50, p95, p99 = percentiles(lat)
+    makespan_us = max(makespan_us, 1e-9)
+    return LatencyReport(
+        policy=policy,
+        n_requests=int(lat.size),
+        p50_us=p50, p95_us=p95, p99_us=p99,
+        mean_us=float(lat.mean()) if lat.size else 0.0,
+        max_us=float(lat.max()) if lat.size else 0.0,
+        throughput_rps=1e6 * lat.size / makespan_us,
+        mean_batch_size=(sum(batch_sizes) / len(batch_sizes)
+                         if batch_sizes else 0.0),
+        n_batches=len(batch_sizes),
+        device_busy_frac=busy_us / makespan_us,
+        energy_uj=energy_uj,
+    )

@@ -1,0 +1,130 @@
+"""Multi-policy serving scheduler (DESIGN.md §3.3).
+
+Replays one request stream through a pool of ``RecFlashEngine``s — one per
+access policy — under identical arrivals and batcher settings, so the only
+variable is the device policy. Each lane is a single-server queueing system
+(the SSD services one coalesced SLS command at a time, matching the
+flashsim device model's single-command scope):
+
+    t_free = 0
+    while queue:
+        batch    = batcher.next_batch(queue, t_free)      # dynamic batching
+        start    = max(batch.dispatch_us, t_free)
+        svc      = engine.serve(batch).latency_us         # flashsim
+        t_free   = start + svc
+        latency[r] = t_free - r.arrival_us  for r in batch
+
+Per-request latency therefore folds in queueing delay (backlog), batching
+delay (max-wait) and device service time — the serving-level quantity the
+paper's latency claim is ultimately about.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.engine import RecFlashEngine, TableSpec
+from repro.core.freq import AccessStats
+from repro.data.tracegen import generate_sls_batch
+from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
+from repro.serving.metrics import LatencyReport, summarize
+from repro.serving.queueing import RequestQueue
+from repro.serving.workload import Request
+
+
+def build_policy_engines(n_tables: int, n_rows: int, lookups: int,
+                         vec_bytes: int, part,
+                         policies=("recssd", "rmssd", "recflash"),
+                         k: float = 0.0, seed: int = 0,
+                         sample_inferences: int = 512):
+    """Offline phase (paper Fig. 8) shared by the drivers and benchmarks:
+    sampled training sweep -> per-table AccessStats -> one engine per
+    policy. Returns ``(engines, stats)``; ``part`` is a FlashPart."""
+    tb, rows = generate_sls_batch(n_tables, n_rows, lookups,
+                                  sample_inferences, k=k, seed=seed + 1)
+    stats = [AccessStats.from_trace(rows[tb == t], n_rows)
+             for t in range(n_tables)]
+    engines = {pol: RecFlashEngine(
+        [TableSpec(n_rows, vec_bytes)] * n_tables, part,
+        policy=pol, sample_stats=stats) for pol in policies}
+    return engines, stats
+
+
+@dataclasses.dataclass
+class LaneTrace:
+    """Full replay record for one policy lane."""
+
+    report: LatencyReport
+    batches: list[Batch]
+    latencies_us: np.ndarray       # ordered as the input request list
+    completions_us: np.ndarray
+
+    def latency_of(self, rid: int, requests: list[Request]) -> float:
+        """Latency of the request with ``rid`` in the replayed stream."""
+        for i, r in enumerate(requests):
+            if r.rid == rid:
+                return float(self.latencies_us[i])
+        raise KeyError(rid)
+
+
+def replay(requests: list[Request], engine: RecFlashEngine,
+           batcher_cfg: BatcherConfig | None = None,
+           record_window: bool = False,
+           policy_name: str | None = None) -> LaneTrace:
+    """Run one policy lane over the whole request stream."""
+    batcher = DynamicBatcher(batcher_cfg)
+    queue = RequestQueue(requests)
+    name = policy_name or engine.policy.name
+    n = len(requests)
+    # rids need not be dense 0..n-1 (sub-streams, filtered streams) —
+    # account positionally against the input list.
+    index_of = {r.rid: i for i, r in enumerate(requests)}
+    if len(index_of) != n:
+        raise ValueError("duplicate request rids in stream")
+    latencies = np.zeros(n, dtype=np.float64)
+    completions = np.zeros(n, dtype=np.float64)
+    batches: list[Batch] = []
+    t_free = 0.0
+    busy = 0.0
+    energy = 0.0
+    engine.sim.reset_state()
+    while len(queue):
+        batch = batcher.next_batch(queue, device_free_us=t_free)
+        start = max(batch.dispatch_us, t_free)
+        res = engine.serve(batch.tables, batch.rows,
+                           record_window=record_window)
+        svc = res.latency_us
+        t_free = start + svc
+        busy += svc
+        energy += res.energy_uj
+        for r in batch.requests:
+            i = index_of[r.rid]
+            latencies[i] = t_free - r.arrival_us
+            completions[i] = t_free
+        batches.append(batch)
+    first_arrival = min(r.arrival_us for r in requests) if requests else 0.0
+    makespan = (float(completions.max()) - first_arrival) if n else 0.0
+    report = summarize(name, latencies, makespan,
+                       [b.size for b in batches], busy, energy)
+    return LaneTrace(report=report, batches=batches, latencies_us=latencies,
+                     completions_us=completions)
+
+
+class ServingScheduler:
+    """Drives a pool of engines (one per policy) over one request stream."""
+
+    def __init__(self, engines: dict[str, RecFlashEngine],
+                 batcher_cfg: BatcherConfig | None = None):
+        if not engines:
+            raise ValueError("need at least one policy engine")
+        self.engines = engines
+        self.batcher_cfg = batcher_cfg or BatcherConfig()
+
+    def run(self, requests: list[Request],
+            record_window: bool = False) -> dict[str, LaneTrace]:
+        """Replay the stream through every policy lane; {policy: trace}."""
+        return {pol: replay(requests, eng, self.batcher_cfg,
+                            record_window=record_window, policy_name=pol)
+                for pol, eng in self.engines.items()}

@@ -1,0 +1,108 @@
+"""Request-stream modeling for the serving subsystem (DESIGN.md §3.1).
+
+A ``Request`` is one recommendation inference: an SLS command of
+``n_tables x lookups_per_table`` embedding accesses plus its arrival
+timestamp. Arrival processes generate the timestamp stream:
+
+* ``poisson_arrivals`` — memoryless open-loop traffic at a fixed mean rate
+  (the classical serving assumption; RecNMP/RecSSD evaluate under it);
+* ``bursty_arrivals`` — a two-state Markov-modulated Poisson process
+  (on/off): quiet periods at ``rate`` punctuated by bursts at
+  ``burst_factor x rate``. This is the irregular, high-volume stream the
+  paper's latency claim is about — tail latency separates the policies far
+  more than the mean does.
+
+All times are microseconds of *simulated* time, matching the flashsim
+device model; nothing here sleeps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.tracegen import generate_sls_batch
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request: an SLS command plus its arrival time."""
+
+    rid: int
+    arrival_us: float
+    tables: np.ndarray       # (n_lookups,) table id per access
+    rows: np.ndarray         # (n_lookups,) row id per access
+
+    @property
+    def n_lookups(self) -> int:
+        return int(self.rows.size)
+
+
+def poisson_arrivals(n: int, rate_rps: float, seed: int = 0) -> np.ndarray:
+    """``n`` sorted arrival timestamps (us) at ``rate_rps`` requests/sec."""
+    if rate_rps <= 0:
+        raise ValueError("rate_rps must be positive")
+    rng = np.random.default_rng(seed)
+    gaps_us = rng.exponential(1e6 / rate_rps, size=n)
+    return np.cumsum(gaps_us)
+
+
+def bursty_arrivals(n: int, rate_rps: float, burst_factor: float = 8.0,
+                    burst_len: int = 32, duty: float = 0.25,
+                    seed: int = 0) -> np.ndarray:
+    """On/off modulated arrivals: bursts of ``burst_len`` requests arrive at
+    ``burst_factor x rate_rps``; between bursts the stream idles so the
+    long-run mean rate stays ``rate_rps``. ``duty`` is the expected
+    fraction of requests that belong to bursts."""
+    if not 0.0 < duty <= 1.0:
+        raise ValueError("duty must be in (0, 1]")
+    rng = np.random.default_rng(seed)
+    gaps_us = rng.exponential(1e6 / rate_rps, size=n)
+    # per-step burst-start probability solving
+    #   E[burst fraction] = p*burst_len / (p*burst_len + 1-p) = duty
+    p_start = duty / (duty + burst_len * (1.0 - duty))
+    in_burst = np.zeros(n, dtype=bool)
+    i = 0
+    while i < n:
+        if rng.random() < p_start:
+            in_burst[i:i + burst_len] = True
+            i += burst_len
+        else:
+            i += 1
+    # bursts compress their gaps; quiet stretches absorb the reclaimed time
+    # so the long-run mean rate is conserved. If a (short) stream came out
+    # all-burst, rescale every gap instead — same total duration either way.
+    total = gaps_us.sum()
+    gaps_us[in_burst] /= burst_factor
+    quiet = ~in_burst
+    if in_burst.any():
+        if quiet.any():
+            reclaimed = gaps_us[in_burst].sum() * (burst_factor - 1.0)
+            gaps_us[quiet] += reclaimed / quiet.sum()
+        else:
+            gaps_us *= total / gaps_us.sum()
+    return np.cumsum(gaps_us)
+
+
+def make_requests(n_requests: int, n_tables: int, n_rows: int,
+                  lookups_per_table: int, arrivals_us: np.ndarray,
+                  k: float = 0.0, seed: int = 0,
+                  pop_seed: int = 12345) -> list[Request]:
+    """Materialise a request stream sharing one popularity distribution.
+
+    The whole stream is drawn in a single vectorised ``generate_sls_batch``
+    call (each request = one inference of the batch) and sliced into
+    per-request views — no per-request trace generation.
+    """
+    if arrivals_us.size != n_requests:
+        raise ValueError("need one arrival timestamp per request")
+    tb, rows = generate_sls_batch(n_tables, n_rows, lookups_per_table,
+                                  n_requests, k=k, seed=seed,
+                                  pop_seed=pop_seed)
+    per = n_tables * lookups_per_table
+    tb = tb.reshape(n_requests, per)
+    rows = rows.reshape(n_requests, per)
+    return [Request(rid=i, arrival_us=float(arrivals_us[i]),
+                    tables=tb[i], rows=rows[i])
+            for i in range(n_requests)]

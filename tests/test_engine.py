@@ -58,9 +58,9 @@ class TestServing:
     def test_window_recording(self):
         eng, tb, rows = build("recflash")
         eng.serve(tb, rows, record_window=True)
-        assert sum(len(w) for w in eng._window) > 0
+        assert sum(len(eng.window_dict(t)) for t in range(2)) > 0
         # the window counts match the trace counts
-        t0 = eng._window[0]
+        t0 = eng.window_dict(0)
         sel = tb == 0
         uniq, cnt = np.unique(rows[sel], return_counts=True)
         assert t0[int(uniq[0])] == int(cnt[0])

@@ -33,6 +33,10 @@ class TestDrivers:
     def test_serve_driver_reports_policy_gap(self):
         out = run(["-m", "repro.launch.serve", "--requests", "4",
                    "--batch", "16"])
+        # per-policy tail-latency report from the serving stack
+        for pol in ("recssd", "rmssd", "recflash"):
+            assert f"\n  {pol}" in out
+        assert "p50" in out and "p99" in out
         assert "recflash vs rmssd" in out
         # the RecFlash policy must win on the simulated device
         pct = float(out.split("recflash vs rmssd:")[1].split("%")[0])

@@ -1,8 +1,12 @@
 """Hypothesis property tests on the system's invariants."""
 
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st               # noqa: E402
+from hypothesis import given, settings           # noqa: E402
 
 import jax.numpy as jnp
 

@@ -1,0 +1,262 @@
+"""Serving subsystem: queue ordering, batcher bounds, metrics, scheduler,
+and the vectorized record_window equivalence (DESIGN.md §3)."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import RecFlashEngine, TableSpec
+from repro.core.freq import AccessStats
+from repro.data.tracegen import generate_sls_batch
+from repro.flashsim.device import TLC
+from repro.serving import (BatcherConfig, DynamicBatcher, RequestQueue,
+                           ServingScheduler, bursty_arrivals, make_requests,
+                           percentiles, poisson_arrivals, replay)
+from repro.serving.workload import Request
+
+
+def mk_request(rid, arrival_us, n=8):
+    rng = np.random.default_rng(rid)
+    return Request(rid=rid, arrival_us=float(arrival_us),
+                   tables=np.zeros(n, dtype=np.int64),
+                   rows=rng.integers(0, 1000, n).astype(np.int64))
+
+
+def mk_stream(n_requests=64, n_tables=2, n_rows=5_000, lookups=8,
+              rate=1000.0, seed=0, arrival=poisson_arrivals):
+    ts = arrival(n_requests, rate, seed=seed)
+    return make_requests(n_requests, n_tables, n_rows, lookups, ts,
+                         k=0.0, seed=seed)
+
+
+def mk_engine(policy="recflash", n_tables=2, n_rows=5_000, lookups=8,
+              seed=0):
+    tb, rows = generate_sls_batch(n_tables, n_rows, lookups, 128, k=0.0,
+                                  seed=seed + 50)
+    stats = [AccessStats.from_trace(rows[tb == t], n_rows)
+             for t in range(n_tables)]
+    return RecFlashEngine([TableSpec(n_rows, 64)] * n_tables, TLC,
+                          policy=policy, sample_stats=stats)
+
+
+class TestArrivals:
+    def test_poisson_sorted_and_rate(self):
+        ts = poisson_arrivals(5000, rate_rps=1000.0, seed=3)
+        assert ts.size == 5000
+        assert np.all(np.diff(ts) >= 0)
+        mean_rate = 5000 / (ts[-1] / 1e6)
+        assert 800 < mean_rate < 1250        # within ~25% of nominal
+
+    def test_bursty_sorted_and_mean_rate_conserved(self):
+        ts = bursty_arrivals(5000, rate_rps=1000.0, burst_factor=8.0,
+                             seed=3)
+        assert np.all(np.diff(ts) >= 0)
+        mean_rate = 5000 / (ts[-1] / 1e6)
+        assert 900 < mean_rate < 1100
+        # burstiness: index of dispersion of 50 ms bin counts (Poisson ~= 1,
+        # the on/off modulated stream must be clearly over-dispersed)
+        def dispersion(t):
+            bins = np.arange(0, t[-1] + 50_000.0, 50_000.0)
+            counts, _ = np.histogram(t, bins)
+            return counts.var() / counts.mean()
+        assert dispersion(ts) > 2.0
+        assert dispersion(ts) > 2 * dispersion(
+            poisson_arrivals(5000, 1000.0, seed=3))
+
+    def test_bursty_rate_conserved_small_streams(self):
+        """Even tiny (possibly all-burst) draws keep the offered rate."""
+        rates = [32 / (bursty_arrivals(32, 1000.0, seed=s)[-1] / 1e6)
+                 for s in range(20)]
+        assert 600 < float(np.mean(rates)) < 1500
+
+
+class TestRequestQueue:
+    def test_ordering_under_bursty_out_of_order_push(self):
+        """Pops come out in arrival order however arrivals were pushed."""
+        ts = bursty_arrivals(200, 2000.0, seed=9)
+        reqs = [mk_request(i, t) for i, t in enumerate(ts)]
+        rng = np.random.default_rng(1)
+        q = RequestQueue()
+        for i in rng.permutation(len(reqs)):
+            q.push(reqs[int(i)])
+        popped = q.pop_arrived(float("inf"))
+        assert [r.rid for r in popped] == sorted(
+            range(200), key=lambda i: (ts[i], i))
+
+    def test_clock_gating(self):
+        q = RequestQueue([mk_request(0, 10.0), mk_request(1, 20.0),
+                          mk_request(2, 30.0)])
+        assert [r.rid for r in q.pop_arrived(15.0)] == [0]
+        assert len(q) == 2
+        assert [r.rid for r in q.pop_arrived(30.0)] == [1, 2]
+
+    def test_arrival_of_kth(self):
+        q = RequestQueue([mk_request(i, 10.0 * (i + 1)) for i in range(5)])
+        assert q.arrival_of_kth(1) == 10.0
+        assert q.arrival_of_kth(5) == 50.0
+        assert q.arrival_of_kth(6) == float("inf")
+
+
+class TestDynamicBatcher:
+    def test_batch_size_bounded(self):
+        reqs = [mk_request(i, 0.0) for i in range(100)]
+        q = RequestQueue(reqs)
+        batcher = DynamicBatcher(BatcherConfig(max_batch=16,
+                                               max_wait_us=1000.0))
+        sizes = []
+        while len(q):
+            b = batcher.next_batch(q)
+            sizes.append(b.size)
+        assert all(s <= 16 for s in sizes)
+        assert sum(sizes) == 100
+        assert sizes[0] == 16        # simultaneous arrivals fill instantly
+
+    def test_max_wait_bound_with_idle_device(self):
+        """With the device idle, no request waits in the batcher beyond
+        max_wait before dispatch."""
+        ts = poisson_arrivals(200, 4000.0, seed=2)
+        reqs = [mk_request(i, t) for i, t in enumerate(ts)]
+        q = RequestQueue(reqs)
+        cfg = BatcherConfig(max_batch=32, max_wait_us=500.0)
+        batcher = DynamicBatcher(cfg)
+        while len(q):
+            head = q.peek()
+            b = batcher.next_batch(q, device_free_us=0.0)
+            assert b.dispatch_us <= head.arrival_us + cfg.max_wait_us + 1e-9
+            for r in b.requests:
+                assert r.arrival_us <= b.dispatch_us + 1e-9
+
+    def test_full_batch_dispatches_before_deadline(self):
+        ts = np.arange(64, dtype=np.float64)       # 1 us apart
+        q = RequestQueue([mk_request(i, t) for i, t in enumerate(ts)])
+        batcher = DynamicBatcher(BatcherConfig(max_batch=64,
+                                               max_wait_us=10_000.0))
+        b = batcher.next_batch(q)
+        assert b.size == 64
+        assert b.dispatch_us == pytest.approx(63.0)   # fill time, not deadline
+
+    def test_concat_matches_requests(self):
+        reqs = [mk_request(i, float(i)) for i in range(5)]
+        q = RequestQueue(reqs)
+        b = DynamicBatcher(BatcherConfig(max_batch=8, max_wait_us=0.0)) \
+            .next_batch(q)
+        np.testing.assert_array_equal(
+            b.rows, np.concatenate([r.rows for r in b.requests]))
+        assert b.n_lookups == sum(r.n_lookups for r in b.requests)
+
+    def test_max_batch_one_is_serial(self):
+        reqs = [mk_request(i, 0.0) for i in range(7)]
+        q = RequestQueue(reqs)
+        batcher = DynamicBatcher(BatcherConfig(max_batch=1, max_wait_us=0.0))
+        sizes = []
+        while len(q):
+            sizes.append(batcher.next_batch(q).size)
+        assert sizes == [1] * 7
+
+
+class TestMetrics:
+    def test_percentiles_known_values(self):
+        lat = np.arange(1.0, 101.0)               # 1..100
+        p50, p95, p99 = percentiles(lat)
+        assert p50 == pytest.approx(50.5)
+        assert p95 == pytest.approx(95.05)
+        assert p99 == pytest.approx(99.01)
+
+    def test_percentiles_empty(self):
+        assert percentiles(np.array([])) == (0.0, 0.0, 0.0)
+
+
+class TestScheduler:
+    def test_latency_decomposition_serial_lane(self):
+        """max_batch=1, max_wait=0: latency = queueing + own service time,
+        reproducible from the engine's own serve() numbers."""
+        reqs = mk_stream(16, rate=100.0, seed=4)
+        eng = mk_engine("recflash", seed=4)
+        tr = replay(reqs, eng, BatcherConfig(max_batch=1, max_wait_us=0.0))
+        # recompute expected completions with a fresh engine
+        eng2 = mk_engine("recflash", seed=4)
+        t_free = 0.0
+        for r in sorted(reqs, key=lambda r: r.arrival_us):
+            svc = eng2.serve(r.tables, r.rows).latency_us
+            t_free = max(t_free, r.arrival_us) + svc
+            assert tr.completions_us[r.rid] == pytest.approx(t_free)
+        assert np.all(tr.latencies_us > 0)
+
+    def test_recflash_tail_beats_baselines_under_load(self):
+        reqs = mk_stream(128, rate=2000.0, seed=1)
+        engines = {p: mk_engine(p, seed=1)
+                   for p in ("recssd", "rmssd", "recflash")}
+        traces = ServingScheduler(
+            engines, BatcherConfig(max_batch=32, max_wait_us=500.0)
+        ).run(reqs)
+        p99 = {p: t.report.p99_us for p, t in traces.items()}
+        assert p99["recflash"] < p99["rmssd"] < p99["recssd"]
+
+    def test_every_request_served_once(self):
+        reqs = mk_stream(60, rate=5000.0, seed=2,
+                         arrival=bursty_arrivals)
+        tr = replay(reqs, mk_engine(seed=2),
+                    BatcherConfig(max_batch=8, max_wait_us=200.0))
+        served = [r.rid for b in tr.batches for r in b.requests]
+        assert sorted(served) == list(range(60))
+        assert tr.report.n_requests == 60
+
+    def test_sub_stream_replay_with_non_dense_rids(self):
+        """Replaying a slice of a stream (rids not starting at 0) must
+        account latencies positionally, not by raw rid."""
+        full = mk_stream(40, rate=1000.0, seed=8)
+        sub = full[25:]                       # rids 25..39
+        tr = replay(sub, mk_engine(seed=8), BatcherConfig(8, 300.0))
+        assert tr.latencies_us.size == 15
+        assert np.all(tr.latencies_us > 0)
+        assert tr.latency_of(sub[0].rid, sub) == tr.latencies_us[0]
+        with pytest.raises(KeyError):
+            tr.latency_of(0, sub)             # rid 0 not in the sub-stream
+
+    def test_deterministic_replay(self):
+        reqs = mk_stream(40, rate=1000.0, seed=6)
+        r1 = replay(reqs, mk_engine(seed=6), BatcherConfig(16, 300.0))
+        r2 = replay(reqs, mk_engine(seed=6), BatcherConfig(16, 300.0))
+        np.testing.assert_array_equal(r1.latencies_us, r2.latencies_us)
+        assert r1.report.p99_us == r2.report.p99_us
+
+
+class TestRecordWindowVectorized:
+    def _dict_reference(self, tables, rows, n_tables):
+        """The old per-key dict accumulation, kept as the oracle."""
+        window = [dict() for _ in range(n_tables)]
+        tables_arr = np.asarray(tables).ravel()
+        rows_arr = np.asarray(rows).ravel()
+        for tid in np.unique(tables_arr):
+            sel = tables_arr == tid
+            idx, cnt = np.unique(rows_arr[sel], return_counts=True)
+            w = window[tid]
+            for i, c in zip(idx.tolist(), cnt.tolist()):
+                w[i] = w.get(i, 0) + c
+        return window
+
+    def test_bincount_path_identical_to_dict_loop(self):
+        n_tables, n_rows = 3, 4_000
+        eng = mk_engine("recflash", n_tables=n_tables, n_rows=n_rows)
+        ref = [dict() for _ in range(n_tables)]
+        for seed in range(4):                    # accumulate across calls
+            tb, rows = generate_sls_batch(n_tables, n_rows, 8, 64, k=0.0,
+                                          seed=seed)
+            eng.serve(tb, rows, record_window=True)
+            part = self._dict_reference(tb, rows, n_tables)
+            for t in range(n_tables):
+                for k, v in part[t].items():
+                    ref[t][k] = ref[t].get(k, 0) + v
+        for t in range(n_tables):
+            assert eng.window_dict(t) == ref[t]
+            dense = eng.window_counts(t)
+            assert dense.dtype == np.int64
+            assert int(dense.sum()) == sum(ref[t].values())
+
+    def test_window_clears_after_remap_check(self):
+        from repro.core.triggers import PeriodTrigger
+        eng = mk_engine("recflash")
+        tb, rows = generate_sls_batch(2, 5_000, 8, 32, k=0.0, seed=1)
+        eng.serve(tb, rows, record_window=True)
+        assert any(eng.window_counts(t).any() for t in range(2))
+        eng.maybe_remap(day=0, trigger=PeriodTrigger(1))
+        assert not any(eng.window_counts(t).any() for t in range(2))
