@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench serve-demo
+.PHONY: test bench-smoke bench serve-demo lint
 
 # tier-1 verify
 test:
@@ -18,3 +18,9 @@ bench:
 # the serving stack end-to-end
 serve-demo:
 	$(PY) -m repro.launch.serve --requests 200 --batch 64
+
+# lint floor (ruff.toml): syntax errors, undefined names, pyflakes
+lint:
+	@command -v ruff >/dev/null 2>&1 \
+		|| { echo "ruff not installed (pip install ruff)"; exit 1; }
+	ruff check src tests benchmarks examples

@@ -11,12 +11,10 @@ natural decomposition of its §III-C contributions:
 
 from __future__ import annotations
 
-from benchmarks.common import MODELS, N_INFER, N_ROWS, SAMPLE_INFER, \
+from benchmarks.common import MODELS, N_ROWS, SAMPLE_INFER, _cell_trace, \
     vec_bytes
-from repro.core.engine import RecFlashEngine, TableSpec
-from repro.core.freq import AccessStats
-from repro.data.tracegen import generate_sls_batch
-from repro.flashsim.device import PARTS
+from repro.core.engine import TableSpec
+from repro.serving import Deployment, DeploymentConfig
 
 STAGES = ("rmssd", "recflash_af", "recflash_af_pd", "recflash")
 
@@ -24,19 +22,18 @@ STAGES = ("rmssd", "recflash_af", "recflash_af_pd", "recflash")
 def run(model: str = "rmc1", part_name: str = "TLC", k: float = 0.0,
         seed: int = 0):
     cfg = MODELS[model]
-    part = PARTS[part_name]
-    n_inf = N_INFER[model]
-    tables = [TableSpec(N_ROWS, vec_bytes(cfg)) for _ in range(cfg.n_tables)]
-    tb_s, rows_s = generate_sls_batch(cfg.n_tables, N_ROWS, cfg.lookups,
-                                      SAMPLE_INFER[model], k, seed=seed + 101)
-    stats = [AccessStats.from_trace(rows_s[tb_s == t], N_ROWS)
-             for t in range(cfg.n_tables)]
-    tb, rows = generate_sls_batch(cfg.n_tables, N_ROWS, cfg.lookups, n_inf,
-                                  k, seed=seed)
+    # one deployment for the whole ablation: the four stages are just four
+    # policy lanes over the same offline phase and trace.
+    dep = Deployment(DeploymentConfig(
+        tables=[TableSpec(N_ROWS, vec_bytes(cfg))] * cfg.n_tables,
+        part=part_name, policies=STAGES, lookups=cfg.lookups, k=k,
+        seed=seed + 100, sample_inferences=SAMPLE_INFER[model]))
+    tb, rows = _cell_trace(model, k, seed)
     out = []
     base_lat = None
     for pol in STAGES:
-        eng = RecFlashEngine(tables, part, policy=pol, sample_stats=stats)
+        eng = dep.engines[pol]
+        eng.sim.reset_state()
         res = eng.sim.run(tb, rows, window=cfg.n_tables * cfg.lookups)
         if base_lat is None:
             base_lat = res.latency_us

@@ -11,12 +11,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import MODELS, N_INFER, mlp_us_per_inference, \
-    vec_bytes
-from repro.core.engine import RecFlashEngine, TableSpec
+from benchmarks.common import MODELS, N_INFER, POLICY_NAMES, \
+    mlp_us_per_inference, vec_bytes
+from repro.core.engine import TableSpec
 from repro.core.freq import AccessStats
 from repro.data.criteo import CRITEO_KAGGLE, CRITEO_TB, CriteoDayStream
-from repro.flashsim.device import PARTS
+from repro.serving import Deployment, DeploymentConfig
 
 ROWS_PER_FIELD = 200_000      # scaled-down proxy tables
 
@@ -44,22 +44,28 @@ def run(dataset="criteo_tb", parts=("TLC",), seed: int = 0):
                       drift_frac=spec.drift_frac)
     out = []
     for part_name in parts:
-        part = PARTS[part_name]
         for model, cfg in MODELS.items():
             stream = CriteoDayStream(spec, seed=seed)
             # offline phase: sweep the training days for access stats
             counts = stream.sample_training_stats(20_000)
             stats = [AccessStats(counts[t % spec.n_fields])
                      for t in range(cfg.n_tables)]
-            tables = [TableSpec(ROWS_PER_FIELD, vec_bytes(cfg))
-                      for _ in range(cfg.n_tables)]
+            # one deployment per (dataset, part, model) cell; every policy
+            # lane shares the offline phase AND the evaluation-day trace
+            # (previously each policy drew its own statistically-equivalent
+            # trace from the stateful stream).
+            dep = Deployment(DeploymentConfig(
+                tables=[TableSpec(ROWS_PER_FIELD, vec_bytes(cfg))
+                        for _ in range(cfg.n_tables)],
+                part=part_name, policies=POLICY_NAMES,
+                lookups=cfg.lookups), sample_stats=stats)
             n_inf = max(50, N_INFER[model] // 2)
+            tb, rows = _model_trace(stream, cfg, n_inf,
+                                    day=spec.n_days - 1)
             results = {}
-            for pol in ("recssd", "rmssd", "recflash"):
-                eng = RecFlashEngine(tables, part, policy=pol,
-                                     sample_stats=stats)
-                tb, rows = _model_trace(stream, cfg, n_inf,
-                                        day=spec.n_days - 1)
+            for pol in POLICY_NAMES:
+                eng = dep.engines[pol]
+                eng.sim.reset_state()
                 res = eng.sim.run(tb, rows,
                                   window=cfg.n_tables * cfg.lookups)
                 results[pol] = res.latency_us \

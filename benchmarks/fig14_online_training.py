@@ -11,14 +11,11 @@ the same 100x range).
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import MODELS, mlp_us_per_inference, vec_bytes
-from repro.core.engine import RecFlashEngine, TableSpec
+from repro.core.engine import TableSpec
 from repro.core.freq import AccessStats
-from repro.core.triggers import PeriodTrigger, ThresholdTrigger
 from repro.data.criteo import CriteoSpec, CriteoDayStream
-from repro.flashsim.device import PARTS
+from repro.serving import Deployment, DeploymentConfig, TriggerConfig
 
 N_DAYS = 35
 ROWS_PER_FIELD = 100_000
@@ -31,53 +28,52 @@ SCALE = 4000
 DAILY_SCALED = (50, 500, 5000)
 
 POLICIES = {
-    "top5": ThresholdTrigger(top_frac=0.05, portion=0.001),
-    "top10": ThresholdTrigger(top_frac=0.10, portion=0.001),
-    "top15": ThresholdTrigger(top_frac=0.15, portion=0.001),
-    "daily": PeriodTrigger(period_days=1),
+    "top5": TriggerConfig("threshold", top_frac=0.05, portion=0.001),
+    "top10": TriggerConfig("threshold", top_frac=0.10, portion=0.001),
+    "top15": TriggerConfig("threshold", top_frac=0.15, portion=0.001),
+    "daily": TriggerConfig("period", period_days=1),
 }
 
 
 def simulate(model: str, daily: int, policy_name: str,
              part_name: str = "TLC", seed: int = 0):
     cfg = MODELS[model]
-    part = PARTS[part_name]
     spec = CriteoSpec("online", n_days=N_DAYS,
                       rows_per_field=ROWS_PER_FIELD, drift_frac=0.05)
     trigger = POLICIES[policy_name]
-    hot_frac = getattr(trigger, "top_frac", 0.05)
+    hot_frac = trigger.top_frac if trigger.kind == "threshold" else 0.05
 
     def day_trace(stream, day, n):
         tables, rows, _ = stream.day_batch(day, n)
         sel = tables < cfg.n_tables
         return tables[sel], rows[sel]
 
-    out = {}
-    for pol in ("rmssd", "recflash"):
-        stream = CriteoDayStream(spec, seed=seed)
-        counts = stream.sample_training_stats(20_000)
-        stats = [AccessStats(counts[t % spec.n_fields])
-                 for t in range(cfg.n_tables)]
-        tables = [TableSpec(ROWS_PER_FIELD, vec_bytes(cfg))
-                  for _ in range(cfg.n_tables)]
-        eng = RecFlashEngine(tables, part, policy=pol, sample_stats=stats,
-                             hot_frac=hot_frac)
-        infer_us = 0.0
-        remap_us = 0.0
-        n_triggers = 0
-        for day in range(N_DAYS):
-            tb, rows = day_trace(stream, day, daily)
-            res = eng.serve(tb, rows, record_window=(pol == "recflash"))
-            infer_us += (res.latency_us
-                         + mlp_us_per_inference(cfg) * daily) * SCALE
-            log = eng.maybe_remap(day, trigger)
-            if log is not None:
-                remap_us += log.remap_latency_us
-                n_triggers += 1
-            stream.advance_day()
-        out[pol] = dict(infer_us=infer_us, remap_us=remap_us,
-                        total_us=infer_us + remap_us,
-                        n_triggers=n_triggers)
+    # one deployment drives both lanes through the same drifting stream;
+    # step_day serves every lane and evaluates the trigger (Algorithm 1).
+    stream = CriteoDayStream(spec, seed=seed)
+    counts = stream.sample_training_stats(20_000)
+    stats = [AccessStats(counts[t % spec.n_fields])
+             for t in range(cfg.n_tables)]
+    dep = Deployment(DeploymentConfig(
+        tables=[TableSpec(ROWS_PER_FIELD, vec_bytes(cfg))
+                for _ in range(cfg.n_tables)],
+        part=part_name, policies=("rmssd", "recflash"),
+        lookups=cfg.lookups, hot_frac=hot_frac, trigger=trigger),
+        sample_stats=stats)
+    acc = {pol: dict(infer_us=0.0, remap_us=0.0, n_triggers=0)
+           for pol in dep.cfg.policies}
+    for day in range(N_DAYS):
+        tb, rows = day_trace(stream, day, daily)
+        for pol, day_res in dep.step_day(day, tb, rows).items():
+            a = acc[pol]
+            a["infer_us"] += (day_res.inference.latency_us
+                              + mlp_us_per_inference(cfg) * daily) * SCALE
+            if day_res.remap is not None:
+                a["remap_us"] += day_res.remap.remap_latency_us
+                a["n_triggers"] += 1
+        stream.advance_day()
+    out = {pol: dict(a, total_us=a["infer_us"] + a["remap_us"])
+           for pol, a in acc.items()}
     out["reduction"] = 1.0 - out["recflash"]["total_us"] \
         / out["rmssd"]["total_us"]
     return out

@@ -14,6 +14,10 @@ throughput as a function of the offered load and the dynamic batcher's
   is exactly where the 81%-per-command gap turns into orders of magnitude
   at the tail.
 
+``--channels N`` runs every lane as N concurrent SLS servers (DESIGN.md
+§3.3 multi-channel dispatch); N=1 reproduces the single-server numbers
+exactly.
+
 Emits CSV rows:
 
     fig_serving,arrival,rate_rps,max_batch,max_wait_us,policy,
@@ -22,12 +26,8 @@ Emits CSV rows:
 
 from __future__ import annotations
 
-from repro.flashsim.device import PARTS
-from repro.serving import (BatcherConfig, ServingScheduler,
-                           build_policy_engines, bursty_arrivals,
-                           make_requests, poisson_arrivals)
-
-POLICY_NAMES = ("recssd", "rmssd", "recflash")
+from repro.core.engine import TableSpec
+from repro.serving import BatcherConfig, Deployment, DeploymentConfig
 
 # serving-scale table set: RMC1-like shape scaled to keep the sweep fast
 N_TABLES = 8
@@ -37,33 +37,33 @@ VEC_BYTES = 128
 
 RATES_RPS = (100.0, 500.0, 2000.0)
 BATCHER_POINTS = ((1, 0.0), (16, 500.0), (64, 1000.0), (64, 5000.0))
-ARRIVALS = {"poisson": poisson_arrivals, "bursty": bursty_arrivals}
 
 
-def build_engines(part_name: str = "TLC", k: float = 0.0, seed: int = 0):
-    engines, _ = build_policy_engines(
-        N_TABLES, N_ROWS, LOOKUPS, VEC_BYTES, PARTS[part_name],
-        policies=POLICY_NAMES, k=k, seed=seed + 100)
-    return engines
+def build_deployment(part_name: str = "TLC", k: float = 0.0, seed: int = 0,
+                     n_channels: int = 1) -> Deployment:
+    """One shared deployment per (part, k) cell — the offline phase runs
+    once and every (rate, batcher, policy) point reuses its engines."""
+    return Deployment(DeploymentConfig(
+        tables=[TableSpec(N_ROWS, VEC_BYTES)] * N_TABLES, part=part_name,
+        lookups=LOOKUPS, k=k, seed=seed + 100, n_channels=n_channels))
 
 
 def run(n_requests: int = 2000, rates=RATES_RPS, points=BATCHER_POINTS,
         arrivals=("poisson", "bursty"), part: str = "TLC", k: float = 0.0,
-        seed: int = 0):
+        seed: int = 0, n_channels: int = 1):
     rows = []
     # engines depend only on (part, k, seed); replay() resets device state,
-    # so one pool serves the whole sweep.
-    engines = build_engines(part, k, seed)
+    # so one deployment serves the whole sweep.
+    dep = build_deployment(part, k, seed, n_channels)
     for arrival in arrivals:
         for rate in rates:
-            ts = ARRIVALS[arrival](n_requests, rate, seed=seed + 7)
-            reqs = make_requests(n_requests, N_TABLES, N_ROWS, LOOKUPS, ts,
-                                 k=k, seed=seed)
+            reqs = dep.stream(n_requests, rate, arrival=arrival,
+                              seed=seed, arrival_seed=seed + 7)
             for max_batch, max_wait in points:
-                sched = ServingScheduler(
-                    engines, BatcherConfig(max_batch=max_batch,
-                                           max_wait_us=max_wait))
-                for pol, tr in sched.run(reqs).items():
+                traces = dep.run_stream(
+                    reqs, batcher=BatcherConfig(max_batch=max_batch,
+                                                max_wait_us=max_wait))
+                for pol, tr in traces.items():
                     r = tr.report
                     rows.append(dict(
                         arrival=arrival, rate=rate, max_batch=max_batch,
@@ -93,14 +93,17 @@ def main():
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--channels", type=int, default=1,
+                    help="concurrent SLS servers per policy lane")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI (one rate, two batcher points)")
     args = ap.parse_args()
     if args.smoke:
         rows = run(n_requests=300, rates=(500.0,),
-                   points=((1, 0.0), (64, 1000.0)), arrivals=("poisson",))
+                   points=((1, 0.0), (64, 1000.0)), arrivals=("poisson",),
+                   n_channels=args.channels)
     else:
-        rows = run(n_requests=args.requests)
+        rows = run(n_requests=args.requests, n_channels=args.channels)
     print("figure,arrival,rate_rps,max_batch,max_wait_us,policy,"
           "p50_ms,p95_ms,p99_ms,throughput_rps,mean_batch,util")
     for r in rows:

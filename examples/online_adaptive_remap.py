@@ -1,22 +1,20 @@
 """Online-training simulation: a week of serving with popularity drift.
 
 The paper's Fig. 14 story in miniature — daily traffic drifts (new items
-become hot), the threshold trigger (top-5%, 0.1% portion) watches the
+become hot), the threshold trigger (top-5%, 0.3% portion) watches the
 online window, and when it fires the Algorithm-1 adaptive remap re-sorts
-ONLY the hot region of the hash table and rewrites only those rows.
-Printed per day: serving latency, whether training triggered, and the
-remap cost actually charged.
+ONLY the hot region of the hash table and rewrites only those rows. One
+``Deployment`` owns both policy lanes; ``step_day`` serves the day's
+traffic and evaluates the trigger. Printed per day: serving latency,
+whether training triggered, and the remap cost actually charged.
 
     PYTHONPATH=src python examples/online_adaptive_remap.py
 """
 
-import numpy as np
-
-from repro.core.engine import RecFlashEngine, TableSpec
+from repro.core.engine import TableSpec
 from repro.core.freq import AccessStats
-from repro.core.triggers import ThresholdTrigger
 from repro.data.criteo import CriteoSpec, CriteoDayStream
-from repro.flashsim.device import TLC
+from repro.serving import Deployment, DeploymentConfig, TriggerConfig
 
 N_DAYS = 7
 N_ROWS = 100_000
@@ -30,12 +28,12 @@ stream = CriteoDayStream(spec, seed=0)
 counts = stream.sample_training_stats(20_000)
 n_tables = 8
 stats = [AccessStats(counts[t]) for t in range(n_tables)]
-tables = [TableSpec(N_ROWS, 128) for _ in range(n_tables)]
 
-rf = RecFlashEngine(tables, TLC, policy="recflash", sample_stats=stats,
-                    hot_frac=0.05)
-base = RecFlashEngine(tables, TLC, policy="rmssd", sample_stats=stats)
-trigger = ThresholdTrigger(top_frac=0.05, portion=0.003)
+dep = Deployment(DeploymentConfig(
+    tables=[TableSpec(N_ROWS, 128) for _ in range(n_tables)], part="TLC",
+    policies=("rmssd", "recflash"), hot_frac=0.05,
+    trigger=TriggerConfig("threshold", top_frac=0.05, portion=0.003)),
+    sample_stats=stats)
 
 print(f"{'day':>4} {'rmssd (ms)':>12} {'recflash (ms)':>14} "
       f"{'gain':>7} {'trained?':>9} {'remap cost (ms)':>16}")
@@ -44,9 +42,10 @@ for day in range(N_DAYS):
     tb, rows, _ = stream.day_batch(day, DAILY)
     sel = tb < n_tables
     tb, rows = tb[sel], rows[sel]
-    r_base = base.serve(tb, rows)
-    r_rf = rf.serve(tb, rows, record_window=True)
-    log = rf.maybe_remap(day, trigger)
+    day_res = dep.step_day(day, tb, rows)
+    r_base = day_res["rmssd"].inference
+    r_rf = day_res["recflash"].inference
+    log = day_res["recflash"].remap
     remap_ms = log.remap_latency_us / 1e3 if log else 0.0
     cum_base += r_base.latency_us / 1e3
     cum_rf += r_rf.latency_us / 1e3 + remap_ms

@@ -14,12 +14,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import RecFlashEngine, TableSpec
+from repro.core.engine import TableSpec
 from repro.core.freq import AccessStats
 from repro.data.tracegen import generate_trace
 from repro.embedding.layout import RemapSpec, remap_table
-from repro.flashsim.device import TLC
 from repro.kernels import ops
+from repro.serving import Deployment, DeploymentConfig
 
 N_ROWS, DIM = 100_000, 32
 
@@ -33,14 +33,14 @@ print(f"unique-access rate: {stats.unique_access_rate():.1%} "
       f"(top-1% rows absorb "
       f"{np.sort(stats.counts)[::-1][:N_ROWS // 100].sum() / stats.counts.sum():.0%} of traffic)")
 
-# 3. storage half: simulate the three systems on a TLC part
+# 3. storage half: one Deployment = one engine lane per policy
 print(f"\nTLC NAND, {len(trace):,} lookups:")
-table_spec = [TableSpec(n_rows=N_ROWS, vec_bytes=DIM * 4)]
+dep = Deployment(DeploymentConfig(
+    tables=[TableSpec(n_rows=N_ROWS, vec_bytes=DIM * 4)], part="TLC"),
+    sample_stats=[stats])
 tb = np.zeros_like(trace)
-for policy in ("recssd", "rmssd", "recflash"):
-    eng = RecFlashEngine(table_spec, TLC, policy=policy,
-                         sample_stats=[stats])
-    r = eng.serve(tb, trace)
+for policy in dep.cfg.policies:
+    r = dep.engines[policy].serve(tb, trace)
     print(f"  {policy:10s} latency {r.latency_us / 1e3:9.1f} ms   "
           f"page reads {r.n_page_reads:6d}   "
           f"cache hits {r.n_cache_hits:6d}   "

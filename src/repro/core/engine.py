@@ -84,13 +84,44 @@ class RecFlashEngine:
         wants, since a coalesced batch IS one command, DESIGN.md §3).
         """
         if record_window:
-            tables_arr = np.asarray(tables, dtype=np.int64).ravel()
-            rows_arr = np.asarray(rows, dtype=np.int64).ravel()
-            for tid in np.unique(tables_arr):
-                cnt = np.bincount(rows_arr[tables_arr == tid],
-                                  minlength=self.tables[tid].n_rows)
-                self._window[tid] += cnt
+            self.record_window(tables, rows)
         return self.sim.run(tables, rows, window=window)
+
+    def record_window(self, tables: np.ndarray, rows: np.ndarray) -> None:
+        """Accumulate one command stream into the online window (Fig. 6a).
+
+        Split out of :meth:`serve` so multi-channel lanes can record once on
+        the engine while service time is charged on a per-channel simulator.
+        """
+        tables_arr = np.asarray(tables, dtype=np.int64).ravel()
+        rows_arr = np.asarray(rows, dtype=np.int64).ravel()
+        for tid in np.unique(tables_arr):
+            cnt = np.bincount(rows_arr[tables_arr == tid],
+                              minlength=self.tables[tid].n_rows)
+            self._window[tid] += cnt
+
+    def channel_sims(self, n_channels: int) -> list[SLSSimulator]:
+        """Per-channel device views for a multi-channel lane (DESIGN.md §3.3).
+
+        For ``n_channels=1`` this is the engine's own simulator, so the
+        single-server path is reproduced exactly. For ``n > 1`` each channel
+        is an independent ``SLSSimulator`` over the *same* mappings list —
+        an online remap (``replace_mapping``) is visible to every channel —
+        with private planes/page buffers and a 1/n *slice* of the one
+        controller P$ SRAM (the 128 KB budget is a per-controller quantity;
+        replicating it per channel would conflate channel concurrency with
+        extra cache capacity).
+        """
+        if n_channels < 1:
+            raise ValueError("n_channels must be >= 1")
+        if n_channels == 1:
+            return [self.sim]
+        cache_cfg = self.sim.cache_cfg
+        sliced = dataclasses.replace(
+            cache_cfg, sram_bytes=cache_cfg.sram_bytes // n_channels)
+        return [SLSSimulator(self.part, self.policy, self.sim.mappings,
+                             self.sim.timing, sliced)
+                for _ in range(n_channels)]
 
     def window_counts(self, tid: int) -> np.ndarray:
         """Dense access-count array for table ``tid``'s online window."""

@@ -60,6 +60,12 @@ POLICIES = {
     "recflash": PolicyConfig("recflash", "af_pd", False, True, True, True),
 }
 
+# Default serving comparison set: the three end-to-end systems the paper
+# evaluates (ablation stages excluded), in POLICIES order. Single source for
+# every driver/benchmark policy tuple — do not re-declare it.
+SERVING_POLICIES: tuple = tuple(
+    n for n in POLICIES if not n.startswith("recflash_"))
+
 
 @dataclasses.dataclass
 class SimResult:

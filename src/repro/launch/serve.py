@@ -2,13 +2,14 @@
 
 Requests (one DLRM inference each) arrive on a Poisson or bursty open-loop
 stream, wait in the ``RequestQueue``, are coalesced by the ``DynamicBatcher``
-(max-batch / max-wait) and scheduled onto a pool of ``RecFlashEngine``s —
-one per NAND access policy — so the identical stream is replayed against
-RecSSD / RM-SSD / RecFlash and per-request p50/p95/p99 latency and
-throughput come out per policy (DESIGN.md §3). In parallel, the TPU half
-scores the RecFlash lane's batches through the jitted DLRM forward (tables
-stored frequency-remapped, logical ids translated via the rank_of hash
-table), padded to a single compiled shape.
+(max-batch / max-wait) and replayed through one ``Deployment`` — one policy
+lane per NAND access policy, each lane ``--channels`` concurrent SLS
+servers — so the identical stream is replayed against RecSSD / RM-SSD /
+RecFlash and per-request p50/p95/p99 latency and throughput come out per
+policy (DESIGN.md §3). In parallel, the TPU half scores the RecFlash lane's
+batches through the jitted DLRM forward (tables stored frequency-remapped,
+logical ids translated via the rank_of hash table), padded to a single
+compiled shape.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 200 --batch 64
 """
@@ -25,13 +26,12 @@ import jax.numpy as jnp
 
 import repro.models.dlrm as dlrm
 from repro.embedding.layout import RemapSpec, remap_table
-from repro.flashsim.device import PARTS
-from repro.launch.train import small_dlrm
-from repro.serving import (BatcherConfig, ServingScheduler,
-                           build_policy_engines, bursty_arrivals,
-                           make_requests, poisson_arrivals)
+from repro.flashsim.timeline import SERVING_POLICIES
+from repro.serving import (BatcherConfig, Deployment, DeploymentConfig,
+                           arch_model_config)
 
-POLICY_NAMES = ("recssd", "rmssd", "recflash")
+# deprecated alias — the single source is flashsim.timeline.SERVING_POLICIES
+POLICY_NAMES = SERVING_POLICIES
 
 
 def score_batches(batches, params, cfg, rank_ofs, dense_all, max_batch: int):
@@ -70,6 +70,12 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--requests", type=int, default=50,
                     help="number of inference requests in the stream")
+    ap.add_argument("--arch", default="dlrm_small",
+                    help="registry arch for shapes (dlrm_small, dlrm_rm2, "
+                         "dlrm_mlperf, rmc1/2/3)")
+    ap.add_argument("--rows", type=int, default=None,
+                    help="override rows per table (scales full-size archs "
+                         "down so the jit compute half stays feasible)")
     ap.add_argument("--batch", type=int, default=64,
                     help="dynamic batcher max batch size (requests)")
     ap.add_argument("--max-wait-us", type=float, default=1000.0,
@@ -79,6 +85,8 @@ def main() -> int:
     ap.add_argument("--arrival", choices=("poisson", "bursty"),
                     default="poisson")
     ap.add_argument("--part", choices=("SLC", "TLC", "QLC"), default="TLC")
+    ap.add_argument("--channels", type=int, default=1,
+                    help="concurrent SLS servers per policy lane")
     ap.add_argument("--k", type=float, default=0.0,
                     help="trace locality knob (0 = most local)")
     ap.add_argument("--seed", type=int, default=0)
@@ -86,28 +94,33 @@ def main() -> int:
                     help="storage-side simulation only (no jit forward)")
     args = ap.parse_args()
 
-    cfg = small_dlrm()
-    engines, stats = build_policy_engines(
-        cfg.n_tables, cfg.n_rows[0], cfg.lookups, cfg.embed_dim * 4,
-        PARTS[args.part], policies=POLICY_NAMES, k=args.k, seed=args.seed)
-    specs = [RemapSpec.from_counts(s.counts) for s in stats]
-
-    # --- request stream ---------------------------------------------------
-    arrival_fn = (poisson_arrivals if args.arrival == "poisson"
-                  else bursty_arrivals)
-    arrivals = arrival_fn(args.requests, args.rate, seed=args.seed + 2)
-    requests = make_requests(args.requests, cfg.n_tables, cfg.n_rows[0],
-                             cfg.lookups, arrivals, k=args.k, seed=args.seed)
+    # --- the deployment: one declarative config, one facade ---------------
+    dep_cfg = DeploymentConfig.from_arch(
+        args.arch, part=args.part, n_rows=args.rows, k=args.k,
+        seed=args.seed, n_channels=args.channels,
+        batcher=BatcherConfig(max_batch=args.batch,
+                              max_wait_us=args.max_wait_us))
+    dep = Deployment(dep_cfg)
+    cfg = arch_model_config(dep_cfg)
+    specs = [RemapSpec.from_counts(s.counts) for s in dep.stats]
 
     # --- storage half: replay the stream against every policy -------------
-    sched = ServingScheduler(
-        engines, BatcherConfig(max_batch=args.batch,
-                               max_wait_us=args.max_wait_us))
+    requests = dep.stream(args.requests, args.rate, arrival=args.arrival)
     t0 = time.time()
-    traces = sched.run(requests)
+    traces = dep.run_stream(requests)
     t_sim = time.time() - t0
 
     # --- compute half: score the RecFlash lane's batches on the TPU -------
+    # full-scale registry archs (e.g. dlrm_rm2: 26 x 1M x 64 fp32 tables)
+    # would materialise many GB twice (init + remapped copy); the storage
+    # simulation above never builds them, so auto-skip the jit forward
+    # rather than OOM. Scale down with --rows to keep the compute half.
+    table_gb = sum(t.n_rows * t.vec_bytes for t in dep_cfg.tables) / 2**30
+    if not args.skip_compute and table_gb > 2.0:
+        print(f"[serve] compute half skipped: {args.arch} model tables are "
+              f"~{table_gb:.1f} GiB (x2 with the remapped copy); pass "
+              f"--rows to scale tables down or --skip-compute to silence")
+        args.skip_compute = True
     if not args.skip_compute:
         params = dlrm.init(jax.random.PRNGKey(args.seed), cfg)
         params["tables"] = [remap_table(tbl, s)
@@ -125,9 +138,10 @@ def main() -> int:
     # --- report -----------------------------------------------------------
     print(f"\n{args.arrival} arrivals @ {args.rate:.0f} req/s, "
           f"batcher <= {args.batch} reqs / {args.max_wait_us:.0f} us wait, "
-          f"{args.part} part  (simulated in {t_sim:.2f}s wall):\n")
-    for pol in POLICY_NAMES:
-        print("  " + traces[pol].report.row())
+          f"{args.part} part, {args.channels} channel(s)/lane  "
+          f"(simulated in {t_sim:.2f}s wall):\n")
+    for pol, report in dep.report().items():
+        print("  " + report.row())
     r_flash = traces["recflash"].report
     r_rmssd = traces["rmssd"].report
     if r_rmssd.p99_us > 0:

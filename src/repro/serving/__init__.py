@@ -1,7 +1,11 @@
-"""Serving subsystem: request queue + dynamic batcher + multi-policy
-scheduler over the flashsim device model (DESIGN.md §3)."""
+"""Serving subsystem: declarative `Deployment` facade over request queue +
+dynamic batcher + multi-channel policy lanes (DESIGN.md §3)."""
 
+from repro.flashsim.timeline import SERVING_POLICIES
 from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
+from repro.serving.deployment import (DayResult, Deployment,
+                                      DeploymentConfig, TriggerConfig,
+                                      arch_model_config)
 from repro.serving.metrics import LatencyReport, percentiles, summarize
 from repro.serving.queueing import RequestQueue
 from repro.serving.scheduler import (LaneTrace, ServingScheduler,
@@ -11,8 +15,10 @@ from repro.serving.workload import (Request, bursty_arrivals, make_requests,
 
 __all__ = [
     "Batch", "BatcherConfig", "DynamicBatcher",
+    "DayResult", "Deployment", "DeploymentConfig", "TriggerConfig",
+    "arch_model_config",
     "LatencyReport", "percentiles", "summarize",
-    "RequestQueue",
+    "RequestQueue", "SERVING_POLICIES",
     "LaneTrace", "ServingScheduler", "build_policy_engines", "replay",
     "Request", "bursty_arrivals", "make_requests", "poisson_arrivals",
 ]

@@ -1,0 +1,286 @@
+"""Deployment API v2 — one declarative config, one facade (DESIGN.md §3).
+
+``DeploymentConfig`` captures everything a serving deployment needs —
+tables, flash part, policy set, cache, batcher, trigger, hot fraction,
+sampling seed, channel count — as a serializable dataclass
+(``to_dict``/``from_dict`` round-trip through JSON), with ``from_arch``
+constructors that pull shapes from the architecture registry (dlrm_rm2,
+dlrm_mlperf, rmc1/2/3, dlrm_small).
+
+``Deployment`` is the single construction path for every driver, benchmark
+and example: it runs the offline phase (paper Fig. 8: sampled training
+sweep -> per-table ``AccessStats`` -> frequency-based mapping) once, builds
+one ``RecFlashEngine`` per policy, and exposes
+
+* ``stream(...)``       — materialise an open-loop request stream,
+* ``run_stream(...)``   — replay it through every policy lane
+                          (``n_channels`` concurrent SLS servers per lane),
+* ``step_day(...)``     — one day of the online adaptive-remap loop
+                          (Fig. 14 / Algorithm 1),
+* ``report()``          — per-policy tail-latency reports of the last run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.engine import DayLog, RecFlashEngine, TableSpec
+from repro.core.freq import AccessStats
+from repro.core.triggers import PeriodTrigger, ThresholdTrigger
+from repro.data.tracegen import generate_sls_batch
+from repro.flashsim.device import PARTS, CacheConfig
+from repro.flashsim.timeline import POLICIES, SERVING_POLICIES, SimResult
+from repro.serving.batcher import BatcherConfig
+from repro.serving.metrics import LatencyReport
+from repro.serving.scheduler import LaneTrace, replay
+from repro.serving.workload import (Request, bursty_arrivals, make_requests,
+                                    poisson_arrivals)
+
+ARRIVALS = {"poisson": poisson_arrivals, "bursty": bursty_arrivals}
+
+
+@dataclasses.dataclass(frozen=True)
+class TriggerConfig:
+    """Serializable online-training trigger spec (paper §III-C3)."""
+
+    kind: str = "threshold"         # threshold | period
+    top_frac: float = 0.05
+    portion: float = 0.001
+    period_days: int = 1
+
+    def __post_init__(self):
+        if self.kind not in ("threshold", "period"):
+            raise ValueError(f"unknown trigger kind {self.kind!r}")
+
+    def build(self) -> ThresholdTrigger | PeriodTrigger:
+        if self.kind == "threshold":
+            return ThresholdTrigger(top_frac=self.top_frac,
+                                    portion=self.portion)
+        return PeriodTrigger(period_days=self.period_days)
+
+
+def _arch_shape(name: str):
+    """Resolve an architecture name to its DLRMConfig shape source."""
+    key = name.lower().replace("-", "_")
+    if key in ("rmc1", "rmc2", "rmc3"):
+        from repro.models.dlrm import RMC1, RMC2, RMC3
+        return {"rmc1": RMC1, "rmc2": RMC2, "rmc3": RMC3}[key]
+    if key in ("dlrm_small", "small"):
+        from repro.launch.train import small_dlrm
+        return small_dlrm()
+    if key == "dlrm_rm2":
+        from repro.configs.dlrm_rm2 import CONFIG
+        return CONFIG
+    if key == "dlrm_mlperf":
+        from repro.configs.dlrm_mlperf import CONFIG
+        return CONFIG
+    raise KeyError(
+        f"unknown serving arch {name!r}; have rmc1/rmc2/rmc3, dlrm_small, "
+        f"dlrm_rm2, dlrm_mlperf")
+
+
+def arch_model_config(cfg: "DeploymentConfig"):
+    """DLRMConfig for the compute half, consistent with ``cfg.tables``
+    (uniform row count, deployment lookups) — requires ``cfg.arch``."""
+    if not cfg.arch:
+        raise ValueError("DeploymentConfig has no arch provenance; "
+                         "construct it with DeploymentConfig.from_arch")
+    base = _arch_shape(cfg.arch)
+    return dataclasses.replace(
+        base, n_tables=len(cfg.tables),
+        n_rows=tuple(t.n_rows for t in cfg.tables), lookups=cfg.lookups)
+
+
+@dataclasses.dataclass
+class DeploymentConfig:
+    """Declarative serving-deployment spec; JSON-serializable."""
+
+    tables: list[TableSpec]
+    part: str = "TLC"
+    policies: tuple = SERVING_POLICIES
+    lookups: int = 20               # multi-hot width per table per request
+    hot_frac: float = 0.05          # Algorithm-1 hot-region share
+    k: float = 0.0                  # trace locality knob (paper §IV-A)
+    seed: int = 0                   # sampling seed (offline phase: seed + 1)
+    sample_inferences: int = 512    # offline-phase sampled training sweep
+    # concurrent SLS servers per policy lane. Applies to the request-level
+    # replay (run_stream); step_day serves each day's trace as one bulk
+    # command on the engine simulator and is channel-count independent.
+    n_channels: int = 1
+    cache: CacheConfig | None = None
+    batcher: BatcherConfig = dataclasses.field(default_factory=BatcherConfig)
+    trigger: TriggerConfig | None = None
+    arch: str | None = None         # provenance (set by from_arch)
+
+    def __post_init__(self):
+        self.part = self.part.upper()
+        if self.part not in PARTS:
+            raise ValueError(f"unknown flash part {self.part!r}; "
+                             f"have {sorted(PARTS)}")
+        self.policies = tuple(self.policies)
+        for pol in self.policies:
+            if pol not in POLICIES:
+                raise ValueError(f"unknown policy {pol!r}; "
+                                 f"have {sorted(POLICIES)}")
+        if not self.tables:
+            raise ValueError("need at least one table")
+        if self.n_channels < 1:
+            raise ValueError("n_channels must be >= 1")
+
+    # -- registry constructors ------------------------------------------------
+    @classmethod
+    def from_arch(cls, arch: str, part: str = "TLC",
+                  n_tables: int | None = None, n_rows: int | None = None,
+                  lookups: int | None = None, **overrides
+                  ) -> "DeploymentConfig":
+        """Build a config from a registered architecture's shapes.
+
+        Heterogeneous-vocab archs (dlrm_mlperf) are uniformised to the
+        paper's 1M-rows-per-table serving convention unless ``n_rows``
+        overrides it; ``n_tables``/``lookups`` override the arch shape.
+        """
+        shape = _arch_shape(arch)
+        if n_rows is None:
+            vocabs = set(shape.n_rows)
+            n_rows = (shape.n_rows[0] if len(vocabs) == 1
+                      else min(1_000_000, max(vocabs)))
+        n_tables = shape.n_tables if n_tables is None else n_tables
+        tables = [TableSpec(n_rows, shape.embed_dim * 4)] * n_tables
+        return cls(tables=tables, part=part,
+                   lookups=shape.lookups if lookups is None else lookups,
+                   arch=arch.lower().replace("-", "_"), **overrides)
+
+    # -- serialization --------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dict(
+            tables=[[t.n_rows, t.vec_bytes] for t in self.tables],
+            part=self.part, policies=list(self.policies),
+            lookups=self.lookups, hot_frac=self.hot_frac, k=self.k,
+            seed=self.seed, sample_inferences=self.sample_inferences,
+            n_channels=self.n_channels,
+            cache=dataclasses.asdict(self.cache) if self.cache else None,
+            batcher=dataclasses.asdict(self.batcher),
+            trigger=dataclasses.asdict(self.trigger) if self.trigger
+            else None,
+            arch=self.arch)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DeploymentConfig":
+        d = dict(d)
+        d["tables"] = [TableSpec(int(n), int(v)) for n, v in d["tables"]]
+        d["policies"] = tuple(d.get("policies", SERVING_POLICIES))
+        if d.get("cache") is not None:
+            d["cache"] = CacheConfig(**d["cache"])
+        d["batcher"] = BatcherConfig(**d.get("batcher", {}))
+        if d.get("trigger") is not None:
+            d["trigger"] = TriggerConfig(**d["trigger"])
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class DayResult:
+    """One policy lane's outcome for one day of the online loop."""
+
+    policy: str
+    inference: SimResult
+    remap: DayLog | None = None
+
+
+class Deployment:
+    """One serving deployment: offline phase + per-policy engine lanes."""
+
+    def __init__(self, cfg: DeploymentConfig,
+                 sample_stats: list[AccessStats] | None = None):
+        self.cfg = cfg
+        self.part = PARTS[cfg.part]
+        n_tables = len(cfg.tables)
+        if sample_stats is None:
+            n_rows = cfg.tables[0].n_rows
+            if any(t.n_rows != n_rows for t in cfg.tables):
+                raise ValueError(
+                    "sampled offline phase needs uniform table row counts; "
+                    "pass explicit sample_stats for heterogeneous tables")
+            # offline phase (Fig. 8): sampled training sweep -> access stats
+            tb, rows = generate_sls_batch(n_tables, n_rows, cfg.lookups,
+                                          cfg.sample_inferences, k=cfg.k,
+                                          seed=cfg.seed + 1)
+            sample_stats = [AccessStats.from_trace(rows[tb == t], n_rows)
+                            for t in range(n_tables)]
+        self.stats = sample_stats
+        self.trigger = cfg.trigger.build() if cfg.trigger else None
+        self.engines: dict[str, RecFlashEngine] = {
+            pol: RecFlashEngine(list(cfg.tables), self.part, policy=pol,
+                                sample_stats=self.stats,
+                                hot_frac=cfg.hot_frac, cache_cfg=cfg.cache)
+            for pol in cfg.policies}
+        self.last_traces: dict[str, LaneTrace] | None = None
+
+    def engine(self, policy: str) -> RecFlashEngine:
+        return self.engines[policy]
+
+    # -- request streams ------------------------------------------------------
+    def stream(self, n_requests: int, rate_rps: float,
+               arrival: str = "poisson", seed: int | None = None,
+               arrival_seed: int | None = None,
+               **arrival_kw) -> list[Request]:
+        """Materialise an open-loop request stream matching the deployment's
+        table shapes. ``seed`` defaults to the config seed; the arrival
+        process draws from ``arrival_seed`` (default ``seed + 2``)."""
+        n_rows = self.cfg.tables[0].n_rows
+        if any(t.n_rows != n_rows for t in self.cfg.tables):
+            raise ValueError(
+                "stream() draws from a uniform per-table vocab; build "
+                "requests for heterogeneous tables with make_requests and "
+                "a per-table generator instead")
+        seed = self.cfg.seed if seed is None else seed
+        arrival_seed = seed + 2 if arrival_seed is None else arrival_seed
+        ts = ARRIVALS[arrival](n_requests, rate_rps, seed=arrival_seed,
+                               **arrival_kw)
+        return make_requests(n_requests, len(self.cfg.tables), n_rows,
+                             self.cfg.lookups, ts, k=self.cfg.k, seed=seed)
+
+    # -- serving --------------------------------------------------------------
+    def run_stream(self, requests: list[Request],
+                   record_window: bool = False,
+                   batcher: BatcherConfig | None = None,
+                   n_channels: int | None = None) -> dict[str, LaneTrace]:
+        """Replay the stream through every policy lane; {policy: LaneTrace}.
+
+        ``batcher``/``n_channels`` override the config for one run (the
+        benchmarks sweep batcher points against one shared deployment)."""
+        batcher = self.cfg.batcher if batcher is None else batcher
+        nc = self.cfg.n_channels if n_channels is None else n_channels
+        traces = {pol: replay(requests, eng, batcher,
+                              record_window=record_window, policy_name=pol,
+                              n_channels=nc)
+                  for pol, eng in self.engines.items()}
+        self.last_traces = traces
+        return traces
+
+    def report(self) -> dict[str, LatencyReport]:
+        """Per-policy LatencyReport of the most recent ``run_stream``."""
+        if self.last_traces is None:
+            raise RuntimeError("no stream replayed yet; call run_stream()")
+        return {pol: tr.report for pol, tr in self.last_traces.items()}
+
+    # -- online adaptive remap (Fig. 14 / Algorithm 1) ------------------------
+    def step_day(self, day: int, tables, rows) -> dict[str, DayResult]:
+        """Serve one day of traffic on every lane, then evaluate the
+        deployment trigger and charge the adaptive-remap cost where it
+        fires. Baseline lanes serve without window recording and never
+        remap (paper §III-C4: both systems redeploy whole tables as part of
+        the normal pipeline, so neither is charged).
+
+        The day's trace is served as one bulk command on the engine's own
+        simulator — ``n_channels`` deliberately does not apply here (it is
+        a property of the request-level replay; use ``run_stream`` to study
+        channel concurrency under arrivals)."""
+        out = {}
+        for pol, eng in self.engines.items():
+            record = (self.trigger is not None
+                      and eng.policy.mapping_mode != "baseline")
+            res = eng.serve(tables, rows, record_window=record)
+            log = (eng.maybe_remap(day, self.trigger)
+                   if self.trigger is not None else None)
+            out[pol] = DayResult(policy=pol, inference=res, remap=log)
+        return out

@@ -1,33 +1,38 @@
-"""Multi-policy serving scheduler (DESIGN.md §3.3).
+"""Policy-lane replay over the flashsim device model (DESIGN.md §3.3).
 
-Replays one request stream through a pool of ``RecFlashEngine``s — one per
-access policy — under identical arrivals and batcher settings, so the only
-variable is the device policy. Each lane is a single-server queueing system
-(the SSD services one coalesced SLS command at a time, matching the
-flashsim device model's single-command scope):
+``replay`` runs one request stream through one policy lane. A lane is a
+pool of ``n_channels`` concurrent SLS servers — the SSD's NAND channels —
+scheduled event-driven over the simulated clock with earliest-free-channel
+assignment:
 
-    t_free = 0
+    free[c] = 0 for every channel c
     while queue:
-        batch    = batcher.next_batch(queue, t_free)      # dynamic batching
-        start    = max(batch.dispatch_us, t_free)
-        svc      = engine.serve(batch).latency_us         # flashsim
-        t_free   = start + svc
-        latency[r] = t_free - r.arrival_us  for r in batch
+        c        = argmin(free)                           # earliest free
+        batch    = batcher.next_batch(queue, free[c])     # dynamic batching
+        start    = max(batch.dispatch_us, free[c])
+        svc      = sims[c].run(batch).latency_us          # flashsim
+        free[c]  = start + svc
+        latency[r] = free[c] - r.arrival_us  for r in batch
 
-Per-request latency therefore folds in queueing delay (backlog), batching
-delay (max-wait) and device service time — the serving-level quantity the
-paper's latency claim is ultimately about.
+With ``n_channels=1`` this is exactly the single-server queueing system of
+the original design (one coalesced SLS command in service at a time) and
+reproduces its numbers bit-for-bit. Per-request latency folds in queueing
+delay (backlog), batching delay (max-wait) and device service time — the
+serving-level quantity the paper's latency claim is ultimately about.
+
+The preferred entry point is ``repro.serving.Deployment``; the module-level
+``build_policy_engines``/``ServingScheduler`` names are deprecated shims.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
-from repro.core.engine import RecFlashEngine, TableSpec
-from repro.core.freq import AccessStats
-from repro.data.tracegen import generate_sls_batch
+from repro.core.engine import RecFlashEngine
+from repro.flashsim.timeline import SERVING_POLICIES
 from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
 from repro.serving.metrics import LatencyReport, summarize
 from repro.serving.queueing import RequestQueue
@@ -36,20 +41,25 @@ from repro.serving.workload import Request
 
 def build_policy_engines(n_tables: int, n_rows: int, lookups: int,
                          vec_bytes: int, part,
-                         policies=("recssd", "rmssd", "recflash"),
+                         policies=SERVING_POLICIES,
                          k: float = 0.0, seed: int = 0,
                          sample_inferences: int = 512):
-    """Offline phase (paper Fig. 8) shared by the drivers and benchmarks:
-    sampled training sweep -> per-table AccessStats -> one engine per
-    policy. Returns ``(engines, stats)``; ``part`` is a FlashPart."""
-    tb, rows = generate_sls_batch(n_tables, n_rows, lookups,
-                                  sample_inferences, k=k, seed=seed + 1)
-    stats = [AccessStats.from_trace(rows[tb == t], n_rows)
-             for t in range(n_tables)]
-    engines = {pol: RecFlashEngine(
-        [TableSpec(n_rows, vec_bytes)] * n_tables, part,
-        policy=pol, sample_stats=stats) for pol in policies}
-    return engines, stats
+    """Deprecated: use ``Deployment(DeploymentConfig(...))`` instead.
+
+    Kept as a thin shim over the Deployment offline phase so old callers
+    get identical engines. Returns ``(engines, stats)``."""
+    warnings.warn(
+        "build_policy_engines is deprecated; construct a "
+        "repro.serving.Deployment from a DeploymentConfig instead",
+        DeprecationWarning, stacklevel=2)
+    from repro.core.engine import TableSpec
+    from repro.serving.deployment import Deployment, DeploymentConfig
+    dep = Deployment(DeploymentConfig(
+        tables=[TableSpec(n_rows, vec_bytes)] * n_tables,
+        part=getattr(part, "name", part), policies=tuple(policies),
+        lookups=lookups, k=k, seed=seed,
+        sample_inferences=sample_inferences))
+    return dep.engines, dep.stats
 
 
 @dataclasses.dataclass
@@ -60,20 +70,32 @@ class LaneTrace:
     batches: list[Batch]
     latencies_us: np.ndarray       # ordered as the input request list
     completions_us: np.ndarray
+    # rid -> position in the input request list, built once during replay
+    index_of: dict[int, int] = dataclasses.field(default_factory=dict)
+    n_channels: int = 1
+    batch_channels: np.ndarray | None = None   # channel id per batch
+    batch_starts_us: np.ndarray | None = None  # service start per batch
 
-    def latency_of(self, rid: int, requests: list[Request]) -> float:
-        """Latency of the request with ``rid`` in the replayed stream."""
-        for i, r in enumerate(requests):
-            if r.rid == rid:
-                return float(self.latencies_us[i])
-        raise KeyError(rid)
+    def latency_of(self, rid: int, requests: list[Request] | None = None
+                   ) -> float:
+        """Latency of the request with ``rid`` — O(1) via the stored
+        rid->index map (``requests`` is accepted for backward compatibility
+        and ignored)."""
+        return float(self.latencies_us[self.index_of[rid]])
 
 
 def replay(requests: list[Request], engine: RecFlashEngine,
            batcher_cfg: BatcherConfig | None = None,
            record_window: bool = False,
-           policy_name: str | None = None) -> LaneTrace:
-    """Run one policy lane over the whole request stream."""
+           policy_name: str | None = None,
+           n_channels: int = 1) -> LaneTrace:
+    """Run one policy lane over the whole request stream.
+
+    ``n_channels`` is the lane's concurrent-server count (see module
+    docstring); each channel gets its own device state via
+    ``engine.channel_sims`` (n=1: the engine's own simulator; n>1: private
+    planes/buffers and a 1/n slice of the controller P$ SRAM each).
+    """
     batcher = DynamicBatcher(batcher_cfg)
     queue = RequestQueue(requests)
     name = policy_name or engine.policy.name
@@ -86,45 +108,67 @@ def replay(requests: list[Request], engine: RecFlashEngine,
     latencies = np.zeros(n, dtype=np.float64)
     completions = np.zeros(n, dtype=np.float64)
     batches: list[Batch] = []
-    t_free = 0.0
+    batch_channels: list[int] = []
+    batch_starts: list[float] = []
+    sims = engine.channel_sims(n_channels)
+    for sim in sims:
+        sim.reset_state()
+    free = np.zeros(n_channels, dtype=np.float64)
     busy = 0.0
     energy = 0.0
-    engine.sim.reset_state()
     while len(queue):
-        batch = batcher.next_batch(queue, device_free_us=t_free)
-        start = max(batch.dispatch_us, t_free)
-        res = engine.serve(batch.tables, batch.rows,
-                           record_window=record_window)
+        c = int(np.argmin(free))               # earliest-free channel
+        batch = batcher.next_batch(queue, device_free_us=float(free[c]))
+        start = max(batch.dispatch_us, float(free[c]))
+        if record_window:
+            engine.record_window(batch.tables, batch.rows)
+        res = sims[c].run(batch.tables, batch.rows)
         svc = res.latency_us
-        t_free = start + svc
+        free[c] = start + svc
         busy += svc
         energy += res.energy_uj
+        done = float(free[c])
         for r in batch.requests:
             i = index_of[r.rid]
-            latencies[i] = t_free - r.arrival_us
-            completions[i] = t_free
+            latencies[i] = done - r.arrival_us
+            completions[i] = done
         batches.append(batch)
+        batch_channels.append(c)
+        batch_starts.append(start)
     first_arrival = min(r.arrival_us for r in requests) if requests else 0.0
     makespan = (float(completions.max()) - first_arrival) if n else 0.0
+    # device_busy_frac = mean per-channel utilisation (== total busy /
+    # makespan for a single-channel lane, unchanged from the old report).
     report = summarize(name, latencies, makespan,
-                       [b.size for b in batches], busy, energy)
+                       [b.size for b in batches], busy / n_channels, energy)
     return LaneTrace(report=report, batches=batches, latencies_us=latencies,
-                     completions_us=completions)
+                     completions_us=completions, index_of=index_of,
+                     n_channels=n_channels,
+                     batch_channels=np.asarray(batch_channels, dtype=np.int64),
+                     batch_starts_us=np.asarray(batch_starts,
+                                                dtype=np.float64))
 
 
 class ServingScheduler:
-    """Drives a pool of engines (one per policy) over one request stream."""
+    """Deprecated: use ``repro.serving.Deployment`` (one facade that also
+    owns the offline phase, triggers, and multi-channel lanes)."""
 
     def __init__(self, engines: dict[str, RecFlashEngine],
-                 batcher_cfg: BatcherConfig | None = None):
+                 batcher_cfg: BatcherConfig | None = None,
+                 n_channels: int = 1):
+        warnings.warn(
+            "ServingScheduler is deprecated; use repro.serving.Deployment",
+            DeprecationWarning, stacklevel=2)
         if not engines:
             raise ValueError("need at least one policy engine")
         self.engines = engines
         self.batcher_cfg = batcher_cfg or BatcherConfig()
+        self.n_channels = n_channels
 
     def run(self, requests: list[Request],
             record_window: bool = False) -> dict[str, LaneTrace]:
         """Replay the stream through every policy lane; {policy: trace}."""
         return {pol: replay(requests, eng, self.batcher_cfg,
-                            record_window=record_window, policy_name=pol)
+                            record_window=record_window, policy_name=pol,
+                            n_channels=self.n_channels)
                 for pol, eng in self.engines.items()}

