@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench serve-demo lint
+.PHONY: test bench-smoke bench bench-perf serve-demo lint
 
 # tier-1 verify
 test:
@@ -10,6 +10,14 @@ test:
 # fast serving-benchmark smoke pass (CI-sized)
 bench-smoke:
 	$(PY) benchmarks/fig_serving_tail.py --smoke
+
+# simulator fast-path microbenchmark (DESIGN.md §2.3): smoke sweep into
+# BENCH_sim_smoke.json (the committed root BENCH_sim.json is the tracked
+# full run — regenerate it with `python benchmarks/perf_sim.py`), fails on
+# a >2x speedup regression vs the committed baseline
+bench-perf:
+	$(PY) benchmarks/perf_sim.py --smoke --out BENCH_sim_smoke.json \
+		--check benchmarks/BENCH_sim_baseline.json
 
 # full figure regeneration + claim table
 bench:

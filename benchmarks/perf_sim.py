@@ -1,0 +1,138 @@
+"""Tracked microbenchmark of the SLS-simulator fast paths (DESIGN.md §2.3).
+
+Sweeps policy x flash part x stream size and times the vectorised
+``SLSSimulator.run`` against the ``force_exact=True`` per-access loop on
+the identical zipf access stream — the quantity the serving stack actually
+pays per batch. Emits ``BENCH_sim.json`` so the perf trajectory is tracked
+data, not anecdotes.
+
+Regression gate (`make bench-perf`, CI perf-smoke): ``--check BASELINE``
+compares per-lane *speedups* (vectorised vs exact on the same machine, so
+host speed cancels) against the committed baseline and exits non-zero when
+any lane regressed by more than 2x.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core.freq import AccessStats
+from repro.core.remap import build_mapping
+from repro.flashsim.device import PARTS, TIMING, CacheConfig
+from repro.flashsim.timeline import POLICIES, SLSSimulator
+
+N_ROWS = 100_000
+VEC_BYTES = 128
+ZIPF_A = 1.4
+
+FULL_SIZES = (10_000, 100_000)
+FULL_PARTS = ("SLC", "TLC")
+SMOKE_SIZES = (20_000,)
+SMOKE_PARTS = ("TLC",)
+
+
+def make_sim(policy: str, part_name: str, stats: AccessStats) -> SLSSimulator:
+    part = PARTS[part_name]
+    pol = POLICIES[policy]
+    m = build_mapping(N_ROWS, VEC_BYTES, part.page_bytes, part.n_planes,
+                      mode=pol.mapping_mode,
+                      stats=None if pol.mapping_mode == "baseline" else stats)
+    return SLSSimulator(part, pol, [m], TIMING, CacheConfig())
+
+
+def time_run(sim: SLSSimulator, tables: np.ndarray, rows: np.ndarray,
+             force_exact: bool, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        sim.reset_state()
+        t0 = time.perf_counter()
+        sim.run(tables, rows, force_exact=force_exact)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(sizes, parts, policies=tuple(POLICIES), seed: int = 0,
+        repeats: int = 3) -> list[dict]:
+    results = []
+    rng = np.random.default_rng(seed)
+    for n in sizes:
+        rows = rng.zipf(ZIPF_A, size=n) % N_ROWS
+        tables = np.zeros(n, dtype=np.int64)
+        stats = AccessStats.from_trace(rows, N_ROWS)
+        exact_reps = 1 if n >= 50_000 else 2
+        for part in parts:
+            for pol in policies:
+                sim = make_sim(pol, part, stats)
+                # equivalence guard: the two paths must agree before the
+                # timing numbers mean anything.
+                r_vec = sim.run(tables, rows)
+                sim.reset_state()
+                r_exact = sim.run(tables, rows, force_exact=True)
+                assert (r_vec.n_page_reads, r_vec.n_cache_hits,
+                        r_vec.bytes_out) == (r_exact.n_page_reads,
+                                             r_exact.n_cache_hits,
+                                             r_exact.bytes_out), (pol, part)
+                t_vec = time_run(sim, tables, rows, False, repeats)
+                t_exact = time_run(sim, tables, rows, True, exact_reps)
+                results.append(dict(
+                    policy=pol, part=part, n=int(n),
+                    t_vec_s=round(t_vec, 6), t_exact_s=round(t_exact, 6),
+                    speedup=round(t_exact / max(t_vec, 1e-9), 2)))
+                print(f"perf_sim,{pol},{part},{n},{t_vec:.6f},"
+                      f"{t_exact:.6f},{results[-1]['speedup']:.1f}x")
+    return results
+
+
+def check(results: list[dict], baseline_path: str) -> int:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_idx = {(r["policy"], r["part"], r["n"]): r["speedup"]
+                for r in base["results"]}
+    cur_idx = {(r["policy"], r["part"], r["n"]): r["speedup"]
+               for r in results}
+    shared = sorted(set(base_idx) & set(cur_idx))
+    if not shared:
+        print("perf-check: no lanes shared with baseline", file=sys.stderr)
+        return 1
+    bad = [(k, cur_idx[k], base_idx[k]) for k in shared
+           if cur_idx[k] < base_idx[k] / 2.0]
+    for k, cur, ref in bad:
+        print(f"perf-check: REGRESSION {k}: speedup {cur:.1f}x < "
+              f"half of baseline {ref:.1f}x", file=sys.stderr)
+    print(f"perf-check: {len(shared) - len(bad)}/{len(shared)} lanes within "
+          f"2x of baseline ({baseline_path})")
+    return 1 if bad else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (one part, one stream size)")
+    ap.add_argument("--out", default="BENCH_sim.json")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="compare speedups against a committed baseline; "
+                         "exit 1 on a >2x regression")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    sizes = SMOKE_SIZES if args.smoke else FULL_SIZES
+    parts = SMOKE_PARTS if args.smoke else FULL_PARTS
+    print("figure,policy,part,n_accesses,t_vectorized_s,t_exact_s,speedup")
+    results = run(sizes, parts, seed=args.seed)
+    payload = dict(
+        meta=dict(n_rows=N_ROWS, vec_bytes=VEC_BYTES, zipf_a=ZIPF_A,
+                  smoke=bool(args.smoke), seed=args.seed),
+        results=results)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(results)} lanes)")
+    return check(results, args.check) if args.check else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

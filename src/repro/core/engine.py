@@ -63,11 +63,18 @@ class RecFlashEngine:
                 self.hash_tables.append(AdaptiveHashTable(
                     keys=order, freqs=s.counts[order],
                     addrs=np.arange(t.n_rows), hot_frac=hot_frac))
-        # online window accumulation (Fig. 6a) — dense per-table count
-        # arrays; np.bincount keeps recording O(1) python work per serve()
-        # call so the serving stack can stream tens of thousands of requests.
+        # online window accumulation (Fig. 6a) — one flat count array over
+        # the concatenated per-table row spaces, exposed as per-table views.
+        # A single fused bincount over (row_offset[table] + row) keys
+        # records a whole command stream, so per-serve() python work stays
+        # O(1) however many tables the command touches.
+        self._row_offset = np.zeros(len(tables) + 1, dtype=np.int64)
+        np.cumsum([t.n_rows for t in tables], out=self._row_offset[1:])
+        self._window_flat = np.zeros(int(self._row_offset[-1]),
+                                     dtype=np.int64)
         self._window: list[np.ndarray] = [
-            np.zeros(t.n_rows, dtype=np.int64) for t in tables]
+            self._window_flat[self._row_offset[t]:self._row_offset[t + 1]]
+            for t in range(len(tables))]
 
     def _build(self, spec: TableSpec, stats: AccessStats) -> Mapping:
         return build_mapping(spec.n_rows, spec.vec_bytes,
@@ -76,29 +83,41 @@ class RecFlashEngine:
 
     # -- serving -------------------------------------------------------------
     def serve(self, tables: np.ndarray, rows: np.ndarray,
-              record_window: bool = False, window: int = 0) -> SimResult:
+              record_window: bool = False, window: int = 0,
+              force_exact: bool = False) -> SimResult:
         """Serve one SLS command stream; optionally record the online window.
 
         ``window`` is forwarded to the simulator as the SLS command size
         (``0`` = the whole call is one command — what the dynamic batcher
         wants, since a coalesced batch IS one command, DESIGN.md §3).
+        ``force_exact`` forwards to ``sim.run`` (DESIGN.md §2.3: replay the
+        per-access loop instead of the vectorised fast path).
         """
         if record_window:
             self.record_window(tables, rows)
-        return self.sim.run(tables, rows, window=window)
+        return self.sim.run(tables, rows, window=window,
+                            force_exact=force_exact)
 
     def record_window(self, tables: np.ndarray, rows: np.ndarray) -> None:
         """Accumulate one command stream into the online window (Fig. 6a).
 
         Split out of :meth:`serve` so multi-channel lanes can record once on
         the engine while service time is charged on a per-channel simulator.
+        One fused bincount over per-table row-offset keys — no per-table
+        python loop (equivalence-tested against the old per-unique-table
+        ``np.unique`` + masked-bincount accumulation).
         """
         tables_arr = np.asarray(tables, dtype=np.int64).ravel()
         rows_arr = np.asarray(rows, dtype=np.int64).ravel()
-        for tid in np.unique(tables_arr):
-            cnt = np.bincount(rows_arr[tables_arr == tid],
-                              minlength=self.tables[tid].n_rows)
-            self._window[tid] += cnt
+        keys = self._row_offset[tables_arr] + rows_arr
+        # an out-of-range row would silently land in the next table's
+        # region of the flat window — reject it like the per-table
+        # bincount used to
+        if rows_arr.size and (int(rows_arr.min()) < 0 or np.any(
+                keys >= self._row_offset[tables_arr + 1])):
+            raise ValueError("row id out of range for its table")
+        self._window_flat += np.bincount(keys,
+                                         minlength=self._window_flat.size)
 
     def channel_sims(self, n_channels: int) -> list[SLSSimulator]:
         """Per-channel device views for a multi-channel lane (DESIGN.md §3.3).
@@ -196,5 +215,4 @@ class RecFlashEngine:
                       remap_energy_uj=total_energy, update_report=merged)
 
     def _clear_window(self) -> None:
-        for w in self._window:
-            w[:] = 0
+        self._window_flat[:] = 0

@@ -112,12 +112,16 @@ class SLSSimulator:
         # for sequential drain, how many bytes have been streamed already.
         self._buffer = np.full(part.n_planes, -1, dtype=np.int64)
         self._drain_pos = np.zeros(part.n_planes, dtype=np.int64)
+        # cached int64 window-id base for the coalescing lexsort (grown on
+        # demand) — avoids a per-call arange allocation on the hot path.
+        self._arange = np.arange(4096, dtype=np.int64)
         # page-id namespace must be unique across tables
         self._page_offset = np.zeros(len(mappings), dtype=np.int64)
         off = 0
         for t, m in enumerate(mappings):
             self._page_offset[t] = off
             off += m.n_pages + 1
+        self._n_page_ids = off   # size of the global page-id namespace
 
     def reset_state(self) -> None:
         self._buffer[:] = -1
@@ -138,8 +142,12 @@ class SLSSimulator:
         coalescing policies sort accesses by (plane, page) within each
         window. ``window=0`` treats the whole call as one command.
 
-        No-cache policies take a vectorised fast path (identical results —
-        property-tested against the exact loop); ``force_exact`` disables it.
+        Every policy takes a vectorised fast path (DESIGN.md §2.3) —
+        no-cache policies via the page-buffer segment pass, the P$ policy
+        via the reuse-distance LRU evaluator feeding its miss sub-stream
+        through the same pass. Identical results to the per-access loop
+        (property-tested, including carried device state);
+        ``force_exact`` keeps the exact loop for verification.
         """
         tables = np.asarray(tables, dtype=np.int64).ravel()
         rows = np.asarray(rows, dtype=np.int64).ravel()
@@ -169,13 +177,32 @@ class SLSSimulator:
             vec_bytes[sel] = m.vec_bytes
 
         if pol.coalesce:
-            wid = (np.arange(n) // window) if window else np.zeros(n)
-            order = np.lexsort((slots, pages, planes, wid))
+            wid = None
+            if window:
+                if self._arange.size < n:
+                    self._arange = np.arange(max(n, 2 * self._arange.size),
+                                             dtype=np.int64)
+                wid = self._arange[:n] // window
+            if not force_exact and not pol.sequential_drain:
+                # collapsed fast path: coalescing groups equal
+                # (window, plane, page) accesses anyway, so group first
+                # (counting sort — no O(n log n) per-access sort) and run
+                # every downstream pass on the collapsed stream.
+                return self._run_coalesced(planes, pages, vec_bytes, wid, n)
+            if window:
+                order = np.lexsort((slots, pages, planes, wid))
+            else:
+                # window=0: one command, the wid key is constant — drop it
+                # (lexsort is stable, so the order is unchanged).
+                order = np.lexsort((slots, pages, planes))
             planes, pages, slots, vec_bytes = (
                 planes[order], pages[order], slots[order], vec_bytes[order])
 
-        if self.cache is None and not force_exact:
-            return self._run_vectorized(planes, pages, slots, vec_bytes)
+        if not force_exact:
+            if self.cache is None:
+                return self._run_vectorized(planes, pages, slots, vec_bytes)
+            return self._run_vectorized_cached(planes, pages, slots,
+                                               vec_bytes)
 
         res = SimResult(n_lookups=int(n))
         plane_tr = np.zeros(part.n_planes, dtype=np.float64)
@@ -293,6 +320,140 @@ class SLSSimulator:
         res.latency_us += n_reads * t.t_ca + tr_total
         res.read_energy_uj = n_reads * part.e_page_read
         res.energy_uj = res.read_energy_uj + bytes_out * part.e_io_per_byte
+        return res
+
+    def _run_coalesced(self, planes, pages, vec_bytes, wid, n) -> SimResult:
+        """Fast path for coalescing, non-drain policies (DESIGN.md §2.3).
+
+        Coalescing sorts each window's accesses by (plane, page), so equal
+        pages form contiguous runs; every downstream quantity is a run
+        aggregate. Group accesses into distinct (window, plane, page) keys
+        with a counting sort (O(n + K); comparison-sort fallback when the
+        key space K outgrows the stream), then:
+
+        * P$ lane: the collapsed page sequence IS the run-collapsed cache
+          stream — the reuse-distance evaluator scores run heads, run tails
+          are distance-0 hits, and only head *misses* reach the flash;
+        * page-buffer pass on the collapsed stream with multiplicities
+          (identical integer totals, hence identical floats, to the
+          per-access pass on the sorted stream).
+        """
+        res = SimResult(n_lookups=int(n))
+        if n == 0:
+            return res
+        npl = np.int64(self.part.n_planes)
+        pid = np.int64(self._n_page_ids)
+        key = planes * pid + pages
+        if wid is not None:
+            key += wid * (npl * pid)
+            k_space = (int(wid[-1]) + 1) * int(npl * pid)
+        else:
+            k_space = int(npl * pid)
+        if k_space <= max(4 * n, 1 << 16):
+            counts = np.bincount(key, minlength=k_space)
+            present = np.flatnonzero(counts)
+            cnt = counts[present]
+            vbg = np.zeros(k_space, dtype=np.int64)
+            vbg[key] = vec_bytes          # constant within a page's table
+            vbg = vbg[present]
+            gplane = (present // pid) % npl
+            gpage = present % pid
+        else:
+            order = np.argsort(key, kind="stable")
+            ks = key[order]
+            head = np.empty(n, dtype=bool)
+            head[0] = True
+            np.not_equal(ks[1:], ks[:-1], out=head[1:])
+            starts = np.flatnonzero(head)
+            cnt = np.diff(np.append(starts, n))
+            sel = order[head]
+            gplane, gpage, vbg = planes[sel], pages[sel], vec_bytes[sel]
+        if self.cache is None:
+            self._plane_pass(res, gplane, gpage, vbg, cnt)
+            return res
+        hits = self.cache.bulk_access(gpage)
+        # run tails (coalesced repeats of a head) are distance-0 hits the
+        # collapsed stream never shows the PageLRU — patch its counters so
+        # they match the per-access loop exactly.
+        self.cache.hits += int(n) - int(cnt.size)
+        miss = ~hits
+        self._plane_pass(res, gplane[miss], gpage[miss], vbg[miss],
+                         np.ones(int(miss.sum()), dtype=np.int64))
+        n_hits = int(n) - int(miss.sum())
+        res.n_cache_hits = n_hits
+        ccfg = self.cache_cfg
+        res.latency_us += n_hits * ccfg.t_sram_vec
+        e_sram = float(int((cnt * vbg).sum()) - int(vbg[miss].sum())) \
+            * ccfg.e_sram_per_byte
+        res.read_energy_uj += e_sram
+        res.energy_uj += e_sram
+        return res
+
+    def _plane_pass(self, res, planes, pages, vb, counts) -> None:
+        """Weighted page-buffer pass over a collapsed access stream.
+
+        ``counts[i]`` raw accesses coalesce onto collapsed element ``i``
+        (adjacent elements never share a page within one window, so a page
+        read happens exactly at collapsed page transitions). Accumulates
+        into ``res`` the same totals — field by field, in the same float
+        order — as :meth:`_run_vectorized` over the expanded stream.
+        """
+        part, t = self.part, self.timing
+        buffer, drain_pos = self._buffer, self._drain_pos
+        n_reads = 0
+        n_acc_total = 0
+        plane_tr = np.zeros(part.n_planes, dtype=np.float64)
+        bytes_out = 0
+        for p in range(part.n_planes):
+            idx = np.flatnonzero(planes == p)
+            if idx.size == 0:
+                continue
+            pp = pages[idx]
+            r = np.empty(idx.size, dtype=bool)
+            r[0] = pp[0] != buffer[p]
+            np.not_equal(pp[1:], pp[:-1], out=r[1:])
+            plane_tr[p] = float(r.sum()) * part.t_r
+            n_reads += int(r.sum())
+            cj = counts[idx]
+            n_acc = int(cj.sum())
+            n_acc_total += n_acc
+            nb_total = int((cj * vb[idx]).sum())
+            bytes_out += nb_total
+            res.latency_us += t.t_rr * n_acc + t.t_rc * nb_total
+            drain_pos[p] = 0
+            buffer[p] = pp[-1]
+        res.n_page_reads = n_reads
+        res.n_buffer_hits = n_acc_total - n_reads
+        res.bytes_out = bytes_out
+        tr_total = (float(plane_tr.max(initial=0.0))
+                    if self.policy.plane_parallel else float(plane_tr.sum()))
+        res.latency_us += n_reads * t.t_ca + tr_total
+        res.read_energy_uj = n_reads * part.e_page_read
+        res.energy_uj = res.read_energy_uj + bytes_out * part.e_io_per_byte
+
+    def _run_vectorized_cached(self, planes, pages, slots,
+                               vec_bytes) -> SimResult:
+        """Fast path for the P$ policy (DESIGN.md §2.3).
+
+        The whole-stream LRU hit mask comes from the reuse-distance bulk
+        evaluator (``PageLRU.bulk_access``: an access hits iff fewer than C
+        distinct pages were touched since its previous occurrence), then
+        the *miss* sub-stream — the only accesses that reach the flash —
+        goes through the same no-cache vectorised path. Identical results
+        to the exact loop, including carried cache and buffer state.
+        """
+        hits = self.cache.bulk_access(pages)
+        miss = ~hits
+        res = self._run_vectorized(planes[miss], pages[miss], slots[miss],
+                                   vec_bytes[miss])
+        n_hits = int(hits.sum())
+        res.n_lookups = int(pages.size)
+        res.n_cache_hits = n_hits
+        ccfg = self.cache_cfg
+        res.latency_us += n_hits * ccfg.t_sram_vec
+        e_sram = float(vec_bytes[hits].sum()) * ccfg.e_sram_per_byte
+        res.read_energy_uj += e_sram
+        res.energy_uj += e_sram
         return res
 
     # -- remapping overhead (paper §III-C4, Fig. 7/14) ----------------------

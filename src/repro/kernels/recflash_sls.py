@@ -16,7 +16,14 @@ Memory plan per grid step (block_b bags x L lookups):
                                pins block (0,0) for every i)
   indices     block_b x L x 4B SMEM (scalar reads drive control flow)
   cold table  (V-H) x D        stays in HBM/ANY; one row DMA per cold hit
-  scratch     1 x D            VMEM DMA landing buffer + 1 DMA semaphore
+  scratch     2 x D            double-buffered VMEM DMA landing slots
+                               (+ one DMA semaphore per slot)
+
+Cold-row DMAs are double-buffered: lookup ``l+1``'s copy is started before
+waiting on lookup ``l``'s, so the cold fetch overlaps the accumulate and
+the wait of the in-flight row. Slots alternate by lookup parity; reusing a
+slot two lookups later is safe because the row value was consumed (read
+into the accumulator) before the next start on that slot issues.
 """
 
 from __future__ import annotations
@@ -34,18 +41,38 @@ def _sls_kernel(idx_ref, hot_ref, cold_ref, out_ref, scratch, sem, *,
     d = out_ref.shape[-1]
 
     def bag(i, _):
+        def cold_copy(l):
+            """The (deterministic) DMA descriptor for lookup ``l``."""
+            idx = idx_ref[i, l]
+            slot = l % 2
+            return pltpu.make_async_copy(
+                cold_ref.at[pl.dslice(idx - hot_size, 1)],
+                scratch.at[pl.dslice(slot, 1)], sem.at[slot])
+
+        def start_if_cold(l):
+            def start():
+                cold_copy(l).start()
+                return 0
+            jax.lax.cond(idx_ref[i, l] >= hot_size, start, lambda: 0)
+
+        # warm up: lookup 0's cold fetch is in flight before the loop
+        start_if_cold(0)
+
         def lookup(l, acc):
             idx = idx_ref[i, l]
+            # start l+1's copy into the other slot before waiting on l's,
+            # so the next cold fetch overlaps this lookup's wait+accumulate
+            if n_lookups > 1:
+                jax.lax.cond(l + 1 < n_lookups,
+                             lambda: (start_if_cold(l + 1), 0)[1],
+                             lambda: 0)
 
             def from_hot():
                 return hot_ref[pl.dslice(idx, 1), :]
 
             def from_cold():
-                copy = pltpu.make_async_copy(
-                    cold_ref.at[pl.dslice(idx - hot_size, 1)], scratch, sem)
-                copy.start()
-                copy.wait()
-                return scratch[...]
+                cold_copy(l).wait()
+                return scratch[pl.dslice(l % 2, 1), :]
 
             row = jax.lax.cond(idx < hot_size, from_hot, from_cold)
             return acc + row.astype(jnp.float32)
@@ -79,7 +106,7 @@ def recflash_sls(hot: jax.Array, cold: jax.Array, indices: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((1, d), cold.dtype),
-                        pltpu.SemaphoreType.DMA],
+        scratch_shapes=[pltpu.VMEM((2, d), cold.dtype),
+                        pltpu.SemaphoreType.DMA((2,))],
         interpret=interpret,
     )(indices, hot, cold)

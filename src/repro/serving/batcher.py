@@ -62,6 +62,26 @@ class DynamicBatcher:
     def __init__(self, cfg: BatcherConfig | None = None):
         self.cfg = cfg or BatcherConfig()
 
+    def next_span(self, arrivals: np.ndarray, pos: int,
+                  device_free_us: float = 0.0) -> tuple[int, float]:
+        """Array form of :meth:`next_batch` for the replay hot loop.
+
+        ``arrivals`` is the whole stream's arrival-sorted timestamp array
+        and ``pos`` the first unserved position; returns ``(end,
+        dispatch_us)`` so the next batch is positions ``[pos, end)``. Same
+        dispatch rule and admission (arrival <= dispatch, up to
+        ``max_batch``) as the queue-based path, with no per-request work.
+        """
+        cfg = self.cfg
+        head = float(arrivals[pos])
+        fill = (float(arrivals[pos + cfg.max_batch - 1])
+                if pos + cfg.max_batch <= arrivals.size else float("inf"))
+        dispatch = max(head, device_free_us,
+                       min(head + cfg.max_wait_us, fill))
+        end = pos + int(np.searchsorted(arrivals[pos:pos + cfg.max_batch],
+                                        dispatch, side="right"))
+        return end, dispatch
+
     def next_batch(self, queue: RequestQueue,
                    device_free_us: float = 0.0) -> Batch | None:
         """Form the next batch, or None if the queue is empty.

@@ -20,6 +20,13 @@ reproduces its numbers bit-for-bit. Per-request latency folds in queueing
 delay (backlog), batching delay (max-wait) and device service time — the
 serving-level quantity the paper's latency claim is ultimately about.
 
+The hot loop is array-based (DESIGN.md §3.3): the stream's index arrays
+are precomputed once (arrival order, concatenated accesses, per-request
+offsets), batches are contiguous spans planned by
+``DynamicBatcher.next_span``, their access arrays are zero-copy slices,
+and latencies/completions are written with one vectorised scatter per
+batch — no per-request Python anywhere in replay.
+
 The preferred entry point is ``repro.serving.Deployment``; the module-level
 ``build_policy_engines``/``ServingScheduler`` names are deprecated shims.
 """
@@ -35,7 +42,6 @@ from repro.core.engine import RecFlashEngine
 from repro.flashsim.timeline import SERVING_POLICIES
 from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
 from repro.serving.metrics import LatencyReport, summarize
-from repro.serving.queueing import RequestQueue
 from repro.serving.workload import Request
 
 
@@ -97,7 +103,6 @@ def replay(requests: list[Request], engine: RecFlashEngine,
     planes/buffers and a 1/n slice of the controller P$ SRAM each).
     """
     batcher = DynamicBatcher(batcher_cfg)
-    queue = RequestQueue(requests)
     name = policy_name or engine.policy.name
     n = len(requests)
     # rids need not be dense 0..n-1 (sub-streams, filtered streams) —
@@ -116,25 +121,48 @@ def replay(requests: list[Request], engine: RecFlashEngine,
     free = np.zeros(n_channels, dtype=np.float64)
     busy = 0.0
     energy = 0.0
-    while len(queue):
+    # precompute the whole stream's index arrays once (DESIGN.md §3.3):
+    # arrival-sorted order (the RequestQueue contract: (arrival, rid)),
+    # one concatenation of every request's accesses, and per-request
+    # offsets — each batch is then a contiguous [pos, end) span whose
+    # access arrays are zero-copy slices, and latencies/completions are
+    # written with one vectorised scatter per batch.
+    rids = np.fromiter((r.rid for r in requests), dtype=np.int64, count=n)
+    arr_in = np.fromiter((r.arrival_us for r in requests),
+                         dtype=np.float64, count=n)
+    order = np.lexsort((rids, arr_in))
+    reqs = [requests[i] for i in order.tolist()]
+    arrivals = arr_in[order]
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum([r.rows.size for r in reqs], out=offsets[1:])
+    tab_all = (np.concatenate([r.tables for r in reqs]) if n
+               else np.empty(0, dtype=np.int64))
+    row_all = (np.concatenate([r.rows for r in reqs]) if n
+               else np.empty(0, dtype=np.int64))
+    pos = 0
+    while pos < n:
         c = int(np.argmin(free))               # earliest-free channel
-        batch = batcher.next_batch(queue, device_free_us=float(free[c]))
-        start = max(batch.dispatch_us, float(free[c]))
+        end, dispatch = batcher.next_span(arrivals, pos,
+                                          device_free_us=float(free[c]))
+        lo, hi = offsets[pos], offsets[end]
+        tables, rows = tab_all[lo:hi], row_all[lo:hi]
+        start = max(dispatch, float(free[c]))
         if record_window:
-            engine.record_window(batch.tables, batch.rows)
-        res = sims[c].run(batch.tables, batch.rows)
+            engine.record_window(tables, rows)
+        res = sims[c].run(tables, rows)
         svc = res.latency_us
         free[c] = start + svc
         busy += svc
         energy += res.energy_uj
         done = float(free[c])
-        for r in batch.requests:
-            i = index_of[r.rid]
-            latencies[i] = done - r.arrival_us
-            completions[i] = done
-        batches.append(batch)
+        span = order[pos:end]
+        latencies[span] = done - arrivals[pos:end]
+        completions[span] = done
+        batches.append(Batch(requests=reqs[pos:end], tables=tables,
+                             rows=rows, dispatch_us=dispatch))
         batch_channels.append(c)
         batch_starts.append(start)
+        pos = end
     first_arrival = min(r.arrival_us for r in requests) if requests else 0.0
     makespan = (float(completions.max()) - first_arrival) if n else 0.0
     # device_busy_frac = mean per-channel utilisation (== total busy /

@@ -4,9 +4,32 @@ import numpy as np
 import pytest
 
 from repro.core.freq import AccessStats
+from repro.core.page_cache import PageLRU, lru_hit_mask
 from repro.core.remap import build_mapping
 from repro.flashsim.device import PARTS, SLC, TIMING, CacheConfig, FlashPart
 from repro.flashsim.timeline import POLICIES, SLSSimulator
+
+
+def assert_results_equal(r1, r2, ctx=""):
+    """SimResult equality: counters exact, time/energy to float tolerance."""
+    assert (r1.n_lookups, r1.n_page_reads, r1.n_buffer_hits,
+            r1.n_cache_hits, r1.bytes_out) == \
+           (r2.n_lookups, r2.n_page_reads, r2.n_buffer_hits,
+            r2.n_cache_hits, r2.bytes_out), ctx
+    for f in ("latency_us", "energy_uj", "read_energy_uj"):
+        a, b = getattr(r1, f), getattr(r2, f)
+        assert abs(a - b) <= 1e-9 * max(1.0, abs(b)), (ctx, f, a, b)
+
+
+def assert_states_equal(s1: SLSSimulator, s2: SLSSimulator, ctx=""):
+    """Carried device state: page buffers, drain positions, P$ contents."""
+    np.testing.assert_array_equal(s1._buffer, s2._buffer, err_msg=str(ctx))
+    np.testing.assert_array_equal(s1._drain_pos, s2._drain_pos,
+                                  err_msg=str(ctx))
+    if s1.cache is not None:
+        assert s1.cache.residents() == s2.cache.residents(), ctx
+        assert (s1.cache.hits, s1.cache.misses) == \
+               (s2.cache.hits, s2.cache.misses), ctx
 
 
 def make_sim(policy, n_rows=1024, vec_bytes=128, part=SLC, stats=None,
@@ -98,21 +121,110 @@ class TestPolicies:
         assert res.n_cache_hits == len(rows) - 1
 
     def test_vectorized_equals_exact(self):
-        """No-cache fast path must be identical to the stateful loop."""
+        """Every policy's fast path must be identical to the stateful loop
+        — including the cached (P$) lane (DESIGN.md §2.3)."""
         rng = np.random.default_rng(2)
         n_rows = 2048
         rows = rng.integers(0, n_rows, 800)
         tb = np.zeros_like(rows)
         stats = AccessStats.from_trace(rows[:200], n_rows)
-        for pol in ("recssd", "rmssd", "recflash_af", "recflash_af_pd"):
-            s1 = make_sim(pol, n_rows, stats=stats)
-            s2 = make_sim(pol, n_rows, stats=stats)
+        for pol in POLICIES:
+            s1 = make_sim(pol, n_rows, stats=stats, cache_cfg=CacheConfig())
+            s2 = make_sim(pol, n_rows, stats=stats, cache_cfg=CacheConfig())
             r1 = s1.run(tb, rows)
             r2 = s2.run(tb, rows, force_exact=True)
-            assert r1.n_page_reads == r2.n_page_reads, pol
-            assert r1.bytes_out == r2.bytes_out, pol
-            assert r1.latency_us == pytest.approx(r2.latency_us), pol
-            assert r1.energy_uj == pytest.approx(r2.energy_uj), pol
+            assert_results_equal(r1, r2, pol)
+            assert_states_equal(s1, s2, pol)
+
+
+class TestBulkLRU:
+    """Reuse-distance bulk evaluator vs the per-access PageLRU loop."""
+
+    @pytest.mark.parametrize("n_slots", [1, 2, 8, 32])
+    def test_hit_mask_matches_loop(self, n_slots):
+        rng = np.random.default_rng(n_slots)
+        for vocab, n in ((4, 200), (50, 400), (300, 400)):
+            pages = rng.integers(0, vocab, n)
+            ref, vec = PageLRU(n_slots), PageLRU(n_slots)
+            ref_hits = np.array([ref.access(int(p)) for p in pages])
+            vec_hits = vec.bulk_access(pages)
+            np.testing.assert_array_equal(ref_hits, vec_hits)
+            assert ref.residents() == vec.residents()
+            assert (ref.hits, ref.misses) == (vec.hits, vec.misses)
+
+    def test_state_carries_across_calls(self):
+        rng = np.random.default_rng(9)
+        ref, vec = PageLRU(4), PageLRU(4)
+        for _ in range(10):
+            chunk = rng.integers(0, 12, rng.integers(0, 40))
+            ref_hits = [ref.access(int(p)) for p in chunk]
+            np.testing.assert_array_equal(ref_hits, vec.bulk_access(chunk))
+            assert ref.residents() == vec.residents()
+
+    def test_pure_function_form(self):
+        """lru_hit_mask: distance-0 runs hit, first occurrences miss, and
+        the carried state primes the cache exactly."""
+        hits, state = lru_hit_mask([7, 7, 7, 3, 7], n_slots=2)
+        np.testing.assert_array_equal(hits, [False, True, True, False, True])
+        assert state == [3, 7]                      # LRU -> MRU
+        hits2, state2 = lru_hit_mask([3, 9, 3], n_slots=2, state=state)
+        np.testing.assert_array_equal(hits2, [True, False, True])
+        assert state2 == [9, 3]
+
+    def test_empty_stream(self):
+        hits, state = lru_hit_mask([], n_slots=4, state=[1, 2])
+        assert hits.size == 0 and state == [1, 2]
+
+
+class TestFastPathEquivalence:
+    """Vectorized-vs-exact sweep: policy x part x window x multi-call state
+    carry-over and replace_mapping resets (the non-hypothesis twin of the
+    tests/test_property.py sweep)."""
+
+    @pytest.mark.parametrize("policy", sorted(POLICIES))
+    @pytest.mark.parametrize("part_name", sorted(PARTS))
+    @pytest.mark.parametrize("window", [0, 1, 7, 64])
+    def test_multi_call_equivalence(self, policy, part_name, window):
+        part = PARTS[part_name]
+        rng = np.random.default_rng(hash((policy, part_name, window)) % 2**32)
+        n_rows = 1500
+        rows = rng.zipf(1.4, 600) % n_rows
+        tb = np.zeros_like(rows)
+        stats = AccessStats.from_trace(rows, n_rows)
+        s1 = make_sim(policy, n_rows, part=part, stats=stats,
+                      cache_cfg=CacheConfig())
+        s2 = make_sim(policy, n_rows, part=part, stats=stats,
+                      cache_cfg=CacheConfig())
+        for lo, hi in ((0, 100), (100, 101), (101, 600)):
+            r1 = s1.run(tb[lo:hi], rows[lo:hi], window=window)
+            r2 = s2.run(tb[lo:hi], rows[lo:hi], window=window,
+                        force_exact=True)
+            ctx = (policy, part_name, window, lo)
+            assert_results_equal(r1, r2, ctx)
+            assert_states_equal(s1, s2, ctx)
+
+    def test_replace_mapping_resets_both_paths(self):
+        rng = np.random.default_rng(5)
+        n_rows = 1024
+        rows = rng.zipf(1.5, 500) % n_rows
+        tb = np.zeros_like(rows)
+        stats = AccessStats.from_trace(rows, n_rows)
+        s1 = make_sim("recflash", n_rows, stats=stats,
+                      cache_cfg=CacheConfig())
+        s2 = make_sim("recflash", n_rows, stats=stats,
+                      cache_cfg=CacheConfig())
+        s1.run(tb, rows)
+        s2.run(tb, rows, force_exact=True)
+        new_stats = AccessStats.from_trace(rows[::-1][:200], n_rows)
+        m = build_mapping(n_rows, 128, SLC.page_bytes, SLC.n_planes,
+                          mode="af_pd", stats=new_stats)
+        s1.replace_mapping(0, m)
+        s2.replace_mapping(0, m)
+        assert s1.cache.residents() == [] and len(s1.cache) == 0
+        r1 = s1.run(tb, rows)
+        r2 = s2.run(tb, rows, force_exact=True)
+        assert_results_equal(r1, r2, "post-remap")
+        assert_states_equal(s1, s2, "post-remap")
 
 
 class TestEnergyAndParts:

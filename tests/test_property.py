@@ -54,6 +54,70 @@ class TestSimulatorInvariants:
         assert abs(r1.latency_us - r2.latency_us) < 1e-6 * max(
             1.0, r1.latency_us)
 
+    @given(trace_case(), st.sampled_from([0, 1, 7, 64]),
+           st.lists(st.integers(0, 400), min_size=2, max_size=2))
+    @settings(max_examples=60, deadline=None)
+    def test_fast_path_full_sweep(self, case, window, cuts):
+        """Policy x part x window x seed sweep incl. the cached (P$) lane:
+        per-call SimResults equal, carried buffer/drain/cache state equal
+        across consecutive run() calls, and replace_mapping resets both
+        paths identically (DESIGN.md §2.3)."""
+        from repro.flashsim.device import CacheConfig
+
+        n_rows, rows, part_name, policy = case
+        part = PARTS[part_name]
+        stats = AccessStats.from_trace(rows, n_rows)
+        pol = POLICIES[policy]
+        m = build_mapping(n_rows, 128, part.page_bytes, part.n_planes,
+                          mode=pol.mapping_mode, stats=stats)
+        s1 = SLSSimulator(part, pol, [m], TIMING, CacheConfig())
+        s2 = SLSSimulator(part, pol, [m], TIMING, CacheConfig())
+        n = rows.size
+        lo, hi = sorted(min(c, n) for c in cuts)
+        chunks = [rows[:lo], rows[lo:hi], rows[hi:]]
+        for i, chunk in enumerate(chunks):
+            tb = np.zeros_like(chunk)
+            r1 = s1.run(tb, chunk, window=window)
+            r2 = s2.run(tb, chunk, window=window, force_exact=True)
+            assert (r1.n_lookups, r1.n_page_reads, r1.n_buffer_hits,
+                    r1.n_cache_hits, r1.bytes_out) == \
+                   (r2.n_lookups, r2.n_page_reads, r2.n_buffer_hits,
+                    r2.n_cache_hits, r2.bytes_out), (policy, window, i)
+            for f in ("latency_us", "energy_uj", "read_energy_uj"):
+                a, b = getattr(r1, f), getattr(r2, f)
+                assert abs(a - b) <= 1e-9 * max(1.0, abs(b)), (policy, f)
+            np.testing.assert_array_equal(s1._buffer, s2._buffer)
+            np.testing.assert_array_equal(s1._drain_pos, s2._drain_pos)
+            if s1.cache is not None:
+                assert s1.cache.residents() == s2.cache.residents()
+                assert (s1.cache.hits, s1.cache.misses) == \
+                       (s2.cache.hits, s2.cache.misses)
+        # replace_mapping resets device + cache state on both paths
+        s1.replace_mapping(0, m)
+        s2.replace_mapping(0, m)
+        tb = np.zeros_like(rows)
+        r1 = s1.run(tb, rows, window=window)
+        r2 = s2.run(tb, rows, window=window, force_exact=True)
+        assert (r1.n_page_reads, r1.n_cache_hits, r1.bytes_out) == \
+               (r2.n_page_reads, r2.n_cache_hits, r2.bytes_out)
+
+    @given(st.integers(1, 40), st.integers(1, 60), st.integers(0, 2 ** 16),
+           st.integers(0, 300))
+    @settings(max_examples=60, deadline=None)
+    def test_bulk_lru_matches_loop(self, n_slots, vocab, seed, n):
+        """PageLRU.bulk_access == per-access loop: hit mask, final resident
+        set/order, and hit/miss counters."""
+        from repro.core.page_cache import PageLRU
+
+        rng = np.random.default_rng(seed)
+        pages = rng.integers(0, vocab, n)
+        ref, vec = PageLRU(n_slots), PageLRU(n_slots)
+        ref_hits = np.array([ref.access(int(p)) for p in pages], dtype=bool)
+        vec_hits = vec.bulk_access(pages)
+        np.testing.assert_array_equal(ref_hits, vec_hits)
+        assert ref.residents() == vec.residents()
+        assert (ref.hits, ref.misses) == (vec.hits, vec.misses)
+
     @given(trace_case())
     @settings(max_examples=40, deadline=None)
     def test_latency_lower_bound(self, case):

@@ -143,6 +143,29 @@ class TestDynamicBatcher:
             b.rows, np.concatenate([r.rows for r in b.requests]))
         assert b.n_lookups == sum(r.n_lookups for r in b.requests)
 
+    def test_next_span_matches_next_batch(self):
+        """The array-form planner used by replay() must make the same
+        (batch membership, dispatch time) decisions as the queue path."""
+        rng = np.random.default_rng(3)
+        for trial in range(8):
+            n = int(rng.integers(1, 120))
+            ts = np.sort(rng.uniform(0, 5_000.0, n))
+            reqs = [mk_request(i, t) for i, t in enumerate(ts)]
+            cfg = BatcherConfig(max_batch=int(rng.integers(1, 20)),
+                                max_wait_us=float(rng.choice([0.0, 200.0,
+                                                              2000.0])))
+            batcher = DynamicBatcher(cfg)
+            q = RequestQueue(reqs)
+            pos, free = 0, 0.0
+            while pos < n:
+                end, dispatch = batcher.next_span(ts, pos, free)
+                batch = batcher.next_batch(q, device_free_us=free)
+                assert batch.dispatch_us == dispatch
+                assert [r.rid for r in batch.requests] == \
+                    list(range(pos, end))
+                free = max(dispatch, free) + float(rng.uniform(0, 400.0))
+                pos = end
+
     def test_max_batch_one_is_serial(self):
         reqs = [mk_request(i, 0.0) for i in range(7)]
         q = RequestQueue(reqs)
