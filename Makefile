@@ -1,15 +1,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-perf serve-demo lint
+.PHONY: test bench-smoke bench bench-perf serve-demo lint docs-check
 
 # tier-1 verify
 test:
 	$(PY) -m pytest -x -q
 
-# fast serving-benchmark smoke pass (CI-sized)
+# fast serving-benchmark smoke passes (CI-sized): the stationary tail
+# sweep plus the drifting live-remap lane (fig_drift_tail --smoke asserts
+# the spike-and-recovery acceptance shape, DESIGN.md §5.4)
 bench-smoke:
 	$(PY) benchmarks/fig_serving_tail.py --smoke
+	$(PY) benchmarks/fig_drift_tail.py --smoke
 
 # simulator fast-path microbenchmark (DESIGN.md §2.3): smoke sweep into
 # BENCH_sim_smoke.json (the committed root BENCH_sim.json is the tracked
@@ -26,6 +29,10 @@ bench:
 # the serving stack end-to-end
 serve-demo:
 	$(PY) -m repro.launch.serve --requests 200 --batch 64
+
+# every in-code `DESIGN.md §x` reference must resolve to a real heading
+docs-check:
+	$(PY) tools/docs_check.py
 
 # lint floor (ruff.toml): syntax errors, undefined names, pyflakes
 lint:

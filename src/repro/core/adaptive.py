@@ -37,6 +37,13 @@ class UpdateReport:
     n_remapped: int = 0           # hot-region rows physically rewritten
     n_direct_assigned: int = 0    # tail rows written fresh (no remap)
 
+    def __iadd__(self, other: "UpdateReport") -> "UpdateReport":
+        """Accumulate another pass's counts (every field is additive)."""
+        for f in dataclasses.fields(UpdateReport):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
+
 
 class AdaptiveHashTable:
     """Frequency-ordered mapping with hot-region-bounded updates (Alg. 1)."""

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core.adaptive import AdaptiveHashTable, UpdateReport
 from repro.core.freq import AccessStats
-from repro.core.remap import Mapping, build_mapping
+from repro.core.remap import Mapping, build_mapping, build_mapping_from_order
 from repro.core.triggers import PeriodTrigger, ThresholdTrigger
 from repro.flashsim.device import CacheConfig, FlashPart, TIMING
 from repro.flashsim.timeline import POLICIES, PolicyConfig, SimResult, SLSSimulator
@@ -26,6 +26,29 @@ from repro.flashsim.timeline import POLICIES, PolicyConfig, SimResult, SLSSimula
 class TableSpec:
     n_rows: int
     vec_bytes: int
+
+
+@dataclasses.dataclass
+class RemapPlan:
+    """One incremental (in-band) adaptive remap: what physically moved.
+
+    Produced by :meth:`RecFlashEngine.live_remap_step` after an
+    Algorithm-1 update. Unlike the bulk ``remap_cost`` lump sum (which
+    charges every hot *row* as if rewritten), the plan is a diff of the
+    old vs new physical mapping restricted to the hot region: only pages
+    whose contents actually changed are counted, and
+    ``bytes_programmed == n_pages_moved * page_bytes`` by construction
+    (DESIGN.md §5.3). ``plane_counts[p]`` is how many of those pages land
+    on plane ``p`` — the serving lane turns it into in-band page-program
+    traffic (``SLSSimulator.program_pass``).
+    """
+
+    n_pages_moved: int
+    n_blocks: int
+    bytes_programmed: int
+    plane_counts: np.ndarray
+    update_report: UpdateReport
+    n_tables_updated: int = 0
 
 
 @dataclasses.dataclass
@@ -153,6 +176,99 @@ class RecFlashEngine:
         return dict(zip(idx.tolist(), w[idx].tolist()))
 
     # -- online training / adaptive remap -------------------------------------
+    def _eval_trigger(self, trigger: ThresholdTrigger | PeriodTrigger,
+                      period_index: int, windows: list[dict]) -> bool:
+        """One trigger evaluation over the current window (DESIGN.md §5.2).
+
+        ``period_index`` is the trigger period ordinal — the day for the
+        bulk loop, the window ordinal for the live lane. The threshold
+        trigger fires iff any table saw enough *new* hot keys (keys already
+        in the hot region are excluded — a stable distribution must not
+        re-trigger).
+        """
+        if isinstance(trigger, PeriodTrigger):
+            return trigger.should_trigger(period_index)
+        return any(
+            trigger.should_trigger(windows[t], ht.threshold_freq,
+                                   frozenset(ht.hot_keys()))
+            for t, ht in enumerate(self.hash_tables))
+
+    def _update_table(self, tid: int, window: dict) -> tuple[UpdateReport,
+                                                             Mapping, Mapping]:
+        """Algorithm-1 update of one table; swap in the rebuilt mapping.
+
+        Returns ``(report, old_mapping, new_mapping)`` so callers can
+        charge the rewrite their own way (lump sum vs page diff). The
+        rebuild keeps the hot region re-sorted and the cold tail in its
+        (approximate) old placement — only hot + fresh rows move.
+        """
+        spec, ht = self.tables[tid], self.hash_tables[tid]
+        report = ht.update(window)
+        ht.compact()
+        order = np.asarray(ht.keys_in_order(), dtype=np.int64)
+        old = self.sim.mappings[tid]
+        new = build_mapping_from_order(order, spec.vec_bytes,
+                                       self.part.page_bytes,
+                                       self.part.n_planes,
+                                       mode=self.policy.mapping_mode)
+        self.sim.replace_mapping(tid, new)
+        return report, old, new
+
+    def live_remap_step(self, trigger: ThresholdTrigger | PeriodTrigger,
+                        period_index: int) -> RemapPlan | None:
+        """Mid-stream trigger check + incremental remap (DESIGN.md §5.3).
+
+        Called by the serving replay at window boundaries. Evaluates the
+        trigger over the accumulated online window; when it fires, runs the
+        Algorithm-1 update per table and diffs the old vs new physical
+        mapping over the *hot region* — the pages that actually moved are
+        returned as a :class:`RemapPlan` for the lane to program in-band
+        (the mappings list is shared with every channel simulator, so the
+        swap is immediately visible; the caller owns resetting per-channel
+        read state). The window is cleared either way. Returns ``None``
+        for baseline policies or when the trigger does not fire.
+
+        Fresh keys direct-assigned into the cold tail would also cost page
+        programs, but a serving deployment's hash tables are initialised
+        with the full vocabulary, so every window key already exists and
+        ``n_direct_assigned`` is structurally zero here.
+        """
+        if self.policy.mapping_mode == "baseline" or not self.hash_tables:
+            self._clear_window()
+            return None
+        windows = [self.window_dict(t) for t in range(len(self.tables))]
+        if not self._eval_trigger(trigger, period_index, windows):
+            self._clear_window()
+            return None
+        plane_counts = np.zeros(self.part.n_planes, dtype=np.int64)
+        n_pages = 0
+        n_blocks = 0
+        n_updated = 0
+        merged = UpdateReport()
+        for tid in range(len(self.tables)):
+            if not windows[tid]:
+                continue
+            report, old, new = self._update_table(tid, windows[tid])
+            n_updated += 1
+            merged += report
+            hot_rows = np.asarray(
+                self.hash_tables[tid].hot_keys(), dtype=np.int64)
+            op, og, os_ = old.lookup(hot_rows)
+            np_, ng, ns = new.lookup(hot_rows)
+            changed = (op != np_) | (og != ng) | (os_ != ns)
+            moved, first = np.unique(ng[changed], return_index=True)
+            n_pages += int(moved.size)
+            plane_counts += np.bincount(np_[changed][first],
+                                        minlength=self.part.n_planes)
+            n_blocks += int(np.unique(
+                moved // self.part.pages_per_block).size)
+        self._clear_window()
+        return RemapPlan(
+            n_pages_moved=n_pages, n_blocks=n_blocks,
+            bytes_programmed=n_pages * self.part.page_bytes,
+            plane_counts=plane_counts, update_report=merged,
+            n_tables_updated=n_updated)
+
     def maybe_remap(self, day: int,
                     trigger: ThresholdTrigger | PeriodTrigger) -> DayLog | None:
         """Evaluate the trigger at end of ``day``; remap hot region if fired.
@@ -168,48 +284,27 @@ class RecFlashEngine:
         # sparse views are O(n_rows) to build — materialise once per table
         # and share between the trigger check and the Algorithm-1 update.
         windows = [self.window_dict(t) for t in range(len(self.tables))]
-        if isinstance(trigger, PeriodTrigger):
-            fired = trigger.should_trigger(day)
-        else:
-            fired = any(
-                trigger.should_trigger(windows[t], ht.threshold_freq,
-                                       frozenset(ht.hot_keys()))
-                for t, ht in enumerate(self.hash_tables))
-        if not fired:
+        if not self._eval_trigger(trigger, day, windows):
             self._clear_window()
             return None
 
         total_lat = 0.0
         total_energy = 0.0
-        reports = []
-        for tid, (spec, ht) in enumerate(zip(self.tables, self.hash_tables)):
+        merged = UpdateReport()
+        for tid, spec in enumerate(self.tables):
             window = windows[tid]
             if not window:
                 continue
-            report = ht.update(window)
-            reports.append(report)
+            report, _, _ = self._update_table(tid, window)
+            # bulk accounting (paper Fig. 14): every hot row charged as
+            # rewritten, as one stop-the-world lump sum. The request-level
+            # lane charges the page diff instead (live_remap_step).
             n_rewritten = report.n_remapped + report.n_direct_assigned
             lat, en = self.sim.remap_cost(n_rewritten, spec.vec_bytes)
             total_lat += lat
             total_energy += en
-            # rebuild the physical mapping from the updated hash-table order:
-            # hot region re-sorted, cold tail keeps its (approximate) old
-            # placement — only hot + fresh rows were physically rewritten.
-            from repro.core.remap import build_mapping_from_order
-            ht.compact()
-            order = np.asarray(ht.keys_in_order(), dtype=np.int64)
-            self.sim.replace_mapping(tid, build_mapping_from_order(
-                order, spec.vec_bytes, self.part.page_bytes,
-                self.part.n_planes, mode=self.policy.mapping_mode))
+            merged += report
         self._clear_window()
-        merged = UpdateReport()
-        for r in reports:
-            merged.n_inserted_hot += r.n_inserted_hot
-            merged.n_appended_tail += r.n_appended_tail
-            merged.n_comparisons += r.n_comparisons
-            merged.n_pointer_updates += r.n_pointer_updates
-            merged.n_remapped += r.n_remapped
-            merged.n_direct_assigned += r.n_direct_assigned
         return DayLog(day=day, inference=SimResult(), triggered=True,
                       remap_latency_us=total_lat,
                       remap_energy_uj=total_energy, update_report=merged)

@@ -14,6 +14,15 @@ available offline, so we generate *statistically matched* day streams:
 
 These proxies preserve exactly what the storage simulation consumes: the
 row-access marginal distribution per table and its day-over-day drift.
+
+The day streams are the *bulk-loop* form of non-stationarity: consumed a
+day at a time by ``Deployment.step_day`` (paper Fig. 14 accounting,
+DESIGN.md §5.4) with rank churn applied between days via
+``advance_day``. The request-level serving lane has its own in-stream
+drift scenarios (``serving/workload.py::DriftScenario``, DESIGN.md §5.2)
+— use these day streams when reproducing the paper's daily
+online-training figures, and the serving scenarios when the question is
+tail latency under drifting open-loop arrivals.
 """
 
 from __future__ import annotations

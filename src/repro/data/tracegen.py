@@ -46,6 +46,19 @@ def calibrate_alpha(n_rows: int, n_draws: int, target_rate: float) -> float:
     return 0.5 * (lo + hi)
 
 
+def popularity_perm(n_rows: int, pop_seed: int = 12345,
+                    table: int = 0) -> np.ndarray:
+    """The rank -> row-id permutation of one table's popularity.
+
+    Single source of the convention shared by ``generate_trace`` /
+    ``generate_sls_batch`` (per-table key ``pop_seed + 7919 * table``) and
+    by the serving drift scenarios (``serving/workload.py``), which must
+    know which logical rows are hot (low rank) to retire them and which
+    are cold (high rank) to promote.
+    """
+    return np.random.default_rng(pop_seed + 7919 * table).permutation(n_rows)
+
+
 def generate_trace(n_rows: int, n_lookups: int, k: float,
                    seed: int = 0, pop_seed: int = 12345) -> np.ndarray:
     """Row-id trace of ``n_lookups`` accesses with locality ``K``.
@@ -63,8 +76,7 @@ def generate_trace(n_rows: int, n_lookups: int, k: float,
     alpha = calibrate_alpha(n_rows, n_lookups, K_UNIQUE_RATE[k])
     p = zipf_probs(n_rows, alpha)
     ranks = rng.choice(n_rows, size=n_lookups, p=p)
-    perm = np.random.default_rng(pop_seed).permutation(n_rows)
-    return perm[ranks]
+    return popularity_perm(n_rows, pop_seed)[ranks]
 
 
 def generate_sls_batch(n_tables: int, n_rows: int, lookups_per_table: int,

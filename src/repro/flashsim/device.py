@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class FlashTiming:
@@ -61,6 +63,27 @@ class FlashPart:
     def __post_init__(self):
         if self.e_page_prog is None:
             object.__setattr__(self, "e_page_prog", 2.0 * self.e_page_read)
+
+    def rewrite_latency_us(self, n_pages: int, n_blocks: int, t_ca: float,
+                           plane_counts=None) -> float:
+        """Latency to read-modify-program ``n_pages`` + erase ``n_blocks``.
+
+        Per page: C/A + array read (``t_r``, the old page is read back to
+        merge unchanged slots) + program (``t_prog``). When a per-plane
+        page-count vector is given, the ``t_r + t_prog`` core overlaps
+        across planes (multi-plane program, the PD capability) and the
+        total is ``max`` over planes; without one the pass is serial.
+        Erases of retired blocks are serial either way (one block-erase
+        command per block on the shared die). Single source for both the
+        bulk remap cost (``SLSSimulator.remap_cost``) and the in-band
+        program pass (``SLSSimulator.program_pass``), DESIGN.md §5.3.
+        """
+        core = self.t_r + self.t_prog
+        if plane_counts is not None:
+            per_plane = float(np.max(plane_counts, initial=0)) * core
+        else:
+            per_plane = n_pages * core
+        return n_pages * t_ca + per_plane + n_blocks * self.t_erase
 
 
 # Table III parts. Program/erase constants: SLC ~200us/2ms, TLC ~660us/3.5ms,

@@ -68,6 +68,17 @@ SERVING_POLICIES: tuple = tuple(
 
 
 @dataclasses.dataclass
+class ProgramResult:
+    """Outcome of one in-band page-program pass (online remap rewrite)."""
+
+    latency_us: float = 0.0
+    energy_uj: float = 0.0
+    n_pages: int = 0
+    n_blocks: int = 0
+    bytes_programmed: int = 0
+
+
+@dataclasses.dataclass
 class SimResult:
     latency_us: float = 0.0
     energy_uj: float = 0.0        # total: array + IO bus + SRAM
@@ -456,19 +467,48 @@ class SLSSimulator:
         res.energy_uj += e_sram
         return res
 
-    # -- remapping overhead (paper §III-C4, Fig. 7/14) ----------------------
+    # -- remapping overhead (paper §III-C4, Fig. 7/14; DESIGN.md §5.3) ------
     def remap_cost(self, n_rows: int, vec_bytes: int) -> tuple[float, float]:
         """Latency (us) and energy (uJ) to physically rewrite ``n_rows``.
 
-        Read old pages + program new pages + erase retired blocks. Used for
-        the online-remapping overhead: RecFlash rewrites only the hot region;
-        a full-table remap rewrites every page.
+        Read old pages + program new pages + erase retired blocks, serially
+        — the bulk (stop-the-world) accounting ``Deployment.step_day``
+        charges as a lump sum. The request-level lane instead issues the
+        rewrite through :meth:`program_pass` so it competes with reads.
         """
         part = self.part
         vpp = max(1, part.page_bytes // vec_bytes)
         n_pages = -(-n_rows // vpp)
         n_blocks = -(-n_pages // part.pages_per_block)
-        lat = n_pages * (self.timing.t_ca + part.t_r + part.t_prog) \
-            + n_blocks * part.t_erase
+        lat = part.rewrite_latency_us(n_pages, n_blocks, self.timing.t_ca)
         energy = n_pages * (part.e_page_read + part.e_page_prog)
         return lat, energy
+
+    def program_pass(self, plane_counts: np.ndarray,
+                     n_blocks: int = 0) -> ProgramResult:
+        """In-band page-program traffic for an online remap (DESIGN.md §5.3).
+
+        ``plane_counts[p]`` pages are rewritten on plane ``p``. The pass
+        occupies this simulator's channel for ``latency_us``: per page C/A +
+        read-back (``t_r``) + program (``t_prog``), with the read/program
+        core overlapped across planes iff the policy has multi-plane
+        capability (``plane_parallel`` — same capability gate as reads),
+        plus one serial block erase per retired block. Programs trash the
+        device read state (page buffers latch programmed pages, the P$ may
+        hold stale pre-move copies), so the pass resets it — the post-remap
+        warm-up is part of the in-band cost.
+        """
+        plane_counts = np.asarray(plane_counts, dtype=np.int64)
+        part = self.part
+        n_pages = int(plane_counts.sum())
+        if n_pages == 0 and n_blocks == 0:
+            return ProgramResult()
+        lat = part.rewrite_latency_us(
+            n_pages, n_blocks, self.timing.t_ca,
+            plane_counts=plane_counts if self.policy.plane_parallel
+            else None)
+        energy = n_pages * (part.e_page_read + part.e_page_prog)
+        self.reset_state()
+        return ProgramResult(latency_us=lat, energy_uj=energy,
+                             n_pages=n_pages, n_blocks=n_blocks,
+                             bytes_programmed=n_pages * part.page_bytes)

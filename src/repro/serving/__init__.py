@@ -6,19 +6,24 @@ from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
 from repro.serving.deployment import (DayResult, Deployment,
                                       DeploymentConfig, TriggerConfig,
                                       arch_model_config)
-from repro.serving.metrics import LatencyReport, percentiles, summarize
+from repro.serving.metrics import (LatencyReport, percentiles, summarize,
+                                   tail_timeseries)
 from repro.serving.queueing import RequestQueue
-from repro.serving.scheduler import (LaneTrace, ServingScheduler,
-                                     build_policy_engines, replay)
-from repro.serving.workload import (Request, bursty_arrivals, make_requests,
-                                    poisson_arrivals)
+from repro.serving.scheduler import (LaneTrace, LiveRemapConfig, RemapEvent,
+                                     ServingScheduler, build_policy_engines,
+                                     replay)
+from repro.serving.workload import (DriftScenario, Request, bursty_arrivals,
+                                    diurnal_arrivals, make_drifting_requests,
+                                    make_requests, poisson_arrivals)
 
 __all__ = [
     "Batch", "BatcherConfig", "DynamicBatcher",
     "DayResult", "Deployment", "DeploymentConfig", "TriggerConfig",
     "arch_model_config",
-    "LatencyReport", "percentiles", "summarize",
+    "LatencyReport", "percentiles", "summarize", "tail_timeseries",
     "RequestQueue", "SERVING_POLICIES",
-    "LaneTrace", "ServingScheduler", "build_policy_engines", "replay",
-    "Request", "bursty_arrivals", "make_requests", "poisson_arrivals",
+    "LaneTrace", "LiveRemapConfig", "RemapEvent", "ServingScheduler",
+    "build_policy_engines", "replay",
+    "DriftScenario", "Request", "bursty_arrivals", "diurnal_arrivals",
+    "make_drifting_requests", "make_requests", "poisson_arrivals",
 ]

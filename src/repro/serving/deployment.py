@@ -13,10 +13,14 @@ sweep -> per-table ``AccessStats`` -> frequency-based mapping) once, builds
 one ``RecFlashEngine`` per policy, and exposes
 
 * ``stream(...)``       — materialise an open-loop request stream,
+                          optionally drifting (``DriftScenario``, §5.2),
 * ``run_stream(...)``   — replay it through every policy lane
-                          (``n_channels`` concurrent SLS servers per lane),
-* ``step_day(...)``     — one day of the online adaptive-remap loop
-                          (Fig. 14 / Algorithm 1),
+                          (``n_channels`` concurrent SLS servers per lane);
+                          with a trigger + ``LiveRemapConfig`` the lane
+                          remaps *in-band* mid-stream (DESIGN.md §5.3),
+* ``step_day(...)``     — one day of the **bulk** online adaptive-remap
+                          loop (Fig. 14 / Algorithm 1; see the
+                          bulk-vs-live decision table, DESIGN.md §5.4),
 * ``report()``          — per-policy tail-latency reports of the last run.
 """
 
@@ -32,11 +36,12 @@ from repro.flashsim.device import PARTS, CacheConfig
 from repro.flashsim.timeline import POLICIES, SERVING_POLICIES, SimResult
 from repro.serving.batcher import BatcherConfig
 from repro.serving.metrics import LatencyReport
-from repro.serving.scheduler import LaneTrace, replay
-from repro.serving.workload import (Request, bursty_arrivals, make_requests,
-                                    poisson_arrivals)
+from repro.serving.scheduler import LaneTrace, LiveRemapConfig, replay
+from repro.serving.workload import (ARRIVAL_PROCESSES, DriftScenario,
+                                    Request, diurnal_arrivals,
+                                    make_drifting_requests, make_requests)
 
-ARRIVALS = {"poisson": poisson_arrivals, "bursty": bursty_arrivals}
+ARRIVALS = ARRIVAL_PROCESSES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +115,13 @@ class DeploymentConfig:
     cache: CacheConfig | None = None
     batcher: BatcherConfig = dataclasses.field(default_factory=BatcherConfig)
     trigger: TriggerConfig | None = None
+    # drift scenario for streams built via ``stream()`` (DESIGN.md §5.2);
+    # None or kind='none' keeps the stationary path byte-identical.
+    scenario: DriftScenario | None = None
+    # in-band adaptive remapping for ``run_stream`` (DESIGN.md §5.3);
+    # requires ``trigger``. None keeps the replay remap-free (step_day
+    # remains the only consumer of the trigger, as before).
+    live_remap: LiveRemapConfig | None = None
     arch: str | None = None         # provenance (set by from_arch)
 
     def __post_init__(self):
@@ -126,6 +138,9 @@ class DeploymentConfig:
             raise ValueError("need at least one table")
         if self.n_channels < 1:
             raise ValueError("n_channels must be >= 1")
+        if self.live_remap is not None and self.trigger is None:
+            raise ValueError("live_remap requires a trigger "
+                             "(set TriggerConfig as well)")
 
     # -- registry constructors ------------------------------------------------
     @classmethod
@@ -162,6 +177,10 @@ class DeploymentConfig:
             batcher=dataclasses.asdict(self.batcher),
             trigger=dataclasses.asdict(self.trigger) if self.trigger
             else None,
+            scenario=dataclasses.asdict(self.scenario) if self.scenario
+            else None,
+            live_remap=dataclasses.asdict(self.live_remap)
+            if self.live_remap else None,
             arch=self.arch)
 
     @classmethod
@@ -174,6 +193,10 @@ class DeploymentConfig:
         d["batcher"] = BatcherConfig(**d.get("batcher", {}))
         if d.get("trigger") is not None:
             d["trigger"] = TriggerConfig(**d["trigger"])
+        if d.get("scenario") is not None:
+            d["scenario"] = DriftScenario(**d["scenario"])
+        if d.get("live_remap") is not None:
+            d["live_remap"] = LiveRemapConfig(**d["live_remap"])
         return cls(**d)
 
 
@@ -222,10 +245,18 @@ class Deployment:
     def stream(self, n_requests: int, rate_rps: float,
                arrival: str = "poisson", seed: int | None = None,
                arrival_seed: int | None = None,
+               scenario: DriftScenario | None = None,
                **arrival_kw) -> list[Request]:
         """Materialise an open-loop request stream matching the deployment's
         table shapes. ``seed`` defaults to the config seed; the arrival
-        process draws from ``arrival_seed`` (default ``seed + 2``)."""
+        process draws from ``arrival_seed`` (default ``seed + 2``).
+
+        ``scenario`` (default: the config's ``scenario``) makes the stream
+        non-stationary (DESIGN.md §5.2): ``gradual``/``flash_crowd``
+        rewrite the row stream on top of the base trace, ``diurnal``
+        replaces the arrival process with the rate-modulated one. With no
+        scenario (or kind ``'none'``) the stream is byte-identical to the
+        stationary path."""
         n_rows = self.cfg.tables[0].n_rows
         if any(t.n_rows != n_rows for t in self.cfg.tables):
             raise ValueError(
@@ -234,25 +265,61 @@ class Deployment:
                 "a per-table generator instead")
         seed = self.cfg.seed if seed is None else seed
         arrival_seed = seed + 2 if arrival_seed is None else arrival_seed
-        ts = ARRIVALS[arrival](n_requests, rate_rps, seed=arrival_seed,
-                               **arrival_kw)
-        return make_requests(n_requests, len(self.cfg.tables), n_rows,
-                             self.cfg.lookups, ts, k=self.cfg.k, seed=seed)
+        scenario = self.cfg.scenario if scenario is None else scenario
+        if scenario is not None and scenario.kind == "diurnal":
+            # the scenario owns the arrival process — reject a conflicting
+            # explicit request rather than silently ignoring it
+            if arrival not in ("poisson", "diurnal") or arrival_kw:
+                raise ValueError(
+                    "diurnal scenario replaces the arrival process; don't "
+                    f"also pass arrival={arrival!r} / arrival kwargs "
+                    f"{sorted(arrival_kw)}")
+            ts = diurnal_arrivals(n_requests, rate_rps,
+                                  amp=scenario.diurnal_amp,
+                                  period_us=scenario.diurnal_period_us,
+                                  seed=arrival_seed)
+        else:
+            ts = ARRIVALS[arrival](n_requests, rate_rps, seed=arrival_seed,
+                                   **arrival_kw)
+        if scenario is None or scenario.kind == "none":
+            return make_requests(n_requests, len(self.cfg.tables), n_rows,
+                                 self.cfg.lookups, ts, k=self.cfg.k,
+                                 seed=seed)
+        return make_drifting_requests(n_requests, len(self.cfg.tables),
+                                      n_rows, self.cfg.lookups, ts,
+                                      scenario, k=self.cfg.k, seed=seed)
 
     # -- serving --------------------------------------------------------------
     def run_stream(self, requests: list[Request],
                    record_window: bool = False,
                    batcher: BatcherConfig | None = None,
-                   n_channels: int | None = None) -> dict[str, LaneTrace]:
+                   n_channels: int | None = None,
+                   live: LiveRemapConfig | None = None
+                   ) -> dict[str, LaneTrace]:
         """Replay the stream through every policy lane; {policy: LaneTrace}.
 
         ``batcher``/``n_channels`` override the config for one run (the
-        benchmarks sweep batcher points against one shared deployment)."""
+        benchmarks sweep batcher points against one shared deployment).
+        ``n_channels`` applies *here* and not to :meth:`step_day`, which
+        serves each day as one bulk command on the engine's own simulator
+        and is channel-count independent (see its docstring) — channel
+        concurrency is a property of the request-level replay.
+
+        ``live`` (default: the config's ``live_remap``) arms the in-band
+        adaptive-remap loop on the remapping lanes (DESIGN.md §5.3): the
+        deployment trigger is evaluated mid-stream at window boundaries
+        and firing rewrites are charged as page-program traffic that
+        competes with the queued reads. Baseline lanes never remap either
+        way (paper §III-C4). With ``live`` unset the replay is remap-free
+        and bit-identical to the pre-live path even when a trigger is
+        configured."""
         batcher = self.cfg.batcher if batcher is None else batcher
         nc = self.cfg.n_channels if n_channels is None else n_channels
+        live = self.cfg.live_remap if live is None else live
+        trig = self.trigger if live is not None else None
         traces = {pol: replay(requests, eng, batcher,
                               record_window=record_window, policy_name=pol,
-                              n_channels=nc)
+                              n_channels=nc, trigger=trig, live=live)
                   for pol, eng in self.engines.items()}
         self.last_traces = traces
         return traces

@@ -1,9 +1,17 @@
-"""Per-request latency / throughput accounting (DESIGN.md §3.4).
+"""Per-request latency / throughput accounting (DESIGN.md §3.4, §5.4).
 
 A request's latency is completion minus arrival: queueing delay + batching
 delay + device service time of the batch it rode in. Percentiles use the
 linear-interpolation definition (``np.percentile`` default) so p50 of an
 odd-length sample is the median element exactly.
+
+``LatencyReport`` summarises a whole replay with one number per quantile;
+that hides *when* the tail happened, which is the entire point of the
+live-remap lane (DESIGN.md §5.4): an in-band rewrite shows up as a p99
+spike in one time bin followed by a lower steady state, not as a shift of
+the aggregate. ``tail_timeseries`` bins completions over the simulated
+clock and reports per-bin percentiles so the drift benchmark
+(``benchmarks/fig_drift_tail.py``) can show the spike-and-recover shape.
 """
 
 from __future__ import annotations
@@ -45,6 +53,35 @@ def percentiles(latencies_us: np.ndarray,
     if lat.size == 0:
         return tuple(0.0 for _ in qs)
     return tuple(float(np.percentile(lat, q)) for q in qs)
+
+
+def tail_timeseries(completions_us: np.ndarray, latencies_us: np.ndarray,
+                    bin_us: float, t0_us: float | None = None,
+                    qs=(50.0, 95.0, 99.0)):
+    """Per-time-bin latency percentiles over a replay (DESIGN.md §5.4).
+
+    Requests are bucketed by *completion* time into bins of ``bin_us``
+    starting at ``t0_us`` (default: the first completion). Returns
+    ``(bin_starts_us, counts, pcts)`` where ``pcts[i]`` is the tuple of
+    ``qs`` percentiles of bin ``i`` (empty bins report zeros). Binning by
+    completion attributes a stalled request to the moment its stall
+    resolved — which is when the spike is *visible* to clients.
+    """
+    comp = np.asarray(completions_us, dtype=np.float64)
+    lat = np.asarray(latencies_us, dtype=np.float64)
+    if comp.size == 0:
+        return (np.empty(0), np.empty(0, dtype=np.int64), [])
+    if bin_us <= 0:
+        raise ValueError("bin_us must be positive")
+    t0 = float(comp.min()) if t0_us is None else float(t0_us)
+    idx = np.floor((comp - t0) / bin_us).astype(np.int64)
+    idx = np.maximum(idx, 0)
+    n_bins = int(idx.max()) + 1
+    starts = t0 + bin_us * np.arange(n_bins)
+    counts = np.bincount(idx, minlength=n_bins)
+    pcts = [percentiles(lat[idx == b], qs) if counts[b] else
+            tuple(0.0 for _ in qs) for b in range(n_bins)]
+    return starts, counts, pcts
 
 
 def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,

@@ -27,6 +27,17 @@ offsets), batches are contiguous spans planned by
 and latencies/completions are written with one vectorised scatter per
 batch — no per-request Python anywhere in replay.
 
+**Live remap** (DESIGN.md §5.3): given a trigger and a
+``LiveRemapConfig``, the lane evaluates the trigger *mid-stream* at
+window boundaries of the simulated clock. A firing trigger runs the
+Algorithm-1 update (``RecFlashEngine.live_remap_step``) and the pages
+that actually moved come back as in-band page-program traffic: the work
+is split into chunks, distributed round-robin over the channels, and each
+chunk rides ahead of that channel's next serving batch — so queued reads
+stall behind remap programs (the tail-latency spike) instead of the world
+stopping, and the lane converges to the remapped layout's better steady
+state.
+
 The preferred entry point is ``repro.serving.Deployment``; the module-level
 ``build_policy_engines``/``ServingScheduler`` names are deprecated shims.
 """
@@ -35,14 +46,83 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
+from collections import deque
 
 import numpy as np
 
-from repro.core.engine import RecFlashEngine
+from repro.core.engine import RecFlashEngine, RemapPlan
+from repro.core.triggers import PeriodTrigger, ThresholdTrigger
 from repro.flashsim.timeline import SERVING_POLICIES
 from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
 from repro.serving.metrics import LatencyReport, summarize
 from repro.serving.workload import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveRemapConfig:
+    """In-band adaptive-remap settings for the replay lane (§5.3).
+
+    ``window_us`` is the online-window length: the trigger is evaluated
+    (and the window cleared) every ``window_us`` of simulated time, the
+    request-level analogue of ``step_day``'s day boundary. ``chunk_pages``
+    bounds how many page programs are issued contiguously: each chunk
+    slips in ahead of one serving batch on its channel, so smaller chunks
+    spread the rewrite thinner (lower spike, longer to converge) and
+    ``chunk_pages >=`` the whole plan degenerates to stop-the-world.
+    """
+
+    window_us: float = 250_000.0
+    chunk_pages: int = 64
+
+    def __post_init__(self):
+        if self.window_us <= 0:
+            raise ValueError("window_us must be positive")
+        if self.chunk_pages < 1:
+            raise ValueError("chunk_pages must be >= 1")
+
+
+@dataclasses.dataclass
+class RemapEvent:
+    """One mid-stream trigger firing and the in-band rewrite it caused."""
+
+    t_fire_us: float               # window boundary the trigger fired at
+    plan: RemapPlan                # what physically moved (core/engine.py)
+    program_latency_us: float = 0.0  # total channel time the programs took
+    energy_uj: float = 0.0
+    t_done_us: float = 0.0         # when the last program chunk finished
+    n_chunks: int = 0
+
+
+def _chunk_program_work(plan: RemapPlan, chunk_pages: int
+                        ) -> list[tuple[np.ndarray, int]]:
+    """Split a plan's page-program traffic into ``(plane_counts, n_blocks)``
+    chunks of at most ``chunk_pages`` pages; block erases are spread
+    evenly across the chunks. Pages are striped round-robin across planes
+    first, so every chunk stays as plane-balanced as the plan allows and
+    the multi-plane program overlap ``program_pass`` models is preserved
+    (a plane-sorted split would make chunks plane-homogeneous and
+    serialise what the device would overlap)."""
+    rep = np.repeat(np.arange(plan.plane_counts.size, dtype=np.int64),
+                    plan.plane_counts)
+    n = rep.size
+    # within-plane occurrence rank; ordering by (rank, plane) interleaves
+    # the planes: p0,p1,...,p0,p1,... until short planes run dry.
+    if n:
+        first = np.zeros(plan.plane_counts.size, dtype=np.int64)
+        np.cumsum(plan.plane_counts[:-1], out=first[1:])
+        rank = np.arange(n, dtype=np.int64) - first[rep]
+        plane_of_page = rep[np.lexsort((rep, rank))]
+    else:
+        plane_of_page = rep
+    n_chunks = max(1, -(-n // chunk_pages))
+    out = []
+    for j in range(n_chunks):
+        sl = plane_of_page[j * chunk_pages:(j + 1) * chunk_pages]
+        blocks = (plan.n_blocks * (j + 1)) // n_chunks \
+            - (plan.n_blocks * j) // n_chunks
+        out.append((np.bincount(sl, minlength=plan.plane_counts.size),
+                    int(blocks)))
+    return out
 
 
 def build_policy_engines(n_tables: int, n_rows: int, lookups: int,
@@ -81,6 +161,9 @@ class LaneTrace:
     n_channels: int = 1
     batch_channels: np.ndarray | None = None   # channel id per batch
     batch_starts_us: np.ndarray | None = None  # service start per batch
+    # mid-stream trigger firings + their in-band rewrites (empty unless
+    # replay ran with a trigger and a LiveRemapConfig, DESIGN.md §5.3)
+    remap_events: list[RemapEvent] = dataclasses.field(default_factory=list)
 
     def latency_of(self, rid: int, requests: list[Request] | None = None
                    ) -> float:
@@ -94,17 +177,35 @@ def replay(requests: list[Request], engine: RecFlashEngine,
            batcher_cfg: BatcherConfig | None = None,
            record_window: bool = False,
            policy_name: str | None = None,
-           n_channels: int = 1) -> LaneTrace:
+           n_channels: int = 1,
+           trigger: ThresholdTrigger | PeriodTrigger | None = None,
+           live: LiveRemapConfig | None = None) -> LaneTrace:
     """Run one policy lane over the whole request stream.
 
     ``n_channels`` is the lane's concurrent-server count (see module
     docstring); each channel gets its own device state via
     ``engine.channel_sims`` (n=1: the engine's own simulator; n>1: private
     planes/buffers and a 1/n slice of the controller P$ SRAM each).
+
+    With both ``trigger`` and ``live`` set (and a remapping policy), the
+    lane runs the live-remap loop (module docstring / DESIGN.md §5.3):
+    window recording is forced on, the trigger is evaluated at every
+    ``live.window_us`` boundary the lane's dispatch clock crosses, and a
+    firing trigger's page-program traffic is interleaved chunk-by-chunk
+    against the serving batches. Program chunks left over when the stream
+    ends are drained after the last batch (their time/energy count toward
+    the lane's busy/energy totals, not toward any request's latency).
+    With ``trigger`` or ``live`` absent the path is bit-identical to the
+    plain replay.
     """
     batcher = DynamicBatcher(batcher_cfg)
     name = policy_name or engine.policy.name
     n = len(requests)
+    live_active = (trigger is not None and live is not None
+                   and engine.policy.mapping_mode != "baseline")
+    if live_active:
+        record_window = True
+    remap_events: list[RemapEvent] = []
     # rids need not be dense 0..n-1 (sub-streams, filtered streams) —
     # account positionally against the input list.
     index_of = {r.rid: i for i, r in enumerate(requests)}
@@ -139,11 +240,55 @@ def replay(requests: list[Request], engine: RecFlashEngine,
                else np.empty(0, dtype=np.int64))
     row_all = (np.concatenate([r.rows for r in reqs]) if n
                else np.empty(0, dtype=np.int64))
+    # live-remap state: the next window boundary on the simulated clock and
+    # a per-channel FIFO of pending page-program chunks. Inert (boundary at
+    # +inf, empty FIFOs) unless live_active — the plain path is untouched.
+    next_boundary = (float(arrivals[0]) + live.window_us
+                     if live_active and n else float("inf"))
+    window_idx = 0
+    pending: list[deque] = [deque() for _ in range(n_channels)]
+
+    def _run_chunk(c: int) -> None:
+        """Serve one pending program chunk on channel ``c`` (in-band)."""
+        nonlocal busy, energy
+        ev, (pcounts, nblk) = pending[c].popleft()
+        pr = sims[c].program_pass(pcounts, nblk)
+        free[c] = max(float(free[c]), ev.t_fire_us) + pr.latency_us
+        busy += pr.latency_us
+        energy += pr.energy_uj
+        ev.program_latency_us += pr.latency_us
+        ev.energy_uj += pr.energy_uj
+        ev.t_done_us = max(ev.t_done_us, float(free[c]))
+        ev.n_chunks += 1
+
     pos = 0
     while pos < n:
         c = int(np.argmin(free))               # earliest-free channel
         end, dispatch = batcher.next_span(arrivals, pos,
                                           device_free_us=float(free[c]))
+        # window boundary crossed: evaluate the trigger at the boundary the
+        # lane's dispatch clock just passed (batch-granular, §5.3).
+        while dispatch >= next_boundary:
+            plan = engine.live_remap_step(trigger, window_idx)
+            t_fire = next_boundary
+            window_idx += 1
+            next_boundary += live.window_us
+            if plan is None:
+                continue
+            remap_events.append(RemapEvent(t_fire_us=t_fire, plan=plan))
+            if plan.n_pages_moved == 0:
+                continue
+            for sim in sims:
+                sim.reset_state()   # mappings swapped under every channel
+            chunks = _chunk_program_work(plan, live.chunk_pages)
+            for j, chunk in enumerate(chunks):
+                pending[j % n_channels].append((remap_events[-1], chunk))
+        if pending[c]:
+            # one program chunk rides ahead of this channel's next batch —
+            # the rewrite interleaves with serving instead of stopping it.
+            _run_chunk(c)
+            end, dispatch = batcher.next_span(arrivals, pos,
+                                              device_free_us=float(free[c]))
         lo, hi = offsets[pos], offsets[end]
         tables, rows = tab_all[lo:hi], row_all[lo:hi]
         start = max(dispatch, float(free[c]))
@@ -163,6 +308,11 @@ def replay(requests: list[Request], engine: RecFlashEngine,
         batch_channels.append(c)
         batch_starts.append(start)
         pos = end
+    # drain program chunks the stream ended before absorbing: they still
+    # cost channel time and energy, but no request waits on them.
+    for c in range(n_channels):
+        while pending[c]:
+            _run_chunk(c)
     first_arrival = min(r.arrival_us for r in requests) if requests else 0.0
     makespan = (float(completions.max()) - first_arrival) if n else 0.0
     # device_busy_frac = mean per-channel utilisation (== total busy /
@@ -174,7 +324,8 @@ def replay(requests: list[Request], engine: RecFlashEngine,
                      n_channels=n_channels,
                      batch_channels=np.asarray(batch_channels, dtype=np.int64),
                      batch_starts_us=np.asarray(batch_starts,
-                                                dtype=np.float64))
+                                                dtype=np.float64),
+                     remap_events=remap_events)
 
 
 class ServingScheduler:

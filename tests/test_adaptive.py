@@ -95,6 +95,55 @@ class TestAlgorithm1:
         assert len(order) == len(ht)
         assert None not in order
 
+    def test_compact_invariants(self):
+        """compact() is pure housekeeping: every observable — key set,
+        iteration order, hot region, threshold, frequencies, addresses —
+        is unchanged, and it is idempotent."""
+        ht, keys, freqs = make_table(n=200, hot_frac=0.1, seed=3)
+        # churn enough to leave several cold tombstones behind
+        rng = np.random.default_rng(7)
+        for _ in range(3):
+            upd = {int(k): int(freqs[0]) + int(rng.integers(1, 50))
+                   for k in rng.choice(keys, size=15, replace=False)}
+            ht.update(upd)
+        before = dict(
+            order=ht.keys_in_order(), hot=ht.hot_keys(),
+            thr_key=ht.threshold_key, thr_freq=ht.threshold_freq,
+            n=len(ht),
+            freqs={k: ht.freq_of(k) for k in ht.keys_in_order()},
+            addrs={k: ht.addr_of(k) for k in ht.keys_in_order()})
+        ht.compact()
+        assert ht.keys_in_order() == before["order"]
+        assert ht.hot_keys() == before["hot"]
+        assert ht.threshold_key == before["thr_key"]
+        assert ht.threshold_freq == before["thr_freq"]
+        assert len(ht) == before["n"]
+        assert {k: ht.freq_of(k) for k in ht.keys_in_order()} \
+            == before["freqs"]
+        assert {k: ht.addr_of(k) for k in ht.keys_in_order()} \
+            == before["addrs"]
+        assert None not in ht._cold
+        assert ht._cold_pos == {k: i for i, k in enumerate(ht._cold)}
+        ht.compact()                                     # idempotent
+        assert ht.keys_in_order() == before["order"]
+
+    def test_compact_then_update_equivalent(self):
+        """Updates behave identically on a compacted vs tombstoned table."""
+        ht_a, keys, freqs = make_table(n=150, hot_frac=0.1, seed=5)
+        ht_b, _, _ = make_table(n=150, hot_frac=0.1, seed=5)
+        first = {int(keys[120]): int(freqs[0]) + 5,
+                 int(keys[130]): int(freqs[0]) + 4}      # cold -> hot splices
+        ht_a.update(first)
+        ht_b.update(first)
+        ht_a.compact()                                   # only a compacts
+        second = {int(keys[140]): int(freqs[0]) + 9, 9999: 3}
+        rep_a = ht_a.update(second)
+        rep_b = ht_b.update(second)
+        assert ht_a.keys_in_order() == ht_b.keys_in_order()
+        assert ht_a.hot_keys() == ht_b.hot_keys()
+        assert (rep_a.n_inserted_hot, rep_a.n_appended_tail) \
+            == (rep_b.n_inserted_hot, rep_b.n_appended_tail)
+
 
 class TestTriggers:
     def test_threshold_fires_on_hot_influx(self):
@@ -113,6 +162,33 @@ class TestTriggers:
 
     def test_empty_window_never_fires(self):
         assert not ThresholdTrigger().should_trigger({}, 0)
+
+    def test_hot_key_exclusion_stable_distribution(self):
+        """Fig. 7 caption semantics: keys already inside the reference hot
+        region don't count as 'new', so a stable distribution — however
+        hot its traffic — must not re-trigger training every window."""
+        trig = ThresholdTrigger(top_frac=0.05, portion=0.01)
+        hot = frozenset(range(50))
+        # stable: the window's heavy hitters are exactly the hot region
+        window = {i: 1000 - i for i in range(50)}
+        assert trig.should_trigger(window, threshold_freq=10)  # no exclusion
+        assert not trig.should_trigger(window, threshold_freq=10,
+                                       hot_keys=hot)
+        # drift: the same counts on keys outside the hot region fire
+        drifted = {i + 1000: c for i, c in window.items()}
+        assert trig.should_trigger(drifted, threshold_freq=10, hot_keys=hot)
+
+    def test_hot_key_exclusion_partial_drift(self):
+        """Only the *new* above-threshold keys count toward the portion."""
+        trig = ThresholdTrigger(portion=0.25)
+        hot = frozenset({1, 2, 3})
+        # 4 entries, 1 new-hot (25%) -> not > portion -> no fire
+        window = {1: 100, 2: 100, 3: 100, 99: 100}
+        assert not trig.should_trigger(window, threshold_freq=10,
+                                       hot_keys=hot)
+        # 2 new-hot of 4 (50%) -> fire
+        window = {1: 100, 2: 100, 98: 100, 99: 100}
+        assert trig.should_trigger(window, threshold_freq=10, hot_keys=hot)
 
     def test_period_trigger(self):
         daily = PeriodTrigger(period_days=1)

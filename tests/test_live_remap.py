@@ -1,0 +1,338 @@
+"""Live-remap serving lane: drift scenarios, in-band rewrite, accounting
+(DESIGN.md §5.2-§5.4)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.engine import RecFlashEngine, TableSpec
+from repro.core.freq import AccessStats
+from repro.core.triggers import PeriodTrigger
+from repro.data.tracegen import popularity_perm
+from repro.flashsim.device import PARTS
+from repro.serving import (BatcherConfig, Deployment, DeploymentConfig,
+                           DriftScenario, LiveRemapConfig, TriggerConfig,
+                           diurnal_arrivals, make_drifting_requests,
+                           make_requests, poisson_arrivals)
+
+N_TABLES = 4
+N_ROWS = 20_000
+LOOKUPS = 8
+# load the drifting fixture replays at: high enough utilisation (~0.8)
+# that in-band program chunks visibly delay queued reads
+STREAM_RATE = 3000.0
+
+
+def dataclasses_replace_no_live(cfg: DeploymentConfig) -> DeploymentConfig:
+    """Same deployment, live lane disarmed (fresh engines, same offline
+    phase seeds, so the two replays share everything up to the remap)."""
+    d = cfg.to_dict()
+    d["live_remap"] = None
+    d["trigger"] = None
+    return DeploymentConfig.from_dict(d)
+
+
+def mk_config(**kw):
+    kw.setdefault("policies", ("recflash",))
+    kw.setdefault("batcher", BatcherConfig(max_batch=64, max_wait_us=1000.0))
+    return DeploymentConfig(tables=[TableSpec(N_ROWS, 128)] * N_TABLES,
+                            part="TLC", lookups=LOOKUPS, **kw)
+
+
+class TestDriftScenarios:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            DriftScenario(kind="nosuch")
+        with pytest.raises(ValueError):
+            DriftScenario(kind="gradual", ramp_end=0.0)
+        with pytest.raises(ValueError):
+            DriftScenario(kind="flash_crowd", spike_share=1.5)
+
+    def test_arrival_only_scenarios_keep_rows_identical(self):
+        ts = poisson_arrivals(200, 1000.0, seed=5)
+        base = make_requests(200, N_TABLES, N_ROWS, LOOKUPS, ts, seed=3)
+        for kind in ("none", "diurnal"):
+            drift = make_drifting_requests(200, N_TABLES, N_ROWS, LOOKUPS,
+                                           ts, DriftScenario(kind=kind),
+                                           seed=3)
+            for a, b in zip(base, drift):
+                np.testing.assert_array_equal(a.rows, b.rows)
+                np.testing.assert_array_equal(a.tables, b.tables)
+                assert a.arrival_us == b.arrival_us
+
+    def test_gradual_shift_retires_hot_rows(self):
+        n_req = 1000
+        ts = poisson_arrivals(n_req, 1000.0, seed=5)
+        scen = DriftScenario(kind="gradual", shift_frac=0.02, ramp_end=0.5)
+        reqs = make_drifting_requests(n_req, N_TABLES, N_ROWS, LOOKUPS, ts,
+                                      scen, seed=3)
+        n_shift = int(scen.shift_frac * N_ROWS)
+        retiring = {t: set(popularity_perm(N_ROWS, table=t)[:n_shift].tolist())
+                    for t in range(N_TABLES)}
+        replacement = {t: set(popularity_perm(N_ROWS, table=t)
+                              [N_ROWS - n_shift:].tolist())
+                       for t in range(N_TABLES)}
+
+        def counts(lo, hi, rowset):
+            n = 0
+            for r in reqs[lo:hi]:
+                for t in range(N_TABLES):
+                    sel = r.tables == t
+                    n += int(np.isin(r.rows[sel],
+                                     list(rowset[t])).sum())
+            return n
+
+        head = slice(0, 100)
+        tail = slice(n_req - 100, n_req)
+        # by stream end the ramp is complete: retiring rows are gone and
+        # their (previously coldest) replacements carry the hot traffic.
+        assert counts(head.start, head.stop, retiring) > 0
+        assert counts(tail.start, tail.stop, retiring) == 0
+        assert counts(tail.start, tail.stop, replacement) \
+            > counts(head.start, head.stop, replacement)
+
+    def test_flash_crowd_confined_to_spike_window(self):
+        n_req = 1000
+        ts = poisson_arrivals(n_req, 1000.0, seed=5)
+        scen = DriftScenario(kind="flash_crowd", spike_start=0.4,
+                             spike_len=0.2, spike_share=0.5, spike_rows=64)
+        reqs = make_drifting_requests(n_req, N_TABLES, N_ROWS, LOOKUPS, ts,
+                                      scen, seed=3)
+        block = {t: set(popularity_perm(N_ROWS, table=t)[-64:].tolist())
+                 for t in range(N_TABLES)}
+
+        def block_hits(lo, hi):
+            n = 0
+            for r in reqs[lo:hi]:
+                for t in range(N_TABLES):
+                    n += int(np.isin(r.rows[r.tables == t],
+                                     list(block[t])).sum())
+            return n
+
+        in_spike = block_hits(400, 600)
+        outside = block_hits(0, 400) + block_hits(600, n_req)
+        # the block is the popularity tail: essentially unseen outside the
+        # spike, ~spike_share of all accesses inside it.
+        assert in_spike > 100 * max(1, outside)
+
+    def test_diurnal_scenario_rejects_conflicting_arrival(self):
+        dep = Deployment(mk_config(
+            scenario=DriftScenario(kind="diurnal")))
+        with pytest.raises(ValueError):
+            dep.stream(50, 1000.0, arrival="bursty")
+        with pytest.raises(ValueError):
+            dep.stream(50, 1000.0, burst_factor=8.0)
+        assert len(dep.stream(50, 1000.0)) == 50
+
+    def test_diurnal_arrivals_rate_and_modulation(self):
+        n = 20_000
+        rate = 1000.0
+        period = 1e6
+        ts = diurnal_arrivals(n, rate, amp=0.8, period_us=period, seed=2)
+        assert np.all(np.diff(ts) >= 0)
+        mean_rate = n / (ts[-1] - ts[0]) * 1e6
+        assert mean_rate == pytest.approx(rate, rel=0.1)
+        # peak half-periods (sin > 0) must hold more arrivals than troughs
+        phase = np.sin(2 * np.pi * ts / period)
+        assert (phase > 0).sum() > 1.5 * (phase < 0).sum()
+
+
+class TestConfigRoundTrip:
+    def test_scenario_and_live_remap_round_trip(self):
+        cfg = mk_config(
+            trigger=TriggerConfig("threshold", top_frac=0.02, portion=0.02),
+            scenario=DriftScenario(kind="gradual", shift_frac=0.05),
+            live_remap=LiveRemapConfig(window_us=5e5, chunk_pages=32))
+        blob = json.dumps(cfg.to_dict())
+        cfg2 = DeploymentConfig.from_dict(json.loads(blob))
+        assert cfg2 == cfg
+
+    def test_live_remap_requires_trigger(self):
+        with pytest.raises(ValueError):
+            mk_config(live_remap=LiveRemapConfig())
+
+    def test_live_remap_config_validation(self):
+        with pytest.raises(ValueError):
+            LiveRemapConfig(window_us=0.0)
+        with pytest.raises(ValueError):
+            LiveRemapConfig(chunk_pages=0)
+
+
+class TestLiveRemapLane:
+    def test_unfired_trigger_is_bit_identical_to_plain_replay(self):
+        """An armed live lane whose trigger never fires must reproduce the
+        remap-free replay exactly (the acceptance bit-identity, in-tree)."""
+        plain = Deployment(mk_config(seed=11))
+        armed = Deployment(mk_config(
+            seed=11, trigger=TriggerConfig("period", period_days=10**6),
+            live_remap=LiveRemapConfig(window_us=2e5)))
+        reqs = plain.stream(300, 2000.0)
+        t_plain = plain.run_stream(reqs)["recflash"]
+        t_armed = armed.run_stream(reqs)["recflash"]
+        np.testing.assert_array_equal(t_plain.latencies_us,
+                                      t_armed.latencies_us)
+        np.testing.assert_array_equal(t_plain.completions_us,
+                                      t_armed.completions_us)
+        assert t_armed.remap_events == []
+        assert t_plain.report == t_armed.report
+
+    @pytest.fixture(scope="class")
+    def drift_run(self):
+        cfg = mk_config(
+            seed=11, hot_frac=0.05, sample_inferences=2048,
+            trigger=TriggerConfig("threshold", top_frac=0.05, portion=0.01),
+            scenario=DriftScenario(kind="gradual", shift_frac=0.05,
+                                   ramp_end=0.3),
+            live_remap=LiveRemapConfig(window_us=2.5e5, chunk_pages=32))
+        dep = Deployment(cfg)
+        old_mappings = [
+            (m.plane.copy(), m.page.copy(), m.slot.copy())
+            for m in dep.engine("recflash").sim.mappings]
+        reqs = dep.stream(1500, STREAM_RATE)
+        trace = dep.run_stream(reqs)["recflash"]
+        return dep, trace, old_mappings
+
+    def test_trigger_fires_mid_stream(self, drift_run):
+        _, trace, _ = drift_run
+        assert trace.remap_events
+        last_arrival = float(trace.completions_us.max())
+        for ev in trace.remap_events:
+            assert 0.0 < ev.t_fire_us < last_arrival
+            assert ev.t_done_us >= ev.t_fire_us
+            assert ev.n_chunks >= 1
+            assert ev.program_latency_us > 0.0
+            assert ev.energy_uj > 0.0
+
+    def test_charged_bytes_equal_pages_moved(self, drift_run):
+        _, trace, _ = drift_run
+        page_bytes = PARTS["TLC"].page_bytes
+        for ev in trace.remap_events:
+            p = ev.plan
+            assert p.n_pages_moved > 0
+            assert p.bytes_programmed == p.n_pages_moved * page_bytes
+            assert int(p.plane_counts.sum()) == p.n_pages_moved
+            # the hot region bounds what can move
+            vpp = page_bytes // 128
+            hot_pages_max = sum(
+                -(-max(1, int(round(N_ROWS * 0.05))) // vpp)
+                for _ in range(N_TABLES))
+            assert p.n_pages_moved <= hot_pages_max
+
+    def test_mappings_actually_swapped(self, drift_run):
+        dep, _, old_mappings = drift_run
+        changed = False
+        for m, (op, og, os_) in zip(dep.engine("recflash").sim.mappings,
+                                    old_mappings):
+            if not (np.array_equal(m.plane, op)
+                    and np.array_equal(m.page, og)
+                    and np.array_equal(m.slot, os_)):
+                changed = True
+        assert changed
+
+    def test_remap_interference_delays_service(self, drift_run):
+        """Requests in flight during the remap window complete later than
+        in a counterfactual replay of the same stream with the live lane
+        disarmed — the program chunks really do occupy the channel."""
+        dep, trace, _ = drift_run
+        plain_cfg = dataclasses_replace_no_live(dep.cfg)
+        plain = Deployment(plain_cfg)
+        reqs = plain.stream(1500, STREAM_RATE)
+        t_plain = plain.run_stream(reqs)["recflash"]
+        ev = trace.remap_events[0]
+        # requests arriving while the program chunks hold the channel must
+        # queue behind them; in the disarmed replay they are served at once
+        arrivals = np.array([r.arrival_us for r in reqs])
+        sel = (arrivals >= ev.t_fire_us) & (arrivals <= ev.t_done_us)
+        assert sel.any()
+        delay = trace.completions_us[sel] - t_plain.completions_us[sel]
+        assert float(delay.max()) > 0.0
+
+    def test_multi_channel_live_remap_serves_everyone(self):
+        """Chunks are spread round-robin over channels; every request is
+        still served exactly once and the events stay consistent."""
+        cfg = mk_config(
+            seed=11, hot_frac=0.05, sample_inferences=2048, n_channels=2,
+            trigger=TriggerConfig("threshold", top_frac=0.05, portion=0.01),
+            scenario=DriftScenario(kind="gradual", shift_frac=0.05,
+                                   ramp_end=0.3),
+            live_remap=LiveRemapConfig(window_us=2.5e5, chunk_pages=8))
+        dep = Deployment(cfg)
+        reqs = dep.stream(1000, STREAM_RATE)
+        tr = dep.run_stream(reqs)["recflash"]
+        assert tr.remap_events
+        assert sum(b.size for b in tr.batches) == len(reqs)
+        assert np.all(tr.completions_us > 0)
+        ev = tr.remap_events[0]
+        assert ev.n_chunks == -(-ev.plan.n_pages_moved // 8)
+
+    def test_baseline_lane_never_remaps(self):
+        cfg = mk_config(
+            policies=("rmssd", "recflash"), seed=11, hot_frac=0.05,
+            sample_inferences=2048,
+            trigger=TriggerConfig("period", period_days=1),
+            scenario=DriftScenario(kind="gradual", shift_frac=0.05,
+                                   ramp_end=0.3),
+            live_remap=LiveRemapConfig(window_us=2.5e5))
+        dep = Deployment(cfg)
+        reqs = dep.stream(400, 1000.0)
+        traces = dep.run_stream(reqs)
+        assert traces["rmssd"].remap_events == []
+        assert traces["recflash"].remap_events
+
+
+class TestEngineLiveRemapStep:
+    def _engine(self, hot_frac=0.1):
+        rng = np.random.default_rng(0)
+        counts = rng.integers(0, 50, size=(N_TABLES, N_ROWS))
+        stats = [AccessStats(counts[t]) for t in range(N_TABLES)]
+        return RecFlashEngine([TableSpec(N_ROWS, 128)] * N_TABLES,
+                              PARTS["TLC"], policy="recflash",
+                              sample_stats=stats, hot_frac=hot_frac)
+
+    def test_baseline_policy_returns_none(self):
+        eng = RecFlashEngine([TableSpec(N_ROWS, 128)], PARTS["TLC"],
+                             policy="rmssd")
+        eng.record_window(np.zeros(10, dtype=np.int64),
+                          np.arange(10, dtype=np.int64))
+        assert eng.live_remap_step(PeriodTrigger(1), 0) is None
+
+    def test_unfired_clears_window_and_keeps_mapping(self):
+        eng = self._engine()
+        eng.record_window(np.zeros(10, dtype=np.int64),
+                          np.arange(10, dtype=np.int64))
+        old = [m.page.copy() for m in eng.sim.mappings]
+        assert eng.live_remap_step(PeriodTrigger(10**6), 0) is None
+        assert int(eng.window_counts(0).sum()) == 0
+        for m, og in zip(eng.sim.mappings, old):
+            np.testing.assert_array_equal(m.page, og)
+
+    def test_plan_matches_independent_mapping_diff(self):
+        """The plan's page count must equal a from-scratch diff of the
+        mappings it swapped, restricted to the post-update hot region."""
+        eng = self._engine()
+        old = [(m.plane.copy(), m.page.copy(), m.slot.copy())
+               for m in eng.sim.mappings]
+        rng = np.random.default_rng(3)
+        tb = rng.integers(0, N_TABLES, size=5000)
+        rows = rng.integers(0, N_ROWS, size=5000)
+        eng.record_window(tb, rows)
+        plan = eng.live_remap_step(PeriodTrigger(1), 0)
+        assert plan is not None
+        n_pages = 0
+        planes = np.zeros(PARTS["TLC"].n_planes, dtype=np.int64)
+        for tid, (op, og, os_) in enumerate(old):
+            hot = np.asarray(eng.hash_tables[tid].hot_keys(), dtype=np.int64)
+            m = eng.sim.mappings[tid]
+            moved_rows = hot[(op[hot] != m.plane[hot])
+                             | (og[hot] != m.page[hot])
+                             | (os_[hot] != m.slot[hot])]
+            pages = np.unique(m.page[moved_rows])
+            n_pages += pages.size
+            for pg in pages:
+                planes[m.plane[moved_rows][
+                    m.page[moved_rows] == pg][0]] += 1
+        assert plan.n_pages_moved == n_pages
+        np.testing.assert_array_equal(plan.plane_counts, planes)
+        assert plan.bytes_programmed == n_pages * PARTS["TLC"].page_bytes
+        assert int(eng.window_counts(0).sum()) == 0

@@ -1,0 +1,85 @@
+"""Verify that every in-code ``DESIGN.md §x[.y]`` reference resolves.
+
+DESIGN.md's section numbers are a documented contract ("Section numbers
+are stable: source files reference them as `DESIGN.md §x.y`"), so a
+renumbering or a deleted section silently orphans every reference to it.
+This check greps the source tree for references and fails if any cited
+anchor has no matching ``#`` heading in DESIGN.md. Run via
+``make docs-check`` (wired into CI).
+
+Exit status: 0 = all references resolve, 1 = dangling references found.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SEARCH_DIRS = ("src", "tests", "benchmarks", "examples", "README.md")
+# any numeric §x[.y] token on a line that cites DESIGN.md counts as a
+# reference — this catches comma/range forms like "DESIGN.md §3.4, §5.4"
+# and "DESIGN.md §5.2-§5.4". Paper sections use roman numerals (§III-C),
+# so the numeric pattern cannot confuse the two.
+ANCHOR_TOKEN_RE = re.compile(r"§([0-9]+(?:\.[0-9]+)*)")
+HEADING_RE = re.compile(r"^#+\s+§([0-9]+(?:\.[0-9]+)*)\b", re.MULTILINE)
+
+
+def collect_anchors(design_path: pathlib.Path) -> set[str]:
+    return set(HEADING_RE.findall(design_path.read_text()))
+
+
+def collect_refs(root: pathlib.Path):
+    """Yield (path, lineno, anchor) for every DESIGN.md reference."""
+    targets = []
+    for entry in SEARCH_DIRS:
+        p = root / entry
+        if p.is_file():
+            targets.append(p)
+        elif p.is_dir():
+            targets.extend(sorted(p.rglob("*.py")))
+            targets.extend(sorted(p.rglob("*.md")))
+    for path in targets:
+        if "__pycache__" in path.parts:
+            continue
+        try:
+            text = path.read_text()
+        except UnicodeDecodeError:
+            continue
+        for i, line in enumerate(text.splitlines(), 1):
+            if "DESIGN.md" not in line:
+                continue
+            for m in ANCHOR_TOKEN_RE.finditer(line):
+                yield path, i, m.group(1)
+
+
+def main() -> int:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("docs-check: DESIGN.md not found", file=sys.stderr)
+        return 1
+    anchors = collect_anchors(design)
+    # a §x.y reference is also satisfied by its exact heading only, but a
+    # bare §x reference is satisfied by the top-level section heading.
+    n_refs = 0
+    dangling = []
+    for path, lineno, anchor in collect_refs(ROOT):
+        n_refs += 1
+        if anchor not in anchors:
+            dangling.append((path, lineno, anchor))
+    if dangling:
+        for path, lineno, anchor in dangling:
+            print(f"{path.relative_to(ROOT)}:{lineno}: dangling reference "
+                  f"DESIGN.md §{anchor} (no such heading)", file=sys.stderr)
+        print(f"docs-check: {len(dangling)} dangling of {n_refs} "
+              f"references; DESIGN.md anchors: "
+              f"{', '.join(sorted(anchors))}", file=sys.stderr)
+        return 1
+    print(f"docs-check: {n_refs} DESIGN.md references, all resolve "
+          f"({len(anchors)} anchors)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
