@@ -8,11 +8,14 @@ test:
 	$(PY) -m pytest -x -q
 
 # fast serving-benchmark smoke passes (CI-sized): the stationary tail
-# sweep plus the drifting live-remap lane (fig_drift_tail --smoke asserts
-# the spike-and-recovery acceptance shape, DESIGN.md §5.4)
+# sweep, the drifting live-remap lane (fig_drift_tail --smoke asserts the
+# spike-and-recovery acceptance shape, DESIGN.md §5.4), and the multi-SSD
+# scale-out sweep (fig_scaleout --smoke asserts saturated recflash
+# throughput scales >=1.8x from 1 to 2 devices, DESIGN.md §6)
 bench-smoke:
 	$(PY) benchmarks/fig_serving_tail.py --smoke
 	$(PY) benchmarks/fig_drift_tail.py --smoke
+	$(PY) benchmarks/fig_scaleout.py --smoke
 
 # simulator fast-path microbenchmark (DESIGN.md §2.3): smoke sweep into
 # BENCH_sim_smoke.json (the committed root BENCH_sim.json is the tracked

@@ -27,6 +27,115 @@ class TableSpec:
     n_rows: int
     vec_bytes: int
 
+    @property
+    def table_bytes(self) -> int:
+        return self.n_rows * self.vec_bytes
+
+
+SHARD_STRATEGIES = ("table", "row")
+
+
+class ShardPlan:
+    """Global (table, row) -> (device, local table, local row) routing
+    for a multi-SSD deployment (DESIGN.md §6.1).
+
+    Two strategies:
+
+    * ``table`` — whole tables round-robined over devices (table ``t`` on
+      device ``t % n_devices``); the classic RecSSD-style scale-out where
+      every table fits one drive. Local row ids equal global row ids.
+    * ``row``  — every device holds a slice of *every* table, rows striped
+      over devices by **hot rank** (the sampled-frequency rank order, the
+      same rank -> row convention ``popularity_perm``/``AccessStats.
+      rank_order`` define): the row at rank ``g`` lives on device
+      ``g % n_devices``. Striping by rank — not by row-id range — splits
+      the hot set evenly, so no device becomes the hot-traffic straggler.
+      Within a device, local row ids follow global row-id order (the
+      device's own offline phase then re-sorts its slice by frequency
+      exactly as a single-device deployment would).
+
+    The plan is a property of the *deployment*, shared by every policy
+    lane, so all policies see the identical device-level load split and
+    differ only in their per-device physical page mapping.
+    """
+
+    def __init__(self, tables: list[TableSpec],
+                 stats: "list[AccessStats]", n_devices: int,
+                 strategy: str = "table"):
+        if n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        if strategy not in SHARD_STRATEGIES:
+            raise ValueError(f"unknown shard strategy {strategy!r}; "
+                             f"have {SHARD_STRATEGIES}")
+        if len(stats) != len(tables):
+            raise ValueError("need one AccessStats per table")
+        self.strategy = strategy
+        self.n_devices = n_devices
+        self.n_tables = len(tables)
+        # per device: local TableSpecs and matching local AccessStats
+        self.device_tables: list[list[TableSpec]] = []
+        self.device_stats: list[list[AccessStats]] = []
+        if strategy == "table":
+            self.device_of_table = (np.arange(self.n_tables, dtype=np.int64)
+                                    % n_devices)
+            self.local_table_id = (np.arange(self.n_tables, dtype=np.int64)
+                                   // n_devices)
+            for d in range(n_devices):
+                owned = np.flatnonzero(self.device_of_table == d)
+                self.device_tables.append([tables[t] for t in owned])
+                self.device_stats.append([stats[t] for t in owned])
+            self.device_of_row = None
+            self.local_row_id = None
+        else:
+            # row-wise: rank g -> device g % n_devices, per table
+            self.device_of_table = None
+            self.local_table_id = None
+            self.device_of_row = []
+            self.local_row_id = []
+            owned_rows: list[list[np.ndarray]] = [[] for _ in
+                                                  range(n_devices)]
+            for t, (spec, st) in enumerate(zip(tables, stats)):
+                order = st.rank_order()            # rank -> global row
+                dev = np.empty(spec.n_rows, dtype=np.int64)
+                dev[order] = np.arange(spec.n_rows, dtype=np.int64) \
+                    % n_devices
+                local = np.empty(spec.n_rows, dtype=np.int64)
+                for d in range(n_devices):
+                    rows_d = np.flatnonzero(dev == d)   # global-id order
+                    local[rows_d] = np.arange(rows_d.size, dtype=np.int64)
+                    owned_rows[d].append(rows_d)
+                self.device_of_row.append(dev)
+                self.local_row_id.append(local)
+            for d in range(n_devices):
+                self.device_tables.append(
+                    [TableSpec(owned_rows[d][t].size, tables[t].vec_bytes)
+                     for t in range(self.n_tables)])
+                self.device_stats.append(
+                    [AccessStats(stats[t].counts[owned_rows[d][t]])
+                     for t in range(self.n_tables)])
+
+    def route(self, tables: np.ndarray, rows: np.ndarray
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorised routing of one access stream.
+
+        Returns ``(device, local_table, local_row)`` arrays aligned with
+        the input; the access order within each device's sub-stream is the
+        input order restricted to that device (the FTL sees sub-commands
+        in arrival order, exactly like the single-device lane).
+        """
+        tables = np.asarray(tables, dtype=np.int64).ravel()
+        rows = np.asarray(rows, dtype=np.int64).ravel()
+        if self.strategy == "table":
+            return (self.device_of_table[tables],
+                    self.local_table_id[tables], rows)
+        dev = np.empty(tables.size, dtype=np.int64)
+        lrow = np.empty(rows.size, dtype=np.int64)
+        for t in np.unique(tables):
+            sel = tables == t
+            dev[sel] = self.device_of_row[t][rows[sel]]
+            lrow[sel] = self.local_row_id[t][rows[sel]]
+        return dev, tables, lrow
+
 
 @dataclasses.dataclass
 class RemapPlan:
@@ -161,9 +270,7 @@ class RecFlashEngine:
         cache_cfg = self.sim.cache_cfg
         sliced = dataclasses.replace(
             cache_cfg, sram_bytes=cache_cfg.sram_bytes // n_channels)
-        return [SLSSimulator(self.part, self.policy, self.sim.mappings,
-                             self.sim.timing, sliced)
-                for _ in range(n_channels)]
+        return [self.sim.fork(sliced) for _ in range(n_channels)]
 
     def window_counts(self, tid: int) -> np.ndarray:
         """Dense access-count array for table ``tid``'s online window."""
@@ -311,3 +418,105 @@ class RecFlashEngine:
 
     def _clear_window(self) -> None:
         self._window_flat[:] = 0
+
+
+class ShardedEngine:
+    """N simulated SSDs behind one scatter-gather facade (DESIGN.md §6).
+
+    Owns a :class:`ShardPlan` plus one :class:`RecFlashEngine` per device —
+    each device gets its own ``FlashPart`` channel set, its own
+    ``SLSSimulator`` state (page buffers, controller P$ SRAM) and its own
+    online window / Algorithm-1 hash tables, built from the *local* slice
+    of the deployment's sampled offline stats. Adaptive remapping is
+    therefore device-local by construction: a device's trigger sees only
+    the accesses routed to it and its rewrite traffic occupies only its
+    own channels (§6.3).
+
+    ``serve``/``maybe_remap`` mirror the single-device engine so the bulk
+    online loop (``Deployment.step_day``) drives either transparently;
+    devices operate in parallel, so a served command's latency is the max
+    over devices while energy and access counters sum.
+    """
+
+    def __init__(self, tables: list[TableSpec], part: FlashPart,
+                 policy: str | PolicyConfig = "recflash",
+                 sample_stats: list[AccessStats] | None = None,
+                 hot_frac: float = 0.05,
+                 cache_cfg: CacheConfig | None = None,
+                 n_devices: int = 2, shard: str = "table",
+                 plan: ShardPlan | None = None):
+        self.tables = tables
+        self.part = part
+        self.policy = POLICIES[policy] if isinstance(policy, str) else policy
+        self.hot_frac = hot_frac
+        self.stats = sample_stats or [
+            AccessStats(np.zeros(t.n_rows, dtype=np.int64)) for t in tables]
+        # the plan depends only on (tables, stats, n_devices, shard), all
+        # policy-independent — a deployment builds it once and passes the
+        # same instance to every policy lane's engine
+        if plan is not None:
+            if plan.n_devices != n_devices or plan.strategy != shard:
+                raise ValueError("provided ShardPlan does not match "
+                                 f"n_devices={n_devices}/shard={shard!r}")
+            self.plan = plan
+        else:
+            self.plan = ShardPlan(tables, self.stats, n_devices, shard)
+        self.devices: list[RecFlashEngine] = [
+            RecFlashEngine(self.plan.device_tables[d], part,
+                           policy=self.policy,
+                           sample_stats=self.plan.device_stats[d],
+                           hot_frac=hot_frac, cache_cfg=cache_cfg)
+            for d in range(n_devices)]
+
+    @property
+    def n_devices(self) -> int:
+        return self.plan.n_devices
+
+    # -- bulk serving (Deployment.step_day) -----------------------------------
+    def serve(self, tables: np.ndarray, rows: np.ndarray,
+              record_window: bool = False, window: int = 0,
+              force_exact: bool = False) -> SimResult:
+        """Scatter one bulk SLS command over the devices; gather totals.
+
+        Latency is the **max** over per-device results (devices serve
+        their sub-commands concurrently — the gather-barrier rule, §6.2);
+        energy and access counters are sums. Window recording lands on
+        each device's own engine (device-local online windows).
+        """
+        dev, ltab, lrow = self.plan.route(tables, rows)
+        out = SimResult()
+        latency = 0.0
+        for d, eng in enumerate(self.devices):
+            sel = dev == d
+            if not sel.any():
+                continue
+            r = eng.serve(ltab[sel], lrow[sel], record_window=record_window,
+                          window=window, force_exact=force_exact)
+            out = out.merge(r)
+            latency = max(latency, r.latency_us)
+        out.latency_us = latency
+        return out
+
+    def maybe_remap(self, day: int,
+                    trigger: ThresholdTrigger | PeriodTrigger
+                    ) -> DayLog | None:
+        """Device-local end-of-day trigger pass (§6.3).
+
+        Each device evaluates the trigger on its *own* window counts and
+        pays only its own rewrite. Fired devices rewrite concurrently, so
+        the merged lump-sum latency is the max over devices while energy
+        and update-report counters sum. Returns ``None`` when no device
+        fired.
+        """
+        fired = [log for log in (eng.maybe_remap(day, trigger)
+                                 for eng in self.devices) if log is not None]
+        if not fired:
+            return None
+        merged = UpdateReport()
+        for log in fired:
+            if log.update_report is not None:
+                merged += log.update_report
+        return DayLog(day=day, inference=SimResult(), triggered=True,
+                      remap_latency_us=max(l.remap_latency_us for l in fired),
+                      remap_energy_uj=sum(l.remap_energy_uj for l in fired),
+                      update_report=merged)

@@ -19,6 +19,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 
 @dataclasses.dataclass
 class CompressionState:
@@ -38,7 +40,7 @@ def compressed_psum(g: jax.Array, axis_name: str,
     exact in the quantized domain, so compression error comes only from the
     local quantization step (which error feedback absorbs).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     g32 = g.astype(jnp.float32)
     if state is not None:
         g32 = g32 + state.residual

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
+
 
 def local_shard_lookup(local_table: jax.Array, indices: jax.Array,
                        shard_id: jax.Array, rows_per_shard: int) -> jax.Array:
@@ -73,7 +75,7 @@ def make_sharded_bag(mesh, table_spec: P, index_spec: P, out_spec: P,
     def fn(table, indices):
         return sharded_embedding_bag(table, indices, axis_name, mode)
 
-    return jax.shard_map(fn, mesh=mesh,
+    return shard_map(fn, mesh=mesh,
                          in_specs=(table_spec, index_spec),
                          out_specs=out_spec, check_vma=False)
 
@@ -100,7 +102,7 @@ def sharded_embedding_bag_2d(table: jax.Array, indices: jax.Array,
     """
     rows_per_shard = table.shape[0]
     idx_full = jax.lax.all_gather(indices, data_axis, axis=0, tiled=True)
-    sid = (jax.lax.axis_index(model_axis) * jax.lax.axis_size(data_axis)
+    sid = (jax.lax.axis_index(model_axis) * axis_size(data_axis)
            + jax.lax.axis_index(data_axis))
     if rank_of is not None:
         # phase 1: logical id -> stored rank through the sharded hash table

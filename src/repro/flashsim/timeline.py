@@ -140,6 +140,20 @@ class SLSSimulator:
         if self.cache is not None:
             self.cache.clear()
 
+    def fork(self, cache_cfg: CacheConfig | None = None) -> "SLSSimulator":
+        """Independent simulator over the *same* mappings list.
+
+        The fork gets private planes/page buffers/cache state (fresh, not
+        copied) but shares the FTL mapping objects, so an online
+        ``replace_mapping`` on any fork is visible to all of them. This is
+        the building block for concurrency views of one device: per-channel
+        sims slice the controller P$ budget (``RecFlashEngine.
+        channel_sims``), while multi-SSD scale-out gives each *device* its
+        own full-budget simulator instead (DESIGN.md §6).
+        """
+        return SLSSimulator(self.part, self.policy, self.mappings,
+                            self.timing, cache_cfg or self.cache_cfg)
+
     def replace_mapping(self, table: int, mapping: Mapping) -> None:
         """Swap in a new remapped layout (after online remapping)."""
         self.mappings[table] = mapping

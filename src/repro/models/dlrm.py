@@ -19,6 +19,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.embedding.bag import embedding_bag_dense
 from repro.models.common import mlp, mlp_init
 
@@ -134,7 +135,7 @@ def _bag(params, indices, t: int, mesh, axes, hybrid: bool = False,
     if table_2d and axes is not None:
         tspec = P(("model", "data"), None)
         ro = params.get("rank_of")
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda tb, ix, *r: sharded_embedding_bag_2d(
                 tb, ix, r[0] if r else None),
             mesh=mesh,
@@ -144,13 +145,13 @@ def _bag(params, indices, t: int, mesh, axes, hybrid: bool = False,
         args = (table, indices) + ((ro[t],) if ro else ())
         return fn(*args)
     if "rank_of" in params:
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda tb, ro, ix: sharded_remapped_bag(tb, ro, ix, "model",
                                                     scatter=hybrid),
             mesh=mesh, in_specs=(P("model", None), P("model"), ispec),
             out_specs=ospec, check_vma=False)
         return fn(table, params["rank_of"][t], indices)
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda tb, ix: sharded_embedding_bag(tb, ix, "model",
                                              scatter=hybrid),
         mesh=mesh, in_specs=(P("model", None), ispec),

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models import moe as moe_lib
 from repro.models import mla as mla_lib
 from repro.models.attention import decode_attention, flash_attention
@@ -178,7 +179,7 @@ def _cp_attention(q, k, v, cfg: LMConfig, mesh):
             q_chunk=min(cfg.q_chunk, t_loc), kv_chunk=cfg.kv_chunk,
             q_start=start)
 
-    fn = jax.shard_map(inner, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
+    fn = shard_map(inner, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
                        out_specs=qspec, check_vma=False)
     return fn(q, k, v)
 
@@ -247,7 +248,7 @@ def _moe_block(p, x, cfg: LMConfig, mesh):
         return moe_lib.moe_ffn(p, x, cfg.moe)
     xspec = P(cfg.batch_axes, None, None)
     if cfg.ep_2d:
-        fn = jax.shard_map(
+        fn = shard_map(
             functools.partial(moe_lib.moe_ffn_2d, cfg=cfg.moe,
                               model_axis=cfg.ep_axis, data_axis="data",
                               batch_axes=cfg.batch_axes,
@@ -255,7 +256,7 @@ def _moe_block(p, x, cfg: LMConfig, mesh):
             mesh=mesh, in_specs=(_moe_specs_2d(cfg), xspec), out_specs=xspec,
             check_vma=False)
         return fn(p, x)
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(moe_lib.moe_ffn_sharded, cfg=cfg.moe,
                           axis_name=cfg.ep_axis),
         mesh=mesh, in_specs=(_moe_specs(cfg), xspec), out_specs=xspec,

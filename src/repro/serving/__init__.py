@@ -11,7 +11,7 @@ from repro.serving.metrics import (LatencyReport, percentiles, summarize,
 from repro.serving.queueing import RequestQueue
 from repro.serving.scheduler import (LaneTrace, LiveRemapConfig, RemapEvent,
                                      ServingScheduler, build_policy_engines,
-                                     replay)
+                                     replay, replay_sharded)
 from repro.serving.workload import (DriftScenario, Request, bursty_arrivals,
                                     diurnal_arrivals, make_drifting_requests,
                                     make_requests, poisson_arrivals)
@@ -23,7 +23,7 @@ __all__ = [
     "LatencyReport", "percentiles", "summarize", "tail_timeseries",
     "RequestQueue", "SERVING_POLICIES",
     "LaneTrace", "LiveRemapConfig", "RemapEvent", "ServingScheduler",
-    "build_policy_engines", "replay",
+    "build_policy_engines", "replay", "replay_sharded",
     "DriftScenario", "Request", "bursty_arrivals", "diurnal_arrivals",
     "make_drifting_requests", "make_requests", "poisson_arrivals",
 ]

@@ -2,7 +2,8 @@
 
 ``DeploymentConfig`` captures everything a serving deployment needs —
 tables, flash part, policy set, cache, batcher, trigger, hot fraction,
-sampling seed, channel count — as a serializable dataclass
+sampling seed, channel count, device count + shard strategy (multi-SSD
+scale-out, DESIGN.md §6) — as a serializable dataclass
 (``to_dict``/``from_dict`` round-trip through JSON), with ``from_arch``
 constructors that pull shapes from the architecture registry (dlrm_rm2,
 dlrm_mlperf, rmc1/2/3, dlrm_small).
@@ -28,7 +29,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.engine import DayLog, RecFlashEngine, TableSpec
+from repro.core.engine import (SHARD_STRATEGIES, DayLog, RecFlashEngine,
+                               ShardedEngine, ShardPlan, TableSpec)
 from repro.core.freq import AccessStats
 from repro.core.triggers import PeriodTrigger, ThresholdTrigger
 from repro.data.tracegen import generate_sls_batch
@@ -36,7 +38,8 @@ from repro.flashsim.device import PARTS, CacheConfig
 from repro.flashsim.timeline import POLICIES, SERVING_POLICIES, SimResult
 from repro.serving.batcher import BatcherConfig
 from repro.serving.metrics import LatencyReport
-from repro.serving.scheduler import LaneTrace, LiveRemapConfig, replay
+from repro.serving.scheduler import (LaneTrace, LiveRemapConfig, replay,
+                                     replay_sharded)
 from repro.serving.workload import (ARRIVAL_PROCESSES, DriftScenario,
                                     Request, diurnal_arrivals,
                                     make_drifting_requests, make_requests)
@@ -112,6 +115,22 @@ class DeploymentConfig:
     # replay (run_stream); step_day serves each day's trace as one bulk
     # command on the engine simulator and is channel-count independent.
     n_channels: int = 1
+    # multi-SSD scale-out (DESIGN.md §6): number of simulated SSDs per
+    # lane and the shard strategy splitting the tables across them —
+    # "table" (whole tables round-robined) or "row" (every table striped
+    # over devices by hot rank). ``n_devices`` multiplies the channel
+    # count: each device brings its own ``n_channels`` channels and its
+    # own controller P$ SRAM. ``n_devices=1`` is the single-device lane,
+    # bit-identical to the pre-scale-out path.
+    n_devices: int = 1
+    shard: str = "table"
+    # per-SSD capacity in bytes, used to gate the *shard strategy*:
+    # validation and ``from_arch`` check the largest single table
+    # (table-wise) / its per-device row slice (row-wise) against it.
+    # Deliberately not a bin-packing model — aggregate occupancy of a
+    # device across tables is not enforced (DESIGN.md §6.1). None =
+    # capacity not modeled, any table fits any device.
+    device_bytes: int | None = None
     cache: CacheConfig | None = None
     batcher: BatcherConfig = dataclasses.field(default_factory=BatcherConfig)
     trigger: TriggerConfig | None = None
@@ -138,6 +157,26 @@ class DeploymentConfig:
             raise ValueError("need at least one table")
         if self.n_channels < 1:
             raise ValueError("n_channels must be >= 1")
+        if self.n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        if self.shard not in SHARD_STRATEGIES:
+            raise ValueError(f"unknown shard strategy {self.shard!r}; "
+                             f"have {SHARD_STRATEGIES}")
+        if self.device_bytes is not None and self.device_bytes < 1:
+            raise ValueError("device_bytes must be positive (or None)")
+        if self.device_bytes is not None:
+            if self.shard == "table" and any(
+                    t.table_bytes > self.device_bytes for t in self.tables):
+                raise ValueError(
+                    "a table overflows device_bytes under table-wise "
+                    "sharding; use shard='row' (from_arch picks it "
+                    "automatically)")
+            if self.shard == "row" and any(
+                    -(-t.n_rows // self.n_devices) * t.vec_bytes
+                    > self.device_bytes for t in self.tables):
+                raise ValueError(
+                    "a table's per-device row slice overflows device_bytes "
+                    "even under row-wise sharding; increase n_devices")
         if self.live_remap is not None and self.trigger is None:
             raise ValueError("live_remap requires a trigger "
                              "(set TriggerConfig as well)")
@@ -153,6 +192,11 @@ class DeploymentConfig:
         Heterogeneous-vocab archs (dlrm_mlperf) are uniformised to the
         paper's 1M-rows-per-table serving convention unless ``n_rows``
         overrides it; ``n_tables``/``lookups`` override the arch shape.
+
+        When ``device_bytes`` is given (per-SSD capacity) and no explicit
+        ``shard`` override is, the shard strategy is picked automatically:
+        row-wise iff a single table would overflow one device, table-wise
+        otherwise (DESIGN.md §6.1).
         """
         shape = _arch_shape(arch)
         if n_rows is None:
@@ -161,6 +205,10 @@ class DeploymentConfig:
                       else min(1_000_000, max(vocabs)))
         n_tables = shape.n_tables if n_tables is None else n_tables
         tables = [TableSpec(n_rows, shape.embed_dim * 4)] * n_tables
+        device_bytes = overrides.get("device_bytes")
+        if "shard" not in overrides and device_bytes is not None:
+            overrides["shard"] = ("row" if any(
+                t.table_bytes > device_bytes for t in tables) else "table")
         return cls(tables=tables, part=part,
                    lookups=shape.lookups if lookups is None else lookups,
                    arch=arch.lower().replace("-", "_"), **overrides)
@@ -172,7 +220,8 @@ class DeploymentConfig:
             part=self.part, policies=list(self.policies),
             lookups=self.lookups, hot_frac=self.hot_frac, k=self.k,
             seed=self.seed, sample_inferences=self.sample_inferences,
-            n_channels=self.n_channels,
+            n_channels=self.n_channels, n_devices=self.n_devices,
+            shard=self.shard, device_bytes=self.device_bytes,
             cache=dataclasses.asdict(self.cache) if self.cache else None,
             batcher=dataclasses.asdict(self.batcher),
             trigger=dataclasses.asdict(self.trigger) if self.trigger
@@ -231,14 +280,33 @@ class Deployment:
                             for t in range(n_tables)]
         self.stats = sample_stats
         self.trigger = cfg.trigger.build() if cfg.trigger else None
-        self.engines: dict[str, RecFlashEngine] = {
-            pol: RecFlashEngine(list(cfg.tables), self.part, policy=pol,
-                                sample_stats=self.stats,
-                                hot_frac=cfg.hot_frac, cache_cfg=cfg.cache)
-            for pol in cfg.policies}
+        # n_devices == 1 keeps the plain single-device engine (and replay
+        # path) so the pre-scale-out lane stays bit-identical; n > 1 builds
+        # one ShardedEngine per policy — N devices, each with its own
+        # simulator/window/hash-table state, sharing one ShardPlan derived
+        # from the deployment stats (DESIGN.md §6).
+        self.engines: dict[str, RecFlashEngine | ShardedEngine]
+        if cfg.n_devices == 1:
+            self.engines = {
+                pol: RecFlashEngine(list(cfg.tables), self.part, policy=pol,
+                                    sample_stats=self.stats,
+                                    hot_frac=cfg.hot_frac,
+                                    cache_cfg=cfg.cache)
+                for pol in cfg.policies}
+        else:
+            plan = ShardPlan(list(cfg.tables), self.stats, cfg.n_devices,
+                             cfg.shard)
+            self.engines = {
+                pol: ShardedEngine(list(cfg.tables), self.part, policy=pol,
+                                   sample_stats=self.stats,
+                                   hot_frac=cfg.hot_frac,
+                                   cache_cfg=cfg.cache,
+                                   n_devices=cfg.n_devices, shard=cfg.shard,
+                                   plan=plan)
+                for pol in cfg.policies}
         self.last_traces: dict[str, LaneTrace] | None = None
 
-    def engine(self, policy: str) -> RecFlashEngine:
+    def engine(self, policy: str) -> RecFlashEngine | ShardedEngine:
         return self.engines[policy]
 
     # -- request streams ------------------------------------------------------
@@ -312,14 +380,22 @@ class Deployment:
         competes with the queued reads. Baseline lanes never remap either
         way (paper §III-C4). With ``live`` unset the replay is remap-free
         and bit-identical to the pre-live path even when a trigger is
-        configured."""
+        configured.
+
+        With ``n_devices > 1`` the replay is the scatter-gather dispatch
+        over the deployment's shard plan (DESIGN.md §6.2): every device
+        runs its own batcher/channels/remap loop over its sub-stream and a
+        request completes at the max of its device completions. Live remap
+        is then device-local — each device's trigger sees only its own
+        window counts (§6.3)."""
         batcher = self.cfg.batcher if batcher is None else batcher
         nc = self.cfg.n_channels if n_channels is None else n_channels
         live = self.cfg.live_remap if live is None else live
         trig = self.trigger if live is not None else None
-        traces = {pol: replay(requests, eng, batcher,
-                              record_window=record_window, policy_name=pol,
-                              n_channels=nc, trigger=trig, live=live)
+        run = (replay_sharded if self.cfg.n_devices > 1 else replay)
+        traces = {pol: run(requests, eng, batcher,
+                           record_window=record_window, policy_name=pol,
+                           n_channels=nc, trigger=trig, live=live)
                   for pol, eng in self.engines.items()}
         self.last_traces = traces
         return traces

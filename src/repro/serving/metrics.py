@@ -35,8 +35,14 @@ class LatencyReport:
     throughput_rps: float      # completed requests / makespan
     mean_batch_size: float
     n_batches: int
-    device_busy_frac: float    # service time / makespan (utilisation)
+    device_busy_frac: float    # mean per-channel-per-device utilisation
     energy_uj: float
+    # multi-SSD scale-out (DESIGN.md §6): device count and each device's
+    # own mean per-channel utilisation over the *global* makespan — the
+    # load-balance diagnostic for a shard plan (an idle device shows up
+    # as a low entry, not washed into the mean). Empty for 1-device lanes.
+    n_devices: int = 1
+    device_busy_fracs: tuple = ()
 
     def row(self) -> str:
         return (f"{self.policy:14s} p50 {self.p50_us / 1e3:9.2f}  "
@@ -86,7 +92,8 @@ def tail_timeseries(completions_us: np.ndarray, latencies_us: np.ndarray,
 
 def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,
               batch_sizes: list[int], busy_us: float,
-              energy_uj: float = 0.0) -> LatencyReport:
+              energy_uj: float = 0.0, *, n_devices: int = 1,
+              device_busy_fracs: tuple = ()) -> LatencyReport:
     lat = np.asarray(latencies_us, dtype=np.float64)
     p50, p95, p99 = percentiles(lat)
     makespan_us = max(makespan_us, 1e-9)
@@ -102,4 +109,6 @@ def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,
         n_batches=len(batch_sizes),
         device_busy_frac=busy_us / makespan_us,
         energy_uj=energy_uj,
+        n_devices=n_devices,
+        device_busy_fracs=tuple(device_busy_fracs),
     )

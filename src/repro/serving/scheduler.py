@@ -38,6 +38,11 @@ stall behind remap programs (the tail-latency spike) instead of the world
 stopping, and the lane converges to the remapped layout's better steady
 state.
 
+**Multi-SSD scale-out** (DESIGN.md §6.2): ``replay_sharded`` lifts the
+same lane onto N simulated SSDs — scatter each request's accesses to the
+devices owning them, run this single-device replay per device, and gather
+each request at the max of its device completions (the barrier rule).
+
 The preferred entry point is ``repro.serving.Deployment``; the module-level
 ``build_policy_engines``/``ServingScheduler`` names are deprecated shims.
 """
@@ -50,7 +55,7 @@ from collections import deque
 
 import numpy as np
 
-from repro.core.engine import RecFlashEngine, RemapPlan
+from repro.core.engine import RecFlashEngine, RemapPlan, ShardedEngine
 from repro.core.triggers import PeriodTrigger, ThresholdTrigger
 from repro.flashsim.timeline import SERVING_POLICIES
 from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
@@ -164,6 +169,15 @@ class LaneTrace:
     # mid-stream trigger firings + their in-band rewrites (empty unless
     # replay ran with a trigger and a LiveRemapConfig, DESIGN.md §5.3)
     remap_events: list[RemapEvent] = dataclasses.field(default_factory=list)
+    # total channel time consumed (service + in-band programs), summed over
+    # channels — the raw quantity behind report.device_busy_frac
+    busy_us: float = 0.0
+    # multi-SSD scatter-gather replay (DESIGN.md §6.2): device count and
+    # the per-device sub-traces the gather was computed from. For a
+    # sharded trace, ``batch_channels`` carries *global* channel ids
+    # (device d's channels are [d*n_channels, (d+1)*n_channels)).
+    n_devices: int = 1
+    device_traces: "list[LaneTrace] | None" = None
 
     def latency_of(self, rid: int, requests: list[Request] | None = None
                    ) -> float:
@@ -325,7 +339,110 @@ def replay(requests: list[Request], engine: RecFlashEngine,
                      batch_channels=np.asarray(batch_channels, dtype=np.int64),
                      batch_starts_us=np.asarray(batch_starts,
                                                 dtype=np.float64),
-                     remap_events=remap_events)
+                     remap_events=remap_events, busy_us=busy)
+
+
+def replay_sharded(requests: list[Request], engine: ShardedEngine,
+                   batcher_cfg: BatcherConfig | None = None,
+                   record_window: bool = False,
+                   policy_name: str | None = None,
+                   n_channels: int = 1,
+                   trigger: ThresholdTrigger | PeriodTrigger | None = None,
+                   live: LiveRemapConfig | None = None) -> LaneTrace:
+    """Scatter-gather replay over N simulated SSDs (DESIGN.md §6.2).
+
+    **Scatter** — the stream is routed once through the engine's
+    :class:`~repro.core.engine.ShardPlan`; each request fans out into one
+    sub-request per device that owns any of its tables/rows, carrying the
+    device-local (table, row) ids in the original access order. **Per
+    device** — each device runs the ordinary single-device :func:`replay`
+    over its sub-stream: its own dynamic batcher, its own
+    earliest-free-channel dispatch over its own ``n_channels`` channels,
+    its own window recording and (with ``trigger`` + ``live``) its own
+    device-local in-band remap loop — devices share nothing, so their
+    simulated clocks advance independently. **Gather** — a request
+    completes at the **max** of its per-device sub-completions (the gather
+    barrier: the host reassembles the SLS result only when the last owning
+    device answers) and its latency is that barrier minus arrival.
+
+    With ``n_devices == 1`` every array the single device sees is
+    value-identical to the unsharded stream, so the result is bit-identical
+    to :func:`replay` (regression-tested).
+
+    The returned trace aggregates the lane: ``busy_us``/energy sum over
+    devices, ``batch_channels`` hold global channel ids
+    (``device * n_channels + channel``), ``remap_events`` merge in firing
+    order, and per-device sub-traces stay available as ``device_traces``.
+    """
+    nd = engine.plan.n_devices
+    name = policy_name or engine.policy.name
+    n = len(requests)
+    index_of = {r.rid: i for i, r in enumerate(requests)}
+    if len(index_of) != n:
+        raise ValueError("duplicate request rids in stream")
+    # scatter: route the whole stream's concatenated accesses in one pass
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum([r.rows.size for r in requests], out=offsets[1:])
+    tab_all = (np.concatenate([r.tables for r in requests]) if n
+               else np.empty(0, dtype=np.int64))
+    row_all = (np.concatenate([r.rows for r in requests]) if n
+               else np.empty(0, dtype=np.int64))
+    dev, ltab, lrow = engine.plan.route(tab_all, row_all)
+    sub: list[list[Request]] = [[] for _ in range(nd)]
+    members: list[list[int]] = [[] for _ in range(nd)]  # input positions
+    for i, r in enumerate(requests):
+        lo, hi = int(offsets[i]), int(offsets[i + 1])
+        dslice = dev[lo:hi]
+        for d in np.unique(dslice):
+            sel = dslice == d
+            sub[d].append(r.subset(ltab[lo:hi][sel], lrow[lo:hi][sel]))
+            members[d].append(i)
+    # per-device single-device replay (independent simulated clocks)
+    arrivals = np.fromiter((r.arrival_us for r in requests),
+                           dtype=np.float64, count=n)
+    completions = np.zeros(n, dtype=np.float64)
+    device_traces: list[LaneTrace] = []
+    for d in range(nd):
+        tr = replay(sub[d], engine.devices[d], batcher_cfg,
+                    record_window=record_window, policy_name=name,
+                    n_channels=n_channels, trigger=trigger, live=live)
+        device_traces.append(tr)
+        if members[d]:
+            pos = np.asarray(members[d], dtype=np.int64)
+            # gather barrier: completion = max over owning devices
+            np.maximum.at(completions, pos, tr.completions_us)
+    latencies = completions - arrivals
+    # lane-level aggregation
+    busy = sum(tr.busy_us for tr in device_traces)
+    energy = sum(tr.report.energy_uj for tr in device_traces)
+    batches: list[Batch] = []
+    batch_channels: list[int] = []
+    batch_starts: list[float] = []
+    for d, tr in enumerate(device_traces):
+        batches.extend(tr.batches)
+        batch_channels.extend((d * n_channels + c)
+                              for c in tr.batch_channels.tolist())
+        batch_starts.extend(tr.batch_starts_us.tolist())
+    remap_events = sorted((ev for tr in device_traces
+                           for ev in tr.remap_events),
+                          key=lambda ev: ev.t_fire_us)
+    first_arrival = float(arrivals.min()) if n else 0.0
+    makespan = (float(completions.max()) - first_arrival) if n else 0.0
+    span = max(makespan, 1e-9)
+    report = summarize(
+        name, latencies, makespan, [b.size for b in batches],
+        busy / (nd * n_channels), energy, n_devices=nd,
+        device_busy_fracs=tuple(tr.busy_us / n_channels / span
+                                for tr in device_traces))
+    return LaneTrace(report=report, batches=batches, latencies_us=latencies,
+                     completions_us=completions, index_of=index_of,
+                     n_channels=n_channels,
+                     batch_channels=np.asarray(batch_channels,
+                                               dtype=np.int64),
+                     batch_starts_us=np.asarray(batch_starts,
+                                                dtype=np.float64),
+                     remap_events=remap_events, busy_us=busy,
+                     n_devices=nd, device_traces=device_traces)
 
 
 class ServingScheduler:

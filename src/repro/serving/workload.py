@@ -45,6 +45,17 @@ class Request:
     def n_lookups(self) -> int:
         return int(self.rows.size)
 
+    def subset(self, tables: np.ndarray, rows: np.ndarray) -> "Request":
+        """The same request carrying a substituted access stream.
+
+        Used by the scatter phase of the multi-SSD dispatch (DESIGN.md
+        §6.2): a request fans out into one sub-request per owning device,
+        each keeping the parent's ``rid``/arrival (the gather barrier joins
+        them back on the rid) with the device-local slice of the accesses.
+        """
+        return Request(rid=self.rid, arrival_us=self.arrival_us,
+                       tables=tables, rows=rows)
+
 
 def poisson_arrivals(n: int, rate_rps: float, seed: int = 0) -> np.ndarray:
     """``n`` sorted arrival timestamps (us) at ``rate_rps`` requests/sec."""

@@ -10,6 +10,7 @@ import sys
 import jax
 import jax.numpy as jnp
 
+from repro.compat import compiled_cost_analysis
 from repro.launch.hlo_stats import hlo_stats
 
 ENV = {**os.environ,
@@ -46,7 +47,7 @@ class TestFlopsCounting:
         assert s["flops"] == 12 * 2 * 32 * 64 * 64
         # XLA cost_analysis undercounts (body visited once) — our reason
         # for existing:
-        assert c.cost_analysis()["flops"] < s["flops"]
+        assert compiled_cost_analysis(c)["flops"] < s["flops"]
 
     def test_nested_scans_multiply(self):
         x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
@@ -76,11 +77,12 @@ class TestCollectiveParsing:
         run("""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
 from repro.launch.hlo_stats import hlo_stats
-mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("d",))
 def f(x):
     return jax.lax.psum(x, "d")
-fn = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+fn = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
                    check_vma=False)
 x = jax.ShapeDtypeStruct((1024,), jnp.float32)
 c = jax.jit(fn).lower(x).compile()
@@ -96,14 +98,15 @@ assert abs(ar["wire_bytes"] - expect) / expect < 0.01, (ar, expect)
         run("""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
 from repro.launch.hlo_stats import hlo_stats
-mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("d",))
 def f(x):
     def body(c, _):
         return jax.lax.psum(c, "d") * 0.125, None
     y, _ = jax.lax.scan(body, x, None, length=6)
     return y
-fn = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+fn = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
                    check_vma=False)
 x = jax.ShapeDtypeStruct((256,), jnp.float32)
 c = jax.jit(fn).lower(x).compile()
@@ -117,11 +120,12 @@ assert ar["wire_bytes"] >= 5.5 * expect_one, (ar, expect_one)
         run("""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh, shard_map
 from repro.launch.hlo_stats import hlo_stats
-mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("d",))
 def f(x):
     return jax.lax.all_gather(x, "d", axis=0, tiled=True)
-fn = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(),
+fn = shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(),
                    check_vma=False)
 x = jax.ShapeDtypeStruct((64, 16), jnp.float32)
 c = jax.jit(fn).lower(x).compile()

@@ -32,16 +32,20 @@ class TestRecFlashSLS:
         hot, cold, idx = _inputs(h, v, d, b, l, jnp.float32)
         out = sls_raw(hot, cold, idx, block_b=8, interpret=True)
         ref = ops.sls_ref(hot, cold, idx)
-        np.testing.assert_allclose(out, ref, rtol=1e-6)
+        # the kernel accumulates its bag sequentially (fori_loop) while the
+        # oracle reduces pairwise — f32 sums of L terms legitimately differ
+        # by O(L*eps), so the bound is 1e-5, not bit-level 1e-6
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
 
-    @pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-6),
+    @pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5),
                                             (jnp.bfloat16, 2e-2)])
     def test_dtypes(self, dtype, rtol):
         hot, cold, idx = _inputs(32, 256, 16, 16, 8, dtype)
         out = sls_raw(hot, cold, idx, block_b=8, interpret=True)
         ref = ops.sls_ref(hot, cold, idx)
         np.testing.assert_allclose(np.asarray(out, np.float32),
-                                   np.asarray(ref, np.float32), rtol=rtol)
+                                   np.asarray(ref, np.float32), rtol=rtol,
+                                   atol=1e-6)
 
     def test_all_hot_and_all_cold_paths(self):
         hot, cold, _ = _inputs(32, 64, 8, 8, 4, jnp.float32)
@@ -61,7 +65,7 @@ class TestRecFlashSLS:
         hot, cold, idx = _inputs(32, 128, 8, 16, 4, jnp.float32)
         out = ops.recflash_sls(hot, cold, idx)
         np.testing.assert_allclose(out, ops.sls_ref(hot, cold, idx),
-                                   rtol=1e-6)
+                                   rtol=1e-5, atol=1e-6)
 
 
 class TestDotInteraction:

@@ -26,9 +26,9 @@ def run(script: str):
 PREAMBLE = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import make_mesh, shard_map
 assert len(jax.devices()) == 8
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 """
 
 
@@ -55,7 +55,7 @@ counts = np.random.default_rng(0).integers(0, 50, 64)
 spec = RemapSpec.from_counts(counts, n_shards=4)
 stored = remap_table(table, spec)
 idx = jax.random.randint(jax.random.PRNGKey(1), (16, 5), 0, 64, jnp.int32)
-fn = jax.shard_map(
+fn = shard_map(
     lambda tb, ro, ix: sharded_remapped_bag(tb, ro, ix, "model"),
     mesh=mesh, in_specs=(P("model", None), P("model"), P("data", None)),
     out_specs=P("data", None), check_vma=False)
@@ -92,7 +92,7 @@ g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
 def f(g):
     out, _ = compressed_psum(g, "data", None)
     return out
-fn = jax.shard_map(f, mesh=mesh, in_specs=P("data", None),
+fn = shard_map(f, mesh=mesh, in_specs=P("data", None),
                    out_specs=P("data", None), check_vma=False)
 out = jax.jit(fn)(g)
 # reference: mean over the data shards of each shard's rows
@@ -109,7 +109,7 @@ def step(g, res):
     st = CompressionState(residual=res)
     out, st2 = compressed_psum(g, "data", st, bits=4)
     return out, st2.residual
-fn = jax.shard_map(step, mesh=mesh,
+fn = shard_map(step, mesh=mesh,
                    in_specs=(P("data", None), P("data", None)),
                    out_specs=(P("data", None), P("data", None)),
                    check_vma=False)
@@ -136,7 +136,7 @@ x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 16))
 local = moe.moe_ffn(params, x, cfg)
 specs = {"router": P(), "w_gate": P("model"), "w_up": P("model"),
          "w_down": P("model")}
-fn = jax.shard_map(lambda p, xx: moe.moe_ffn_sharded(p, xx, cfg),
+fn = shard_map(lambda p, xx: moe.moe_ffn_sharded(p, xx, cfg),
                    mesh=mesh, in_specs=(specs, P("data", None, None)),
                    out_specs=P("data", None, None), check_vma=False)
 out = jax.jit(fn)(params, x)
@@ -158,7 +158,7 @@ specs = {"router": P(),
          "shared": {"w_gate": {"w": P(None, ("data", "model"))},
                     "w_up": {"w": P(None, ("data", "model"))},
                     "w_down": {"w": P(("data", "model"), None)}}}
-fn = jax.shard_map(
+fn = shard_map(
     lambda p, xx: moe.moe_ffn_2d(p, xx, cfg, batch_axes=("data",)),
     mesh=mesh, in_specs=(specs, P("data", None, None)),
     out_specs=P("data", None, None), check_vma=False)
@@ -179,8 +179,7 @@ sh1 = NamedSharding(mesh, P("data", "model"))
 tree1 = jax.tree.map(lambda x: jax.device_put(x, sh1), tree)
 ckpt.save(d, 1, tree1)
 # restore onto a different mesh shape (4,2)
-mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = make_mesh((4, 2), ("data", "model"))
 sh2 = {"w": NamedSharding(mesh2, P("model", "data"))}
 out = ckpt.restore(d, 1, tree, sh2)
 np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
@@ -215,7 +214,7 @@ from repro.embedding.layout import RemapSpec, remap_table
 V, D, B, L = 64, 8, 16, 5
 table = jax.random.normal(jax.random.PRNGKey(0), (V, D))
 idx = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0, V, jnp.int32)
-fn = jax.shard_map(lambda tb, ix: sharded_embedding_bag_2d(tb, ix),
+fn = shard_map(lambda tb, ix: sharded_embedding_bag_2d(tb, ix),
                    mesh=mesh,
                    in_specs=(P(("model", "data"), None), P("data", None)),
                    out_specs=P(("data", "model"), None), check_vma=False)
@@ -226,7 +225,7 @@ np.testing.assert_allclose(np.asarray(jax.jit(fn)(table, idx)),
 counts = np.random.default_rng(0).integers(0, 50, V)
 spec = RemapSpec.from_counts(counts, n_shards=8)
 stored = remap_table(table, spec)
-fn2 = jax.shard_map(lambda tb, ix, ro: sharded_embedding_bag_2d(tb, ix, ro),
+fn2 = shard_map(lambda tb, ix, ro: sharded_embedding_bag_2d(tb, ix, ro),
                     mesh=mesh,
                     in_specs=(P(("model", "data"), None), P("data", None),
                               P(("model", "data"))),

@@ -50,8 +50,8 @@ class TestCheckpoint:
         from jax.sharding import NamedSharding, PartitionSpec as P
         tree = {"x": jnp.arange(8, dtype=jnp.float32)}
         ckpt.save(str(tmp_path), 1, tree)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((1,), ("data",))
         sh = {"x": NamedSharding(mesh, P())}
         out = ckpt.restore(str(tmp_path), 1, tree, sh)
         np.testing.assert_array_equal(out["x"], tree["x"])

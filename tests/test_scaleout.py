@@ -1,0 +1,319 @@
+"""Multi-SSD scale-out: shard-plan routing, scatter-gather invariants,
+device-local remap, and n_devices=1 bit-identity (DESIGN.md §6)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.engine import ShardedEngine, ShardPlan, TableSpec
+from repro.core.freq import AccessStats
+from repro.flashsim.device import PARTS
+from repro.serving import (BatcherConfig, Deployment, DeploymentConfig,
+                           DriftScenario, LiveRemapConfig, TriggerConfig,
+                           replay, replay_sharded)
+
+N_TABLES = 4
+N_ROWS = 5_000
+
+
+def mk_config(n_devices=1, shard="table", **kw):
+    kw.setdefault("policies", ("recflash",))
+    return DeploymentConfig(
+        tables=[TableSpec(N_ROWS, 64)] * N_TABLES, part="TLC", lookups=8,
+        n_devices=n_devices, shard=shard, **kw)
+
+
+def mk_stats(seed=0):
+    rng = np.random.default_rng(seed)
+    return [AccessStats(rng.integers(0, 50, N_ROWS).astype(np.int64))
+            for _ in range(N_TABLES)]
+
+
+class TestShardPlan:
+    def test_table_wise_round_robin_and_local_ids(self):
+        tables = [TableSpec(N_ROWS, 64)] * N_TABLES
+        plan = ShardPlan(tables, mk_stats(), 2, "table")
+        tb = np.arange(N_TABLES, dtype=np.int64)
+        rows = np.arange(N_TABLES, dtype=np.int64) * 7
+        dev, ltab, lrow = plan.route(tb, rows)
+        np.testing.assert_array_equal(dev, tb % 2)
+        np.testing.assert_array_equal(ltab, tb // 2)
+        np.testing.assert_array_equal(lrow, rows)   # rows untouched
+        assert [len(t) for t in plan.device_tables] == [2, 2]
+
+    def test_row_wise_stripes_hot_ranks_and_partitions_vocab(self):
+        tables = [TableSpec(N_ROWS, 64)] * N_TABLES
+        stats = mk_stats(3)
+        nd = 3
+        plan = ShardPlan(tables, stats, nd, "row")
+        for t in range(N_TABLES):
+            order = stats[t].rank_order()
+            # rank g lives on device g % nd (hot-rank striping)
+            np.testing.assert_array_equal(
+                plan.device_of_row[t][order],
+                np.arange(N_ROWS, dtype=np.int64) % nd)
+            # owned rows partition the vocab; local ids are dense 0..k-1
+            seen = np.zeros(N_ROWS, dtype=bool)
+            for d in range(nd):
+                owned = np.flatnonzero(plan.device_of_row[t] == d)
+                assert not seen[owned].any()
+                seen[owned] = True
+                np.testing.assert_array_equal(
+                    np.sort(plan.local_row_id[t][owned]),
+                    np.arange(owned.size))
+                assert plan.device_tables[d][t].n_rows == owned.size
+                # local stats carry the owned rows' global counts
+                np.testing.assert_array_equal(
+                    plan.device_stats[d][t].counts, stats[t].counts[owned])
+            assert seen.all()
+
+    def test_row_wise_balances_hot_load(self):
+        """Each device owns an equal (±1) share of every hot prefix."""
+        tables = [TableSpec(N_ROWS, 64)] * N_TABLES
+        stats = mk_stats(1)
+        plan = ShardPlan(tables, stats, 2, "row")
+        hot = stats[0].rank_order()[:100]           # 100 hottest rows
+        per_dev = np.bincount(plan.device_of_row[0][hot], minlength=2)
+        assert abs(int(per_dev[0]) - int(per_dev[1])) <= 1
+
+    def test_validation(self):
+        tables = [TableSpec(N_ROWS, 64)]
+        with pytest.raises(ValueError):
+            ShardPlan(tables, mk_stats()[:1], 0, "table")
+        with pytest.raises(ValueError):
+            ShardPlan(tables, mk_stats()[:1], 2, "diagonal")
+        with pytest.raises(ValueError):
+            ShardPlan(tables, mk_stats(), 2, "table")  # stats mismatch
+
+
+class TestConfig:
+    def test_round_trip_with_scaleout_fields(self):
+        cfg = mk_config(n_devices=4, shard="row", device_bytes=1 << 20,
+                        seed=5)
+        blob = json.dumps(cfg.to_dict())
+        cfg2 = DeploymentConfig.from_dict(json.loads(blob))
+        assert cfg2 == cfg
+        assert (cfg2.n_devices, cfg2.shard, cfg2.device_bytes) \
+            == (4, "row", 1 << 20)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            mk_config(n_devices=0)
+        with pytest.raises(ValueError):
+            mk_config(shard="diagonal")
+        with pytest.raises(ValueError):   # table overflows a device
+            mk_config(n_devices=2, shard="table",
+                      device_bytes=N_ROWS * 64 - 1)
+
+    def test_from_arch_auto_picks_row_on_overflow(self):
+        table_bytes = 10_000 * 32 * 4                 # rmc1 embed_dim = 32
+        cfg = DeploymentConfig.from_arch(
+            "rmc1", n_rows=10_000, n_tables=4, lookups=5, n_devices=2,
+            device_bytes=table_bytes - 1)
+        assert cfg.shard == "row"
+        cfg = DeploymentConfig.from_arch(
+            "rmc1", n_rows=10_000, n_tables=4, lookups=5, n_devices=2,
+            device_bytes=table_bytes + 1)
+        assert cfg.shard == "table"
+        # an explicit shard override wins over the capacity heuristic
+        cfg = DeploymentConfig.from_arch(
+            "rmc1", n_rows=10_000, n_tables=4, lookups=5, n_devices=2,
+            shard="row")
+        assert cfg.shard == "row"
+
+
+class TestSingleDeviceBitIdentity:
+    @pytest.mark.parametrize("shard", ["table", "row"])
+    def test_sharded_replay_matches_plain_at_one_device(self, shard):
+        """The scatter-gather path with one device must reproduce the
+        plain single-device replay bit for bit (acceptance criterion)."""
+        cfg = mk_config(seed=11,
+                        batcher=BatcherConfig(max_batch=8, max_wait_us=300.0))
+        dep = Deployment(cfg)
+        reqs = dep.stream(64, 2000.0, arrival="bursty")
+        plain = replay(reqs, dep.engines["recflash"], cfg.batcher)
+        sharded = ShardedEngine(list(cfg.tables), PARTS["TLC"],
+                                policy="recflash", sample_stats=dep.stats,
+                                n_devices=1, shard=shard)
+        tr = replay_sharded(reqs, sharded, cfg.batcher)
+        np.testing.assert_array_equal(tr.latencies_us, plain.latencies_us)
+        np.testing.assert_array_equal(tr.completions_us,
+                                      plain.completions_us)
+        assert tr.busy_us == plain.busy_us
+        assert tr.report.throughput_rps == plain.report.throughput_rps
+
+    def test_deployment_uses_plain_engines_at_one_device(self):
+        from repro.core.engine import RecFlashEngine
+        dep = Deployment(mk_config())
+        assert all(isinstance(e, RecFlashEngine)
+                   for e in dep.engines.values())
+
+
+def mk_sharded_trace(shard="table", n_devices=2, n=96, rate=20_000.0,
+                     n_channels=1, seed=7, **kw):
+    cfg = mk_config(n_devices=n_devices, shard=shard, seed=seed,
+                    batcher=BatcherConfig(max_batch=4, max_wait_us=100.0),
+                    n_channels=n_channels, **kw)
+    dep = Deployment(cfg)
+    reqs = dep.stream(n, rate)
+    return dep, reqs, dep.run_stream(reqs)["recflash"]
+
+
+class TestScatterGatherInvariants:
+    @pytest.mark.parametrize("shard", ["table", "row"])
+    def test_no_sub_lookup_served_before_arrival(self, shard):
+        _, reqs, tr = mk_sharded_trace(shard)
+        arrival = {r.rid: r.arrival_us for r in reqs}
+        for dtr in tr.device_traces:
+            for b, start in zip(dtr.batches, dtr.batch_starts_us):
+                for r in b.requests:
+                    assert start >= arrival[r.rid] - 1e-9
+
+    @pytest.mark.parametrize("shard", ["table", "row"])
+    def test_latency_is_max_over_device_completions(self, shard):
+        _, reqs, tr = mk_sharded_trace(shard)
+        arrival = np.array([r.arrival_us for r in reqs])
+        comp = np.zeros(len(reqs))
+        seen = np.zeros(len(reqs), dtype=int)
+        for dtr in tr.device_traces:
+            for rid, j in dtr.index_of.items():
+                i = tr.index_of[rid]
+                comp[i] = max(comp[i], float(dtr.completions_us[j]))
+                seen[i] += 1
+        assert seen.min() >= 1                 # every request reached a device
+        np.testing.assert_array_equal(tr.completions_us, comp)
+        np.testing.assert_array_equal(tr.latencies_us, comp - arrival)
+        assert np.all(tr.latencies_us > 0)
+
+    @pytest.mark.parametrize("shard", ["table", "row"])
+    def test_per_device_busy_time_conservation(self, shard):
+        nc = 2
+        _, reqs, tr = mk_sharded_trace(shard, n_channels=nc)
+        assert tr.n_devices == 2
+        total = 0.0
+        for d, dtr in enumerate(tr.device_traces):
+            # device busy == sum of its batches' service times
+            svc = 0.0
+            for b, start in zip(dtr.batches, dtr.batch_starts_us):
+                done = dtr.completions_us[dtr.index_of[b.requests[0].rid]]
+                svc += float(done) - float(start)
+            assert dtr.busy_us == pytest.approx(svc)
+            total += dtr.busy_us
+        assert tr.busy_us == pytest.approx(total)
+        # report utilisation: mean over devices x channels of global makespan
+        makespan = tr.completions_us.max() - min(r.arrival_us for r in reqs)
+        assert tr.report.device_busy_frac == pytest.approx(
+            total / (2 * nc) / makespan)
+        assert tr.report.n_devices == 2
+        assert len(tr.report.device_busy_fracs) == 2
+        assert sum(tr.report.device_busy_fracs) * nc * makespan \
+            == pytest.approx(total)
+
+    def test_global_channel_ids_partition_by_device(self):
+        _, _, tr = mk_sharded_trace("table", n_channels=2)
+        for d, dtr in enumerate(tr.device_traces):
+            n_dev_batches = len(dtr.batches)
+            assert n_dev_batches > 0
+        # batch_channels hold device * n_channels + channel
+        devs = tr.batch_channels // 2
+        assert set(devs.tolist()) == {0, 1}
+
+    def test_table_wise_routes_only_owned_tables(self):
+        _, _, tr = mk_sharded_trace("table")
+        for d, dtr in enumerate(tr.device_traces):
+            for b in dtr.batches:
+                # local table ids on device d come from globals t%2 == d
+                assert b.tables.max() < 2      # 4 tables over 2 devices
+        # row-wise: every device sees every (global) table id
+        _, _, tr = mk_sharded_trace("row")
+        for dtr in tr.device_traces:
+            seen = set()
+            for b in dtr.batches:
+                seen.update(np.unique(b.tables).tolist())
+            assert seen == set(range(N_TABLES))
+
+    def test_saturated_throughput_scales_with_devices(self):
+        """Mirror of the fig_scaleout smoke at test scale, on the
+        cache-free rmssd lane (channel-count precedent: the P$ slice
+        caveat of test_deployment)."""
+        thr = {}
+        for nd in (1, 2):
+            cfg = mk_config(n_devices=nd, policies=("rmssd",),
+                            batcher=BatcherConfig(max_batch=1,
+                                                  max_wait_us=0.0))
+            dep = Deployment(cfg)
+            reqs = dep.stream(128, 50_000.0)
+            thr[nd] = dep.run_stream(reqs)["rmssd"].report.throughput_rps
+        assert thr[2] > 1.5 * thr[1]
+
+
+class TestDeviceLocalRemap:
+    def mk_drift_deployment(self, n_devices=2, shard="row"):
+        return Deployment(DeploymentConfig(
+            tables=[TableSpec(N_ROWS, 64)] * N_TABLES, part="TLC",
+            lookups=8, policies=("recflash",), seed=5,
+            sample_inferences=2048, n_devices=n_devices, shard=shard,
+            batcher=BatcherConfig(max_batch=16, max_wait_us=300.0),
+            trigger=TriggerConfig("period", period_days=1),
+            scenario=DriftScenario(kind="gradual", shift_frac=0.05,
+                                   ramp_end=0.3),
+            live_remap=LiveRemapConfig(window_us=100_000.0,
+                                       chunk_pages=16)))
+
+    @pytest.mark.parametrize("shard", ["table", "row"])
+    def test_remap_events_are_device_local(self, shard):
+        dep = self.mk_drift_deployment(shard=shard)
+        reqs = dep.stream(256, 2000.0)
+        tr = dep.run_stream(reqs)["recflash"]
+        assert tr.remap_events, "trigger never fired under drift"
+        # merged lane events are exactly the per-device events, time-sorted
+        per_dev = [ev for dtr in tr.device_traces
+                   for ev in dtr.remap_events]
+        assert sorted(map(id, tr.remap_events)) == sorted(map(id, per_dev))
+        fires = [ev.t_fire_us for ev in tr.remap_events]
+        assert fires == sorted(fires)
+        # a device's program traffic is charged to its own busy time only
+        for dtr in tr.device_traces:
+            prog = sum(ev.program_latency_us for ev in dtr.remap_events)
+            svc = 0.0
+            for b, start in zip(dtr.batches, dtr.batch_starts_us):
+                done = dtr.completions_us[dtr.index_of[b.requests[0].rid]]
+                svc += float(done) - float(start)
+            assert dtr.busy_us == pytest.approx(svc + prog)
+
+    def test_device_windows_see_only_routed_accesses(self):
+        dep = self.mk_drift_deployment(shard="table")
+        eng = dep.engines["recflash"]
+        reqs = dep.stream(32, 2000.0)
+        tab = np.concatenate([r.tables for r in reqs])
+        rows = np.concatenate([r.rows for r in reqs])
+        dev, ltab, lrow = eng.plan.route(tab, rows)
+        for d, deng in enumerate(eng.devices):
+            deng._clear_window()
+        for d, deng in enumerate(eng.devices):
+            sel = dev == d
+            deng.record_window(ltab[sel], lrow[sel])
+            got = sum(int(deng.window_counts(t).sum())
+                      for t in range(len(deng.tables)))
+            assert got == int(sel.sum())
+
+    def test_step_day_merges_parallel_devices(self):
+        from repro.data.tracegen import generate_sls_batch
+        dep = Deployment(DeploymentConfig(
+            tables=[TableSpec(N_ROWS, 64)] * N_TABLES, part="TLC",
+            lookups=8, policies=("rmssd", "recflash"), seed=5, n_devices=2,
+            trigger=TriggerConfig("period", period_days=1)))
+        tb, rows = generate_sls_batch(N_TABLES, N_ROWS, 8, 64, k=0.0,
+                                      seed=3)
+        out = dep.step_day(0, tb, rows)
+        assert out["rmssd"].remap is None
+        log = out["recflash"].remap
+        assert log is not None and log.triggered
+        assert log.remap_latency_us > 0
+        assert out["recflash"].inference.latency_us \
+            < out["rmssd"].inference.latency_us
+        # windows consumed on every device
+        for deng in dep.engines["recflash"].devices:
+            assert not any(deng.window_counts(t).any()
+                           for t in range(len(deng.tables)))
