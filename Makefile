@@ -9,13 +9,17 @@ test:
 
 # fast serving-benchmark smoke passes (CI-sized): the stationary tail
 # sweep, the drifting live-remap lane (fig_drift_tail --smoke asserts the
-# spike-and-recovery acceptance shape, DESIGN.md §5.4), and the multi-SSD
+# spike-and-recovery acceptance shape, DESIGN.md §5.4), the multi-SSD
 # scale-out sweep (fig_scaleout --smoke asserts saturated recflash
-# throughput scales >=1.8x from 1 to 2 devices, DESIGN.md §6)
+# throughput scales >=1.8x from 1 to 2 devices, DESIGN.md §6), and the
+# SLO overload gate (fig_slo_tail --smoke asserts latency-critical p99 at
+# 4x load stays within 2x of its 1x value while >=30% of bulk is shed,
+# DESIGN.md §7)
 bench-smoke:
 	$(PY) benchmarks/fig_serving_tail.py --smoke
 	$(PY) benchmarks/fig_drift_tail.py --smoke
 	$(PY) benchmarks/fig_scaleout.py --smoke
+	$(PY) benchmarks/fig_slo_tail.py --smoke
 
 # simulator fast-path microbenchmark (DESIGN.md §2.3): smoke sweep into
 # BENCH_sim_smoke.json (the committed root BENCH_sim.json is the tracked

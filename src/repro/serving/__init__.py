@@ -1,5 +1,6 @@
 """Serving subsystem: declarative `Deployment` facade over request queue +
-dynamic batcher + multi-channel policy lanes (DESIGN.md §3)."""
+dynamic batcher + multi-channel policy lanes (DESIGN.md §3), with the
+SLO-aware dispatch discipline layered on top (DESIGN.md §7)."""
 
 from repro.flashsim.timeline import SERVING_POLICIES
 from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
@@ -7,12 +8,15 @@ from repro.serving.deployment import (DayResult, Deployment,
                                       DeploymentConfig, TriggerConfig,
                                       arch_model_config)
 from repro.serving.metrics import (LatencyReport, percentiles, summarize,
-                                   tail_timeseries)
+                                   summarize_classes, tail_timeseries)
 from repro.serving.queueing import RequestQueue
 from repro.serving.scheduler import (LaneTrace, LiveRemapConfig, RemapEvent,
                                      ServingScheduler, build_policy_engines,
                                      replay, replay_sharded)
-from repro.serving.workload import (DriftScenario, Request, bursty_arrivals,
+from repro.serving.slo_scheduler import (SLOConfig, SLOEvent, hot_row_mask,
+                                         slo_replay)
+from repro.serving.workload import (SLO_CLASSES, DriftScenario, Request,
+                                    assign_slo_classes, bursty_arrivals,
                                     diurnal_arrivals, make_drifting_requests,
                                     make_requests, poisson_arrivals)
 
@@ -20,10 +24,13 @@ __all__ = [
     "Batch", "BatcherConfig", "DynamicBatcher",
     "DayResult", "Deployment", "DeploymentConfig", "TriggerConfig",
     "arch_model_config",
-    "LatencyReport", "percentiles", "summarize", "tail_timeseries",
+    "LatencyReport", "percentiles", "summarize", "summarize_classes",
+    "tail_timeseries",
     "RequestQueue", "SERVING_POLICIES",
     "LaneTrace", "LiveRemapConfig", "RemapEvent", "ServingScheduler",
     "build_policy_engines", "replay", "replay_sharded",
-    "DriftScenario", "Request", "bursty_arrivals", "diurnal_arrivals",
-    "make_drifting_requests", "make_requests", "poisson_arrivals",
+    "SLOConfig", "SLOEvent", "hot_row_mask", "slo_replay",
+    "SLO_CLASSES", "DriftScenario", "Request", "assign_slo_classes",
+    "bursty_arrivals", "diurnal_arrivals", "make_drifting_requests",
+    "make_requests", "poisson_arrivals",
 ]

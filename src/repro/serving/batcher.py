@@ -63,7 +63,9 @@ class DynamicBatcher:
         self.cfg = cfg or BatcherConfig()
 
     def next_span(self, arrivals: np.ndarray, pos: int,
-                  device_free_us: float = 0.0) -> tuple[int, float]:
+                  device_free_us: float = 0.0,
+                  max_batch: int | None = None,
+                  max_wait_us: float | None = None) -> tuple[int, float]:
         """Array form of :meth:`next_batch` for the replay hot loop.
 
         ``arrivals`` is the whole stream's arrival-sorted timestamp array
@@ -71,14 +73,21 @@ class DynamicBatcher:
         dispatch_us)`` so the next batch is positions ``[pos, end)``. Same
         dispatch rule and admission (arrival <= dispatch, up to
         ``max_batch``) as the queue-based path, with no per-request work.
+
+        ``max_batch``/``max_wait_us`` override the config for this one
+        call — the SLO lane feeds each priority class's own arrival-sorted
+        queue through here with per-class limits (a latency-critical queue
+        runs with zero batching delay, a bulk queue with a preemption-
+        boundary size cap; DESIGN.md §7.2) without rebuilding batchers.
         """
         cfg = self.cfg
+        mb = cfg.max_batch if max_batch is None else max_batch
+        mw = cfg.max_wait_us if max_wait_us is None else max_wait_us
         head = float(arrivals[pos])
-        fill = (float(arrivals[pos + cfg.max_batch - 1])
-                if pos + cfg.max_batch <= arrivals.size else float("inf"))
-        dispatch = max(head, device_free_us,
-                       min(head + cfg.max_wait_us, fill))
-        end = pos + int(np.searchsorted(arrivals[pos:pos + cfg.max_batch],
+        fill = (float(arrivals[pos + mb - 1])
+                if pos + mb <= arrivals.size else float("inf"))
+        dispatch = max(head, device_free_us, min(head + mw, fill))
+        end = pos + int(np.searchsorted(arrivals[pos:pos + mb],
                                         dispatch, side="right"))
         return end, dispatch
 

@@ -40,8 +40,10 @@ from repro.serving.batcher import BatcherConfig
 from repro.serving.metrics import LatencyReport
 from repro.serving.scheduler import (LaneTrace, LiveRemapConfig, replay,
                                      replay_sharded)
+from repro.serving.slo_scheduler import SLOConfig
 from repro.serving.workload import (ARRIVAL_PROCESSES, DriftScenario,
-                                    Request, diurnal_arrivals,
+                                    Request, assign_slo_classes,
+                                    diurnal_arrivals,
                                     make_drifting_requests, make_requests)
 
 ARRIVALS = ARRIVAL_PROCESSES
@@ -141,6 +143,11 @@ class DeploymentConfig:
     # requires ``trigger``. None keeps the replay remap-free (step_day
     # remains the only consumer of the trigger, as before).
     live_remap: LiveRemapConfig | None = None
+    # SLO-aware dispatch (DESIGN.md §7): priority classes, admission,
+    # shed/degrade ladder. None keeps the legacy batcher path — no class
+    # annotation on streams, replay bit-identical to the pre-SLO lane.
+    # Mutually exclusive with live_remap (two mid-stream control loops).
+    slo: SLOConfig | None = None
     arch: str | None = None         # provenance (set by from_arch)
 
     def __post_init__(self):
@@ -180,6 +187,9 @@ class DeploymentConfig:
         if self.live_remap is not None and self.trigger is None:
             raise ValueError("live_remap requires a trigger "
                              "(set TriggerConfig as well)")
+        if self.slo is not None and self.live_remap is not None:
+            raise ValueError("slo scheduling and live_remap do not "
+                             "compose; configure one mid-stream loop")
 
     # -- registry constructors ------------------------------------------------
     @classmethod
@@ -230,6 +240,7 @@ class DeploymentConfig:
             else None,
             live_remap=dataclasses.asdict(self.live_remap)
             if self.live_remap else None,
+            slo=self.slo.to_dict() if self.slo else None,
             arch=self.arch)
 
     @classmethod
@@ -246,6 +257,8 @@ class DeploymentConfig:
             d["scenario"] = DriftScenario(**d["scenario"])
         if d.get("live_remap") is not None:
             d["live_remap"] = LiveRemapConfig(**d["live_remap"])
+        if d.get("slo") is not None:
+            d["slo"] = SLOConfig.from_dict(d["slo"])
         return cls(**d)
 
 
@@ -324,7 +337,12 @@ class Deployment:
         rewrite the row stream on top of the base trace, ``diurnal``
         replaces the arrival process with the rate-modulated one. With no
         scenario (or kind ``'none'``) the stream is byte-identical to the
-        stationary path."""
+        stationary path.
+
+        With a config ``slo`` block the stream is class-annotated from
+        its ``mix`` (seed ``seed + 3``, positional draw — orthogonal to
+        trace and arrival seeds, DESIGN.md §7.1); the accesses and
+        arrivals themselves are untouched."""
         n_rows = self.cfg.tables[0].n_rows
         if any(t.n_rows != n_rows for t in self.cfg.tables):
             raise ValueError(
@@ -350,19 +368,24 @@ class Deployment:
             ts = ARRIVALS[arrival](n_requests, rate_rps, seed=arrival_seed,
                                    **arrival_kw)
         if scenario is None or scenario.kind == "none":
-            return make_requests(n_requests, len(self.cfg.tables), n_rows,
+            reqs = make_requests(n_requests, len(self.cfg.tables), n_rows,
                                  self.cfg.lookups, ts, k=self.cfg.k,
                                  seed=seed)
-        return make_drifting_requests(n_requests, len(self.cfg.tables),
-                                      n_rows, self.cfg.lookups, ts,
-                                      scenario, k=self.cfg.k, seed=seed)
+        else:
+            reqs = make_drifting_requests(n_requests, len(self.cfg.tables),
+                                          n_rows, self.cfg.lookups, ts,
+                                          scenario, k=self.cfg.k, seed=seed)
+        if self.cfg.slo is not None:
+            assign_slo_classes(reqs, self.cfg.slo.mix, seed=seed + 3)
+        return reqs
 
     # -- serving --------------------------------------------------------------
     def run_stream(self, requests: list[Request],
                    record_window: bool = False,
                    batcher: BatcherConfig | None = None,
                    n_channels: int | None = None,
-                   live: LiveRemapConfig | None = None
+                   live: LiveRemapConfig | None = None,
+                   slo: SLOConfig | None = None
                    ) -> dict[str, LaneTrace]:
         """Replay the stream through every policy lane; {policy: LaneTrace}.
 
@@ -387,15 +410,24 @@ class Deployment:
         runs its own batcher/channels/remap loop over its sub-stream and a
         request completes at the max of its device completions. Live remap
         is then device-local — each device's trigger sees only its own
-        window counts (§6.3)."""
+        window counts (§6.3).
+
+        ``slo`` (default: the config's ``slo``) switches every lane to
+        the SLO-aware dispatch discipline (DESIGN.md §7); with it unset
+        the replay is the legacy batcher path, bit-identical to pre-SLO
+        output. SLO and live remap do not compose."""
         batcher = self.cfg.batcher if batcher is None else batcher
         nc = self.cfg.n_channels if n_channels is None else n_channels
         live = self.cfg.live_remap if live is None else live
+        slo = self.cfg.slo if slo is None else slo
+        if slo is not None and live is not None:
+            raise ValueError("slo scheduling and live remap do not "
+                             "compose; configure one mid-stream loop")
         trig = self.trigger if live is not None else None
         run = (replay_sharded if self.cfg.n_devices > 1 else replay)
         traces = {pol: run(requests, eng, batcher,
                            record_window=record_window, policy_name=pol,
-                           n_channels=nc, trigger=trig, live=live)
+                           n_channels=nc, trigger=trig, live=live, slo=slo)
                   for pol, eng in self.engines.items()}
         self.last_traces = traces
         return traces

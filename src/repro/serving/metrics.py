@@ -1,9 +1,16 @@
-"""Per-request latency / throughput accounting (DESIGN.md §3.4, §5.4).
+"""Per-request latency / throughput accounting (DESIGN.md §3.4, §5.4, §7.4).
 
 A request's latency is completion minus arrival: queueing delay + batching
 delay + device service time of the batch it rode in. Percentiles use the
 linear-interpolation definition (``np.percentile`` default) so p50 of an
 odd-length sample is the median element exactly.
+
+**Degenerate inputs are NaN-safe, never raising** (DESIGN.md §7.4): a shed
+request carries ``NaN`` latency, so a class can legitimately arrive here
+all-NaN (everything shed) or empty (class absent from the stream). Both
+report ``NaN`` percentiles/mean/max with correct counts — ``NaN`` means
+"no served sample to summarise", which downstream plotting distinguishes
+from a real 0 µs.
 
 ``LatencyReport`` summarises a whole replay with one number per quantile;
 that hides *when* the tail happened, which is the entire point of the
@@ -12,6 +19,12 @@ spike in one time bin followed by a lower steady state, not as a shift of
 the aggregate. ``tail_timeseries`` bins completions over the simulated
 clock and reports per-bin percentiles so the drift benchmark
 (``benchmarks/fig_drift_tail.py``) can show the spike-and-recover shape.
+
+The SLO lane (DESIGN.md §7.4) reports **per class**: the top-level report
+covers served requests of every class, and ``per_class`` holds one nested
+``LatencyReport`` per priority class with that class's own shed/degrade
+counts — overload is only legible class-by-class (the whole point of
+shedding is that the aggregate hides who paid).
 """
 
 from __future__ import annotations
@@ -26,7 +39,7 @@ class LatencyReport:
     """Tail-latency + throughput summary for one policy's replay."""
 
     policy: str
-    n_requests: int
+    n_requests: int            # served requests (shed excluded)
     p50_us: float
     p95_us: float
     p99_us: float
@@ -43,6 +56,23 @@ class LatencyReport:
     # as a low entry, not washed into the mean). Empty for 1-device lanes.
     n_devices: int = 1
     device_busy_fracs: tuple = ()
+    # SLO lane accounting (DESIGN.md §7.4). ``n_shed`` are offered-but-
+    # never-served requests (offered == n_requests + n_shed); ``n_degraded``
+    # were served hot-subset-only. ``per_class`` maps priority class ->
+    # nested LatencyReport (empty for non-SLO lanes).
+    n_shed: int = 0
+    n_degraded: int = 0
+    per_class: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_offered(self) -> int:
+        """Requests that entered the lane: served + shed."""
+        return self.n_requests + self.n_shed
+
+    @property
+    def shed_frac(self) -> float:
+        """Shed share of offered traffic (0.0 for an empty lane)."""
+        return self.n_shed / self.n_offered if self.n_offered else 0.0
 
     def row(self) -> str:
         return (f"{self.policy:14s} p50 {self.p50_us / 1e3:9.2f}  "
@@ -55,9 +85,17 @@ class LatencyReport:
 
 def percentiles(latencies_us: np.ndarray,
                 qs=(50.0, 95.0, 99.0)) -> tuple[float, ...]:
+    """NaN-safe percentiles over served latencies (DESIGN.md §7.4).
+
+    Non-finite entries (shed requests carry ``NaN``) are dropped before
+    the quantile computation; with nothing left — an empty class, or a
+    class whose every request was shed — every quantile is ``NaN`` rather
+    than raising or reporting a fake 0.
+    """
     lat = np.asarray(latencies_us, dtype=np.float64)
+    lat = lat[np.isfinite(lat)]
     if lat.size == 0:
-        return tuple(0.0 for _ in qs)
+        return tuple(float("nan") for _ in qs)
     return tuple(float(np.percentile(lat, q)) for q in qs)
 
 
@@ -71,10 +109,14 @@ def tail_timeseries(completions_us: np.ndarray, latencies_us: np.ndarray,
     ``(bin_starts_us, counts, pcts)`` where ``pcts[i]`` is the tuple of
     ``qs`` percentiles of bin ``i`` (empty bins report zeros). Binning by
     completion attributes a stalled request to the moment its stall
-    resolved — which is when the spike is *visible* to clients.
+    resolved — which is when the spike is *visible* to clients. Shed
+    requests (``NaN`` completion) never complete, so they fall out of the
+    timeseries entirely — shed accounting lives on the report.
     """
     comp = np.asarray(completions_us, dtype=np.float64)
     lat = np.asarray(latencies_us, dtype=np.float64)
+    served = np.isfinite(comp)
+    comp, lat = comp[served], lat[served]
     if comp.size == 0:
         return (np.empty(0), np.empty(0, dtype=np.int64), [])
     if bin_us <= 0:
@@ -93,16 +135,21 @@ def tail_timeseries(completions_us: np.ndarray, latencies_us: np.ndarray,
 def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,
               batch_sizes: list[int], busy_us: float,
               energy_uj: float = 0.0, *, n_devices: int = 1,
-              device_busy_fracs: tuple = ()) -> LatencyReport:
+              device_busy_fracs: tuple = (), n_shed: int = 0,
+              n_degraded: int = 0, per_class: dict | None = None
+              ) -> LatencyReport:
+    """Build a LatencyReport; NaN latencies (shed requests) are excluded
+    from every served-side statistic and counted via ``n_shed``."""
     lat = np.asarray(latencies_us, dtype=np.float64)
+    lat = lat[np.isfinite(lat)]
     p50, p95, p99 = percentiles(lat)
     makespan_us = max(makespan_us, 1e-9)
     return LatencyReport(
         policy=policy,
         n_requests=int(lat.size),
         p50_us=p50, p95_us=p95, p99_us=p99,
-        mean_us=float(lat.mean()) if lat.size else 0.0,
-        max_us=float(lat.max()) if lat.size else 0.0,
+        mean_us=float(lat.mean()) if lat.size else float("nan"),
+        max_us=float(lat.max()) if lat.size else float("nan"),
         throughput_rps=1e6 * lat.size / makespan_us,
         mean_batch_size=(sum(batch_sizes) / len(batch_sizes)
                          if batch_sizes else 0.0),
@@ -111,4 +158,28 @@ def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,
         energy_uj=energy_uj,
         n_devices=n_devices,
         device_busy_fracs=tuple(device_busy_fracs),
+        n_shed=int(n_shed),
+        n_degraded=int(n_degraded),
+        per_class=dict(per_class or {}),
     )
+
+
+def summarize_classes(policy: str, classes: np.ndarray,
+                      latencies_us: np.ndarray, makespan_us: float,
+                      shed_mask: np.ndarray, degraded_mask: np.ndarray,
+                      class_names) -> dict:
+    """One nested LatencyReport per priority class (DESIGN.md §7.4).
+
+    ``classes`` holds each request's class index into ``class_names``.
+    Every class in ``class_names`` gets an entry — absent or all-shed
+    classes report NaN quantiles with exact counts, never raising — so
+    benchmark tables stay rectangular across load points.
+    """
+    out = {}
+    for ci, name in enumerate(class_names):
+        sel = classes == ci
+        out[name] = summarize(
+            f"{policy}/{name}", latencies_us[sel], makespan_us, [], 0.0,
+            n_shed=int(shed_mask[sel].sum()),
+            n_degraded=int(degraded_mask[sel].sum()))
+    return out

@@ -178,6 +178,14 @@ class LaneTrace:
     # (device d's channels are [d*n_channels, (d+1)*n_channels)).
     n_devices: int = 1
     device_traces: "list[LaneTrace] | None" = None
+    # SLO lane extras (DESIGN.md §7; None/empty unless the lane ran under
+    # an SLOConfig): per-request class index / shed / degrade arrays in
+    # input order, the preempted-batch count, and the decision event log.
+    slo_classes: np.ndarray | None = None
+    shed_mask: np.ndarray | None = None
+    degraded_mask: np.ndarray | None = None
+    n_preempted: int = 0
+    slo_events: list = dataclasses.field(default_factory=list)
 
     def latency_of(self, rid: int, requests: list[Request] | None = None
                    ) -> float:
@@ -193,7 +201,8 @@ def replay(requests: list[Request], engine: RecFlashEngine,
            policy_name: str | None = None,
            n_channels: int = 1,
            trigger: ThresholdTrigger | PeriodTrigger | None = None,
-           live: LiveRemapConfig | None = None) -> LaneTrace:
+           live: LiveRemapConfig | None = None,
+           slo=None) -> LaneTrace:
     """Run one policy lane over the whole request stream.
 
     ``n_channels`` is the lane's concurrent-server count (see module
@@ -211,7 +220,21 @@ def replay(requests: list[Request], engine: RecFlashEngine,
     the lane's busy/energy totals, not toward any request's latency).
     With ``trigger`` or ``live`` absent the path is bit-identical to the
     plain replay.
+
+    With ``slo`` (an :class:`~repro.serving.slo_scheduler.SLOConfig`) the
+    lane dispatches under the SLO discipline instead — strict priority
+    classes, admission, preemption boundaries, shed/degrade ladder
+    (DESIGN.md §7). SLO and live remap are separate mid-stream control
+    loops and do not compose. With ``slo=None`` this path is untouched.
     """
+    if slo is not None:
+        if trigger is not None or live is not None:
+            raise ValueError("slo scheduling and live remap do not "
+                             "compose; configure one mid-stream loop")
+        from repro.serving.slo_scheduler import slo_replay
+        return slo_replay(requests, engine, slo, batcher_cfg,
+                          record_window=record_window,
+                          policy_name=policy_name, n_channels=n_channels)
     batcher = DynamicBatcher(batcher_cfg)
     name = policy_name or engine.policy.name
     n = len(requests)
@@ -348,7 +371,8 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
                    policy_name: str | None = None,
                    n_channels: int = 1,
                    trigger: ThresholdTrigger | PeriodTrigger | None = None,
-                   live: LiveRemapConfig | None = None) -> LaneTrace:
+                   live: LiveRemapConfig | None = None,
+                   slo=None) -> LaneTrace:
     """Scatter-gather replay over N simulated SSDs (DESIGN.md §6.2).
 
     **Scatter** — the stream is routed once through the engine's
@@ -373,7 +397,16 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
     devices, ``batch_channels`` hold global channel ids
     (``device * n_channels + channel``), ``remap_events`` merge in firing
     order, and per-device sub-traces stay available as ``device_traces``.
+
+    With ``slo`` each device runs its own SLO lane over its sub-stream
+    (sub-requests inherit the parent's class). A request shed on **any**
+    owning device is shed overall — its NaN sub-completion survives the
+    max-gather, so the barrier rule needs no special case — and degraded
+    on any device means degraded overall (DESIGN.md §7.5).
     """
+    if slo is not None and (trigger is not None or live is not None):
+        raise ValueError("slo scheduling and live remap do not "
+                         "compose; configure one mid-stream loop")
     nd = engine.plan.n_devices
     name = policy_name or engine.policy.name
     n = len(requests)
@@ -405,13 +438,37 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
     for d in range(nd):
         tr = replay(sub[d], engine.devices[d], batcher_cfg,
                     record_window=record_window, policy_name=name,
-                    n_channels=n_channels, trigger=trigger, live=live)
+                    n_channels=n_channels, trigger=trigger, live=live,
+                    slo=slo)
         device_traces.append(tr)
         if members[d]:
             pos = np.asarray(members[d], dtype=np.int64)
-            # gather barrier: completion = max over owning devices
+            # gather barrier: completion = max over owning devices. A NaN
+            # sub-completion (shed on that device) survives np.maximum,
+            # so a partially-shed request is shed overall (DESIGN.md §7.5).
             np.maximum.at(completions, pos, tr.completions_us)
     latencies = completions - arrivals
+    # SLO gather extras: class from the parent requests; shed overall iff
+    # any owning device shed (the NaN already encodes it); degraded
+    # overall iff any owning device degraded (OR-scatter of sub-masks).
+    slo_classes = shed_mask = degraded_mask = None
+    slo_events: list = []
+    n_preempted = 0
+    if slo is not None:
+        from repro.serving.slo_scheduler import SLO_CLASSES
+        slo_classes = np.fromiter(
+            (SLO_CLASSES.index(r.slo) for r in requests),
+            dtype=np.int64, count=n)
+        shed_mask = ~np.isfinite(completions) if n else np.zeros(0, bool)
+        degraded_mask = np.zeros(n, dtype=bool)
+        for d, tr in enumerate(device_traces):
+            if members[d]:
+                pos = np.asarray(members[d], dtype=np.int64)
+                degraded_mask[pos] |= tr.degraded_mask
+            n_preempted += tr.n_preempted
+        slo_events = sorted((ev for tr in device_traces
+                             for ev in tr.slo_events),
+                            key=lambda ev: ev.t_us)
     # lane-level aggregation
     busy = sum(tr.busy_us for tr in device_traces)
     energy = sum(tr.report.energy_uj for tr in device_traces)
@@ -427,13 +484,25 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
                            for ev in tr.remap_events),
                           key=lambda ev: ev.t_fire_us)
     first_arrival = float(arrivals.min()) if n else 0.0
-    makespan = (float(completions.max()) - first_arrival) if n else 0.0
+    fin = completions[np.isfinite(completions)]
+    makespan = (float(fin.max()) - first_arrival) if fin.size else 0.0
     span = max(makespan, 1e-9)
+    per_class = {}
+    if slo is not None:
+        from repro.serving.metrics import summarize_classes
+        from repro.serving.slo_scheduler import SLO_CLASSES
+        per_class = summarize_classes(name, slo_classes, latencies,
+                                      makespan, shed_mask, degraded_mask,
+                                      SLO_CLASSES)
     report = summarize(
         name, latencies, makespan, [b.size for b in batches],
         busy / (nd * n_channels), energy, n_devices=nd,
         device_busy_fracs=tuple(tr.busy_us / n_channels / span
-                                for tr in device_traces))
+                                for tr in device_traces),
+        n_shed=int(shed_mask.sum()) if shed_mask is not None else 0,
+        n_degraded=(int(degraded_mask.sum())
+                    if degraded_mask is not None else 0),
+        per_class=per_class)
     return LaneTrace(report=report, batches=batches, latencies_us=latencies,
                      completions_us=completions, index_of=index_of,
                      n_channels=n_channels,
@@ -442,7 +511,10 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
                      batch_starts_us=np.asarray(batch_starts,
                                                 dtype=np.float64),
                      remap_events=remap_events, busy_us=busy,
-                     n_devices=nd, device_traces=device_traces)
+                     n_devices=nd, device_traces=device_traces,
+                     slo_classes=slo_classes, shed_mask=shed_mask,
+                     degraded_mask=degraded_mask, n_preempted=n_preempted,
+                     slo_events=slo_events)
 
 
 class ServingScheduler:

@@ -32,14 +32,27 @@ import numpy as np
 from repro.data.tracegen import generate_sls_batch, popularity_perm
 
 
+# Priority/SLO classes, highest priority first (DESIGN.md §7.1). The
+# order is the scheduler's strict service order: a lane never starts a
+# lower class's batch while a higher class has arrived work pending.
+SLO_CLASSES = ("latency_critical", "standard", "bulk")
+
+
 @dataclasses.dataclass
 class Request:
-    """One inference request: an SLS command plus its arrival time."""
+    """One inference request: an SLS command plus its arrival time.
+
+    ``slo`` is the request's priority/SLO class (one of ``SLO_CLASSES``);
+    the plain replay ignores it, the SLO-aware lane
+    (``serving/slo_scheduler.py``) schedules by it. Defaults to
+    ``standard`` so pre-SLO streams are unchanged.
+    """
 
     rid: int
     arrival_us: float
     tables: np.ndarray       # (n_lookups,) table id per access
     rows: np.ndarray         # (n_lookups,) row id per access
+    slo: str = "standard"    # priority class (SLO_CLASSES)
 
     @property
     def n_lookups(self) -> int:
@@ -50,11 +63,36 @@ class Request:
 
         Used by the scatter phase of the multi-SSD dispatch (DESIGN.md
         §6.2): a request fans out into one sub-request per owning device,
-        each keeping the parent's ``rid``/arrival (the gather barrier joins
-        them back on the rid) with the device-local slice of the accesses.
+        each keeping the parent's ``rid``/arrival/class (the gather
+        barrier joins them back on the rid) with the device-local slice
+        of the accesses.
         """
         return Request(rid=self.rid, arrival_us=self.arrival_us,
-                       tables=tables, rows=rows)
+                       tables=tables, rows=rows, slo=self.slo)
+
+
+def assign_slo_classes(requests: list[Request], mix,
+                       seed: int = 0) -> list[Request]:
+    """Annotate a stream with priority classes drawn i.i.d. from ``mix``.
+
+    ``mix`` is the ``(latency_critical, standard, bulk)`` probability
+    tuple (normalised here, so any non-negative weights work). Requests
+    are mutated in place (class is an annotation, not a new stream) and
+    the list is returned for chaining. The draw is seeded and *positional*
+    — request ``i``'s class depends only on ``(seed, i)``, never on
+    arrival times or access contents — so the same stream re-annotated
+    with the same seed is identical, and drift scenarios compose
+    orthogonally (DESIGN.md §7.1).
+    """
+    p = np.asarray(mix, dtype=np.float64)
+    if p.size != len(SLO_CLASSES) or np.any(p < 0) or p.sum() <= 0:
+        raise ValueError(f"mix must be {len(SLO_CLASSES)} non-negative "
+                         "weights with a positive sum")
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(SLO_CLASSES), size=len(requests), p=p / p.sum())
+    for r, i in zip(requests, idx.tolist()):
+        r.slo = SLO_CLASSES[i]
+    return requests
 
 
 def poisson_arrivals(n: int, rate_rps: float, seed: int = 0) -> np.ndarray:

@@ -9,8 +9,9 @@ import pytest
 from repro.core.engine import RecFlashEngine, TableSpec
 from repro.flashsim.timeline import POLICIES, SERVING_POLICIES
 from repro.serving import (BatcherConfig, Deployment, DeploymentConfig,
-                           DynamicBatcher, RequestQueue, ServingScheduler,
-                           TriggerConfig, build_policy_engines)
+                           DynamicBatcher, RequestQueue, SLOConfig,
+                           ServingScheduler, TriggerConfig,
+                           build_policy_engines)
 
 
 def mk_config(n_tables=2, n_rows=5_000, lookups=8, **kw):
@@ -266,6 +267,77 @@ class TestDeprecatedShims:
         for pol in dep.engines:
             np.testing.assert_array_equal(old[pol].latencies_us,
                                           new[pol].latencies_us)
+
+
+class TestSLODeploymentConfig:
+    """DeploymentConfig.slo (DESIGN.md §7): JSON round-trip, legacy-blob
+    and from_arch defaulting, the live-remap exclusion, and the stream /
+    run_stream plumbing."""
+
+    def mk_slo(self):
+        return SLOConfig(deadline_lc_us=1_500.0, deadline_std_us=9_000.0,
+                         deadline_bulk_us=30_000.0, mix=(0.25, 0.5, 0.25),
+                         bulk_chunk=4, headroom=0.75, shed_after=1.5,
+                         degrade=False, lc_max_wait_us=50.0, ewma=0.5)
+
+    def test_slo_round_trip_through_json(self):
+        cfg = mk_config(seed=3, slo=self.mk_slo())
+        blob = json.dumps(cfg.to_dict())
+        cfg2 = DeploymentConfig.from_dict(json.loads(blob))
+        assert cfg2 == cfg
+        assert cfg2.slo == self.mk_slo()
+        assert isinstance(cfg2.slo.mix, tuple)     # JSON list re-tupled
+        assert cfg2.to_dict() == cfg.to_dict()
+
+    def test_slo_none_and_legacy_blob_default_to_legacy_path(self):
+        cfg = mk_config(seed=3)
+        assert cfg.slo is None
+        blob = cfg.to_dict()
+        assert blob["slo"] is None
+        assert DeploymentConfig.from_dict(blob).slo is None
+        # a pre-SLO serialized config has no "slo" key at all; it must
+        # deserialize to the legacy (slo=None) path, not raise
+        legacy = {k: v for k, v in blob.items() if k != "slo"}
+        cfg2 = DeploymentConfig.from_dict(legacy)
+        assert cfg2.slo is None
+        assert cfg2 == cfg
+
+    def test_from_arch_slo_defaulting_and_override(self):
+        assert DeploymentConfig.from_arch("rmc1").slo is None
+        cfg = DeploymentConfig.from_arch("rmc1", slo=self.mk_slo())
+        assert cfg.slo == self.mk_slo()
+
+    def test_slo_and_live_remap_do_not_compose(self):
+        from repro.serving import LiveRemapConfig
+        with pytest.raises(ValueError, match="compose"):
+            mk_config(trigger=TriggerConfig("threshold"),
+                      live_remap=LiveRemapConfig(), slo=SLOConfig())
+        dep = mk_deployment(seed=4, trigger=TriggerConfig("threshold"))
+        reqs = dep.stream(8, 1000.0)
+        with pytest.raises(ValueError, match="compose"):
+            dep.run_stream(reqs, live=LiveRemapConfig(), slo=SLOConfig())
+
+    def test_stream_annotates_classes_and_run_uses_slo_lane(self):
+        from repro.serving import SLO_CLASSES
+        slo = SLOConfig(mix=(0.3, 0.4, 0.3))
+        dep = Deployment(mk_config(seed=9, policies=("recflash",),
+                                   slo=slo))
+        reqs = dep.stream(120, 2000.0)
+        assert set(r.slo for r in reqs) == set(SLO_CLASSES)
+        tr = dep.run_stream(reqs)["recflash"]
+        assert set(tr.report.per_class) == set(SLO_CLASSES)
+        assert tr.slo_classes is not None and tr.shed_mask is not None
+        # same seed, no slo block: identical stream, default-class only,
+        # and the legacy replay reports no per-class breakdown
+        dep0 = Deployment(mk_config(seed=9, policies=("recflash",)))
+        reqs0 = dep0.stream(120, 2000.0)
+        assert all(r.slo == "standard" for r in reqs0)
+        np.testing.assert_array_equal(
+            np.array([r.arrival_us for r in reqs]),
+            np.array([r.arrival_us for r in reqs0]))
+        tr0 = dep0.run_stream(reqs0)["recflash"]
+        assert tr0.report.per_class == {}
+        assert tr0.slo_classes is None
 
 
 class TestLaneTraceLatencyOf:

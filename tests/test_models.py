@@ -47,6 +47,22 @@ LM_VARIANTS = {
 }
 
 
+# qwen3-moe prefill/full-forward divergence, root-caused by the bisect
+# test below: GShard fixed-capacity clipping (`moe._cap_per_expert`) makes
+# expert capacity — and therefore which tokens get dropped — a function of
+# the *total token count* in the forward pass. Prefill runs t-1 tokens
+# against the full pass's t, so the two passes clip differently and their
+# logits legitimately diverge wherever a token's expert assignment was
+# dropped in one pass but not the other. Not a seedable tie-break and not
+# the KV/cache path (decode agrees to 1e-6; with clipping disabled the
+# prefill error is exactly 0), so the repro stays as a strict xfail: it
+# starts "passing" only if the capacity rule itself changes.
+MOE_CAPACITY_XFAIL = pytest.mark.xfail(
+    strict=True,
+    reason="GShard capacity clipping depends on total token count; "
+           "prefill (t-1 tokens) and full forward (t) clip differently")
+
+
 class TestLMFamily:
     @pytest.mark.parametrize("name", sorted(LM_VARIANTS))
     def test_train_step(self, name):
@@ -69,10 +85,19 @@ class TestLMFamily:
         loss2 = lm.train_loss(new_params, batch, cfg)
         assert _finite(loss2)
 
-    @pytest.mark.parametrize("name", sorted(LM_VARIANTS))
+    @pytest.mark.parametrize(
+        "name",
+        [pytest.param(n, marks=MOE_CAPACITY_XFAIL)
+         if n == "qwen3-moe-30b-a3b" else n for n in sorted(LM_VARIANTS)])
     def test_prefill_decode_consistency(self, name):
         """decode_step on a prefix cache must reproduce teacher-forced
-        logits from the full forward pass."""
+        logits from the full forward pass.
+
+        The qwen3-moe variant is a strict xfail — see MOE_CAPACITY_XFAIL:
+        its prefill-vs-full comparison diverges by construction of GShard
+        fixed-capacity routing, not by a bug in the cache path (the
+        decode-vs-full comparison below agrees to ~1e-6 even for it).
+        """
         cfg = LM_VARIANTS[name]
         params = lm.init(jax.random.PRNGKey(0), cfg)
         b, t = 2, 16
@@ -94,6 +119,55 @@ class TestLMFamily:
                                      t - 1, cfg)
         np.testing.assert_allclose(logits_d, full_logits[:, t - 1],
                                    atol=2e-3)
+
+    def test_moe_prefill_divergence_is_capacity_clipping(self):
+        """Bisect the qwen3-moe prefill/full divergence to its component.
+
+        Three probes isolate GShard capacity clipping (and exonerate the
+        router tie-breaking and the KV/cache path):
+
+        1. the same variant with clipping effectively disabled (a
+           capacity factor admitting every assignment) prefills
+           *exactly* equal to the full forward — so the attention/KV
+           path and the top-k router contribute zero error;
+        2. ``moe_ffn`` itself is batch-composition dependent under a
+           finite capacity: the same leading tokens produce different
+           outputs when one more token joins the batch (capacity and
+           slot competition are functions of the total token count);
+        3. with clipping disabled, that dependence vanishes bit-exactly
+           — so the divergence is the capacity rule, not expert math.
+        """
+        cfg = LM_VARIANTS["qwen3-moe-30b-a3b"]
+        b, t = 2, 16
+        tokens = jax.random.randint(jax.random.PRNGKey(3), (b, t), 1,
+                                    cfg.vocab, jnp.int32)
+        # probe 1: no-clip variant of the full prefill-vs-forward check
+        nocap = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
+        params = lm.init(jax.random.PRNGKey(0), nocap)
+        hidden = lm.backbone(params, tokens, nocap)
+        full_logits = lm.logits_fn(params, hidden, nocap)
+        logits_p, _ = lm.prefill(params, tokens[:, :t - 1], nocap)
+        np.testing.assert_array_equal(np.asarray(logits_p),
+                                      np.asarray(full_logits[:, t - 2]))
+        # probes 2+3: moe_ffn alone, clipped vs unclipped. A tight
+        # capacity (0.5x, i.e. slots == assignments at perfect balance)
+        # guarantees slot competition at this width, so the clip-pattern
+        # dependence on total token count is visible on a single call.
+        n_tok = 64
+        mcfg = dataclasses.replace(cfg.moe, capacity_factor=0.5)
+        mp = moe.init_moe(jax.random.PRNGKey(7), mcfg)
+        x = jax.random.normal(jax.random.PRNGKey(8), (n_tok, mcfg.d_model))
+        clipped_full = moe.moe_ffn(mp, x, mcfg)[: n_tok - 1]
+        clipped_pre = moe.moe_ffn(mp, x[: n_tok - 1], mcfg)
+        assert float(jnp.abs(clipped_full - clipped_pre).max()) > 1e-6, (
+            "capacity clipping no longer depends on batch composition — "
+            "revisit MOE_CAPACITY_XFAIL, the xfail may be fixable now")
+        mnocap = dataclasses.replace(mcfg, capacity_factor=100.0)
+        open_full = moe.moe_ffn(mp, x, mnocap)[: n_tok - 1]
+        open_pre = moe.moe_ffn(mp, x[: n_tok - 1], mnocap)
+        np.testing.assert_array_equal(np.asarray(open_full),
+                                      np.asarray(open_pre))
 
     def test_chunked_ce_matches_full(self):
         cfg = LM_VARIANTS["qwen3-1.7b"]

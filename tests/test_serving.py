@@ -10,7 +10,8 @@ from repro.data.tracegen import generate_sls_batch
 from repro.flashsim.device import TLC
 from repro.serving import (BatcherConfig, DynamicBatcher, RequestQueue,
                            bursty_arrivals, make_requests, percentiles,
-                           poisson_arrivals, replay)
+                           poisson_arrivals, replay, summarize,
+                           summarize_classes)
 from repro.serving.workload import Request
 
 
@@ -184,8 +185,56 @@ class TestMetrics:
         assert p95 == pytest.approx(95.05)
         assert p99 == pytest.approx(99.01)
 
-    def test_percentiles_empty(self):
-        assert percentiles(np.array([])) == (0.0, 0.0, 0.0)
+    def test_percentiles_empty_is_nan(self):
+        """Degenerate NaN contract (DESIGN.md §7.4): no served sample means
+        NaN quantiles, distinguishable from a real 0 µs latency."""
+        out = percentiles(np.array([]))
+        assert len(out) == 3 and all(np.isnan(v) for v in out)
+
+    def test_percentiles_drops_nonfinite(self):
+        """Shed requests carry NaN latency; they must not poison the
+        served-side quantiles."""
+        lat = np.arange(1.0, 101.0)
+        noisy = np.concatenate([lat, [np.nan, np.nan, np.inf]])
+        assert percentiles(noisy) == percentiles(lat)
+        all_nan = np.full(5, np.nan)
+        assert all(np.isnan(v) for v in percentiles(all_nan))
+
+    def test_summarize_all_shed(self):
+        """A lane whose every request was shed: exact counts, NaN stats,
+        and no exception anywhere."""
+        lat = np.full(7, np.nan)
+        rep = summarize("p", lat, makespan_us=1_000.0, batch_sizes=[],
+                        busy_us=0.0, n_shed=7)
+        assert rep.n_requests == 0
+        assert rep.n_shed == 7 and rep.n_offered == 7
+        assert rep.shed_frac == pytest.approx(1.0)
+        assert np.isnan(rep.p99_us) and np.isnan(rep.mean_us) \
+            and np.isnan(rep.max_us)
+        assert rep.throughput_rps == 0.0
+        rep.row()                      # formatting must not raise on NaN
+
+    def test_summarize_classes_absent_and_all_shed(self):
+        """Every class gets a per-class entry: an absent class and an
+        all-shed class both report NaN quantiles with correct counts."""
+        names = ("latency_critical", "standard", "bulk")
+        classes = np.array([1, 1, 2, 2, 2])    # no latency_critical
+        lat = np.array([10.0, 20.0, np.nan, np.nan, np.nan])
+        shed = ~np.isfinite(lat)
+        degraded = np.array([True, False, False, False, False])
+        per = summarize_classes("p", classes, lat, 1_000.0, shed,
+                                degraded, names)
+        assert set(per) == set(names)
+        lc = per["latency_critical"]
+        assert lc.n_requests == 0 and lc.n_shed == 0 and lc.n_offered == 0
+        assert np.isnan(lc.p50_us) and lc.shed_frac == 0.0
+        std = per["standard"]
+        assert std.n_requests == 2 and std.n_degraded == 1
+        assert std.p50_us == pytest.approx(15.0)
+        bulk = per["bulk"]
+        assert bulk.n_requests == 0 and bulk.n_shed == 3
+        assert bulk.shed_frac == pytest.approx(1.0)
+        assert np.isnan(bulk.p99_us)
 
 
 class TestScheduler:

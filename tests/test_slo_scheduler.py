@@ -1,0 +1,273 @@
+"""Scheduler invariants of the SLO lane (DESIGN.md §7).
+
+Two layers over the same invariant checkers:
+
+* a deterministic seeded sweep (``TestInvariantSweep``) — 200+ generated
+  cases per invariant, runs everywhere, no third-party dependency;
+* hypothesis property tests (``TestInvariantProperties``) — the same
+  checkers driven by minimizing search, skipped where hypothesis is not
+  installed (CI installs it; see ``requirements.txt`` extras note).
+
+Invariants:
+
+1. **No service before arrival** — a served request completes at or
+   after its arrival; latency is non-negative.
+2. **Per-channel busy-time conservation** — each channel's service
+   intervals are disjoint, their total equals the trace's ``busy_us``.
+3. **Completion-count conservation** — served + shed == offered, the
+   shed mask and the NaN completions are the same set, and the
+   per-class reports partition the totals.
+4. **Priority monotonicity** — tightening one request's class never
+   worsens *that request's* latency in a fixed stream, in the regime
+   where service is state-independent (max_batch=1 so batches are
+   single requests, degrade off, shed off, globally-distinct rows at
+   one row per page so no cross-request cache coupling).
+5. **Disabled-scheduler bit-identity** — a single-class stream with
+   infinite deadlines replays bit-identically to the plain ``replay``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import TableSpec
+from repro.serving import (SLO_CLASSES, BatcherConfig, Deployment,
+                           DeploymentConfig, Request, SLOConfig, replay,
+                           slo_replay)
+
+PAGE_BYTES = 16 * 1024          # TLC page size (one row per page below)
+
+
+def _engine(tables, lookups=4, policies=("recflash",)):
+    dep = Deployment(DeploymentConfig(
+        tables=tables, policies=policies, lookups=lookups,
+        sample_inferences=32, seed=5))
+    return dep.engines[policies[0]]
+
+
+@pytest.fixture(scope="module")
+def engine():
+    """Small shared lane for the general invariants (state is reset at
+    the top of every replay, so reuse across cases is exact)."""
+    return _engine([TableSpec(512, 64)] * 2)
+
+
+@pytest.fixture(scope="module")
+def mono_engine():
+    """State-independent-service lane for the monotonicity invariant:
+    one row per page (vec_bytes == page_bytes) and a row space large
+    enough that every case can give every request globally-distinct rows
+    — no request's service time depends on what ran before it."""
+    return _engine([TableSpec(512, PAGE_BYTES)], lookups=2)
+
+
+def make_case(seed: int):
+    """One generated scheduling case: stream + SLO knobs + lane shape."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 40))
+    gaps = rng.exponential(float(rng.choice([20.0, 200.0, 2000.0])), n)
+    arrivals = np.cumsum(gaps)
+    cls = rng.integers(0, len(SLO_CLASSES), size=n)
+    lookups = int(rng.integers(1, 6))
+    reqs = [Req(i, float(arrivals[i]), SLO_CLASSES[cls[i]],
+                rng.integers(0, 2, size=lookups),
+                rng.integers(0, 512, size=lookups))
+            for i in range(n)]
+    slo = SLOConfig(
+        deadline_lc_us=float(rng.choice([200.0, 2_000.0])),
+        deadline_std_us=float(rng.choice([1_000.0, 20_000.0])),
+        deadline_bulk_us=float(rng.choice([2_000.0, 50_000.0])),
+        bulk_chunk=int(rng.integers(1, 9)),
+        headroom=float(rng.choice([0.25, 1.0])),
+        shed_after=float(rng.choice([0.5, 2.0])),
+        degrade=bool(rng.integers(0, 2)),
+        lc_max_wait_us=float(rng.choice([0.0, 100.0])))
+    batcher = BatcherConfig(max_batch=int(rng.integers(1, 17)),
+                            max_wait_us=float(rng.choice([0.0, 500.0])))
+    n_channels = int(rng.integers(1, 4))
+    return reqs, slo, batcher, n_channels
+
+
+def Req(rid, arrival, slo, tables, rows):
+    return Request(rid=rid, arrival_us=arrival, slo=slo,
+                   tables=np.asarray(tables, dtype=np.int64),
+                   rows=np.asarray(rows, dtype=np.int64))
+
+
+# ---------------------------------------------------------------- checkers
+
+def check_no_service_before_arrival(engine, seed):
+    reqs, slo, batcher, nc = make_case(seed)
+    tr = slo_replay(reqs, engine, slo, batcher, n_channels=nc)
+    arr = np.array([r.arrival_us for r in reqs])
+    served = np.isfinite(tr.completions_us)
+    assert np.all(tr.completions_us[served] >= arr[served] - 1e-9)
+    assert np.all(tr.latencies_us[served] >= -1e-9)
+    for b, start in zip(tr.batches, tr.batch_starts_us):
+        head = min(r.arrival_us for r in b.requests)
+        assert start >= head - 1e-9
+        assert b.dispatch_us >= head - 1e-9
+
+
+def check_busy_conservation(engine, seed):
+    reqs, slo, batcher, nc = make_case(seed)
+    tr = slo_replay(reqs, engine, slo, batcher, n_channels=nc)
+    # reconstruct each batch's service interval from its requests' shared
+    # completion; intervals on one channel must be disjoint and sum to
+    # the trace's busy total.
+    total = 0.0
+    per_chan: dict[int, list] = {}
+    for b, c, start in zip(tr.batches, tr.batch_channels.tolist(),
+                           tr.batch_starts_us.tolist()):
+        done = float(tr.completions_us[tr.index_of[b.requests[0].rid]])
+        assert done >= start - 1e-9
+        total += done - start
+        per_chan.setdefault(c, []).append((start, done))
+    assert total == pytest.approx(tr.busy_us, rel=1e-9, abs=1e-6)
+    for spans in per_chan.values():
+        spans.sort()
+        for (s0, d0), (s1, _) in zip(spans, spans[1:]):
+            assert s1 >= d0 - 1e-9, "overlapping service on one channel"
+
+
+def check_count_conservation(engine, seed):
+    reqs, slo, batcher, nc = make_case(seed)
+    tr = slo_replay(reqs, engine, slo, batcher, n_channels=nc)
+    n = len(reqs)
+    served = np.isfinite(tr.completions_us)
+    assert np.array_equal(~served, tr.shed_mask)
+    assert np.array_equal(np.isfinite(tr.latencies_us), served)
+    rep = tr.report
+    assert rep.n_requests + rep.n_shed == n == rep.n_offered
+    assert rep.n_requests == int(served.sum())
+    # only bulk is ever shed, and every batch member was marked served
+    assert not tr.shed_mask[tr.slo_classes != SLO_CLASSES.index("bulk")].any()
+    n_in_batches = sum(b.size for b in tr.batches)
+    assert n_in_batches == rep.n_requests
+    # per-class reports partition the totals
+    assert sum(c.n_requests for c in rep.per_class.values()) \
+        == rep.n_requests
+    assert sum(c.n_shed for c in rep.per_class.values()) == rep.n_shed
+    assert sum(c.n_degraded for c in rep.per_class.values()) \
+        == rep.n_degraded
+
+
+def mono_case(seed: int):
+    """Stream for the monotonicity regime: globally-distinct rows (one
+    row per page), single-request batches, shed/degrade off."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 30))
+    gaps = rng.exponential(float(rng.choice([50.0, 500.0])), n)
+    arrivals = np.cumsum(gaps)
+    cls = rng.integers(0, len(SLO_CLASSES), size=n)
+    lookups = 2
+    reqs = [Req(i, float(arrivals[i]), SLO_CLASSES[cls[i]],
+                np.zeros(lookups, dtype=np.int64),
+                np.arange(i * lookups, (i + 1) * lookups))
+            for i in range(n)]
+    slo = SLOConfig(deadline_lc_us=float(rng.choice([500.0, 5_000.0])),
+                    deadline_std_us=10_000.0, deadline_bulk_us=50_000.0,
+                    bulk_chunk=int(rng.integers(1, 9)),
+                    shed_after=1e9,       # shed off: pure priority order
+                    degrade=False)
+    batcher = BatcherConfig(max_batch=1, max_wait_us=0.0)
+    nc = int(rng.integers(1, 3))
+    target = int(rng.integers(0, n))
+    return reqs, slo, batcher, nc, target
+
+
+def check_priority_monotonicity(mono_engine, seed):
+    reqs, slo, batcher, nc, target = mono_case(seed)
+    ci = SLO_CLASSES.index(reqs[target].slo)
+    if ci == 0:
+        return                      # already latency_critical
+    t0 = slo_replay(reqs, mono_engine, slo, batcher, n_channels=nc)
+    before = float(t0.latencies_us[target])
+    reqs[target].slo = SLO_CLASSES[ci - 1]   # tighten one level
+    t1 = slo_replay(reqs, mono_engine, slo, batcher, n_channels=nc)
+    after = float(t1.latencies_us[target])
+    assert after <= before + 1e-6, (
+        f"tightening {SLO_CLASSES[ci]} -> {SLO_CLASSES[ci - 1]} worsened "
+        f"latency {before:.3f} -> {after:.3f} (seed {seed})")
+
+
+def check_disabled_bit_identity(engine, seed):
+    reqs, _, batcher, nc = make_case(seed)
+    for r in reqs:
+        r.slo = "standard"
+    inert = SLOConfig(deadline_lc_us=1e15, deadline_std_us=1e15,
+                      deadline_bulk_us=1e15, degrade=False)
+    t_plain = replay(reqs, engine, batcher, n_channels=nc)
+    t_slo = slo_replay(reqs, engine, inert, batcher, n_channels=nc)
+    assert np.array_equal(t_plain.latencies_us, t_slo.latencies_us)
+    assert np.array_equal(t_plain.completions_us, t_slo.completions_us)
+    assert np.array_equal(t_plain.batch_channels, t_slo.batch_channels)
+    assert np.array_equal(t_plain.batch_starts_us, t_slo.batch_starts_us)
+    assert t_plain.busy_us == t_slo.busy_us
+    assert t_slo.report.n_shed == 0 and t_slo.report.n_degraded == 0
+
+
+# ------------------------------------------------------- deterministic sweep
+
+N_SWEEP = 220                       # > 200 examples per invariant
+
+
+class TestInvariantSweep:
+    def test_no_service_before_arrival(self, engine):
+        for seed in range(N_SWEEP):
+            check_no_service_before_arrival(engine, seed)
+
+    def test_busy_time_conservation(self, engine):
+        for seed in range(N_SWEEP):
+            check_busy_conservation(engine, seed)
+
+    def test_completion_count_conservation(self, engine):
+        for seed in range(N_SWEEP):
+            check_count_conservation(engine, seed)
+
+    def test_priority_monotonicity(self, mono_engine):
+        for seed in range(N_SWEEP):
+            check_priority_monotonicity(mono_engine, seed)
+
+    def test_disabled_bit_identity(self, engine):
+        for seed in range(N_SWEEP):
+            check_disabled_bit_identity(engine, seed)
+
+
+# ------------------------------------------------------------ hypothesis
+# A plain import guard, not importorskip: that would skip the whole
+# module and take the deterministic sweep above down with it.
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SEEDS = st.integers(0, 2 ** 24)
+
+    class TestInvariantProperties:
+        @given(SEEDS)
+        @settings(max_examples=200, deadline=None)
+        def test_no_service_before_arrival(self, engine, seed):
+            check_no_service_before_arrival(engine, seed)
+
+        @given(SEEDS)
+        @settings(max_examples=200, deadline=None)
+        def test_busy_time_conservation(self, engine, seed):
+            check_busy_conservation(engine, seed)
+
+        @given(SEEDS)
+        @settings(max_examples=200, deadline=None)
+        def test_completion_count_conservation(self, engine, seed):
+            check_count_conservation(engine, seed)
+
+        @given(SEEDS)
+        @settings(max_examples=200, deadline=None)
+        def test_priority_monotonicity(self, mono_engine, seed):
+            check_priority_monotonicity(mono_engine, seed)
+
+        @given(SEEDS)
+        @settings(max_examples=200, deadline=None)
+        def test_disabled_bit_identity(self, engine, seed):
+            check_disabled_bit_identity(engine, seed)
