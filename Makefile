@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench bench-perf serve-demo lint docs-check
+.PHONY: test bench-smoke bench bench-perf serve-demo lint lint-deep \
+	typecheck docs-check
 
 # tier-1 verify
 test:
@@ -41,8 +42,23 @@ serve-demo:
 docs-check:
 	$(PY) tools/docs_check.py
 
-# lint floor (ruff.toml): syntax errors, undefined names, pyflakes
+# general lint (ruff.toml): full pyflakes, layout, import order, bugbear
 lint:
 	@command -v ruff >/dev/null 2>&1 \
 		|| { echo "ruff not installed (pip install ruff)"; exit 1; }
-	ruff check src tests benchmarks examples
+	ruff check src tests benchmarks examples tools
+
+# repo-specific determinism static analysis (tools/repro_lint, DESIGN.md §8):
+# simulated-clock purity, RNG discipline, ordering hazards, units
+# discipline, API discipline. Fails on new findings or stale baseline
+# entries; regenerate the baseline with
+#   $(PY) -m tools.repro_lint --update-baseline
+lint-deep:
+	$(PY) -m tools.repro_lint
+
+# typing gate (mypy.ini): repro.core + repro.serving are strict-ish
+# islands (disallow_untyped_defs); the rest is checked leniently
+typecheck:
+	@command -v mypy >/dev/null 2>&1 \
+		|| { echo "mypy not installed (pip install mypy)"; exit 1; }
+	mypy --config-file mypy.ini

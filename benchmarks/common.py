@@ -46,9 +46,9 @@ def mlp_us_per_inference(cfg: DLRMConfig) -> float:
     sizes = (cfg.n_dense,) + tuple(cfg.bot_mlp)
     if sizes[-1] != cfg.embed_dim:
         sizes = sizes + (cfg.embed_dim,)
-    f += sum(2.0 * a * b for a, b in zip(sizes[:-1], sizes[1:]))
+    f += sum(2.0 * a * b for a, b in zip(sizes[:-1], sizes[1:], strict=True))
     tsizes = (cfg.top_in,) + tuple(cfg.top_mlp) + (1,)
-    f += sum(2.0 * a * b for a, b in zip(tsizes[:-1], tsizes[1:]))
+    f += sum(2.0 * a * b for a, b in zip(tsizes[:-1], tsizes[1:], strict=True))
     n = cfg.n_vectors
     f += 2.0 * n * n * cfg.embed_dim
     return f / (MLP_GFLOPS * 1e3)          # us

@@ -7,7 +7,7 @@ SLC ~54/77/62%, QLC ~66/89/75% for RMC1/2/3.
 
 from __future__ import annotations
 
-from benchmarks.common import K_VALUES, reduction, sweep
+from benchmarks.common import reduction, sweep
 
 
 def run(parts=("TLC",), seed: int = 0):

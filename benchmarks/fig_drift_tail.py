@@ -107,7 +107,7 @@ def run_cell(scenario: str, trigger: str, hot_frac: float = 0.02,
 def emit_rows(scenario, trigger, hot_frac, cell):
     rows = []
     for pol, (tr, (starts, counts, pcts)) in cell.items():
-        for s, c, p in zip(starts, counts, pcts):
+        for s, c, p in zip(starts, counts, pcts, strict=True):
             rows.append(f"fig_drift_bin,{scenario},{trigger},{hot_frac},"
                         f"{pol},{s / 1e6:.2f},{int(c)},{p[0] / 1e3:.3f},"
                         f"{p[1] / 1e3:.3f},{p[2] / 1e3:.3f}")
@@ -153,7 +153,9 @@ def check_spike_and_recovery(trace, part_name: str = "TLC",
     steady = lat[comp > last.t_done_us + bin_us]
     assert pre.size and spike.size and steady.size, \
         "stream too short to resolve pre/spike/steady phases"
-    p99 = lambda a: float(np.percentile(a, 99))  # noqa: E731
+    def p99(a):
+        return float(np.percentile(a, 99))
+
     p99_pre, p99_spike, p99_steady = p99(pre), p99(spike), p99(steady)
     assert p99_spike > p99_pre, (
         f"no in-band interference spike: spike p99 {p99_spike / 1e3:.2f}ms "

@@ -16,9 +16,8 @@ import os
 import shutil
 import tempfile
 
-import numpy as np
-
 import jax
+import numpy as np
 from jax.tree_util import keystr, tree_flatten_with_path
 
 
@@ -57,7 +56,7 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
                     else [None] * len(leaves))
     out = []
-    for (p, leaf), sh in zip(leaves, shard_leaves):
+    for (p, leaf), sh in zip(leaves, shard_leaves, strict=True):
         arr = data[keystr(p)]
         if sh is not None:
             out.append(jax.device_put(arr, sh))

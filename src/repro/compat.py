@@ -61,6 +61,19 @@ else:
         return jax.lax.psum(1, axis_name)
 
 
+# Pallas still lives under jax.experimental; re-exporting it here keeps
+# the experimental import surface at one call site (repro-lint RL005), so
+# when it graduates (or the tpu submodule moves again) only compat.py
+# changes. ``pallas_tpu`` is None on builds without the TPU backend
+# extension; kernels guard on it before using TPU-only primitives.
+from jax.experimental import pallas  # noqa: E402,F401
+
+try:
+    from jax.experimental.pallas import tpu as pallas_tpu  # noqa: E402
+except ImportError:
+    pallas_tpu = None
+
+
 def compiled_cost_analysis(compiled) -> dict:
     """``Compiled.cost_analysis()`` as a dict on every jax version."""
     ca = compiled.cost_analysis()

@@ -1,1 +1,3 @@
 from repro.configs.base import ArchBundle, StepDef, get_arch, list_archs
+
+__all__ = ["ArchBundle", "StepDef", "get_arch", "list_archs"]

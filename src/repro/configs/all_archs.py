@@ -1,17 +1,17 @@
-"""Import side-effect module: populates the arch registry."""
+"""Import side-effect module: populates the arch registry.
 
-# LM family
-import repro.configs.qwen3_1_7b        # noqa: F401
-import repro.configs.qwen2_0_5b        # noqa: F401
-import repro.configs.nemotron_4_15b    # noqa: F401
-import repro.configs.qwen3_moe_30b_a3b  # noqa: F401
+Covers the LM family (qwen/nemotron/deepseek), GNN (graphsage), RecSys
+(din/dlrm/bert4rec) and the paper's own benchmark models (rmc).
+"""
+
+import repro.configs.bert4rec_arch     # noqa: F401
 import repro.configs.deepseek_v3_671b  # noqa: F401
-# GNN
-import repro.configs.graphsage_reddit  # noqa: F401
-# RecSys
 import repro.configs.din_arch          # noqa: F401
 import repro.configs.dlrm_mlperf       # noqa: F401
 import repro.configs.dlrm_rm2          # noqa: F401
-import repro.configs.bert4rec_arch     # noqa: F401
-# Paper's own benchmark models
+import repro.configs.graphsage_reddit  # noqa: F401
+import repro.configs.nemotron_4_15b    # noqa: F401
+import repro.configs.qwen2_0_5b        # noqa: F401
+import repro.configs.qwen3_1_7b        # noqa: F401
+import repro.configs.qwen3_moe_30b_a3b  # noqa: F401
 import repro.configs.rmc               # noqa: F401

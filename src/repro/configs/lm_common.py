@@ -23,8 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import optim
-from repro.configs.base import ArchBundle, StepDef, LONG_500K_SKIP
+from repro.configs.base import LONG_500K_SKIP, ArchBundle, StepDef
 from repro.distributed.shardings import make_param_specs
 from repro.models import lm
 

@@ -1,8 +1,6 @@
 """qwen3-1.7b [hf:Qwen/Qwen3-8B family; dense] — 28L d2048 16H (GQA kv=8)
 d_ff 6144, vocab 151936, qk-norm, tied embeddings."""
 
-import jax.numpy as jnp
-
 from repro import optim
 from repro.configs.base import register
 from repro.configs.lm_common import make_lm_bundle

@@ -13,16 +13,12 @@ differentiated params.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import optim
-from repro.configs.base import ArchBundle, StepDef
-from repro.configs.lm_common import CellPlan, bt_axes, _sds
+from repro.configs.lm_common import CellPlan, bt_axes
 from repro.distributed.shardings import make_param_specs
 
 RECSYS_SHAPES = {

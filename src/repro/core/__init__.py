@@ -8,3 +8,15 @@ from repro.core.freq import AccessStats
 from repro.core.page_cache import PageLRU
 from repro.core.remap import Mapping, build_mapping, build_mapping_from_order
 from repro.core.triggers import PeriodTrigger, ThresholdTrigger
+
+__all__ = [
+    "AccessStats",
+    "AdaptiveHashTable",
+    "Mapping",
+    "PageLRU",
+    "PeriodTrigger",
+    "ThresholdTrigger",
+    "UpdateReport",
+    "build_mapping",
+    "build_mapping_from_order",
+]

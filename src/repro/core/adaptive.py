@@ -48,7 +48,8 @@ class UpdateReport:
 class AdaptiveHashTable:
     """Frequency-ordered mapping with hot-region-bounded updates (Alg. 1)."""
 
-    def __init__(self, keys, freqs, addrs, hot_frac: float):
+    def __init__(self, keys: np.ndarray, freqs: np.ndarray,
+                 addrs: np.ndarray, hot_frac: float) -> None:
         """Entries must arrive frequency-descending (the offline sort)."""
         if not 0.0 < hot_frac <= 1.0:
             raise ValueError("hot_frac must be in (0, 1]")
@@ -61,7 +62,7 @@ class AdaptiveHashTable:
         self._addr: dict[int, int] = {}
         order = []
         last = None
-        for k, f, a in zip(keys, freqs, addrs):
+        for k, f, a in zip(keys, freqs, addrs, strict=True):
             k, f = int(k), int(f)
             if last is not None and f > last:
                 raise ValueError("initial entries must be freq-descending")

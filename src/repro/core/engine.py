@@ -61,7 +61,7 @@ class ShardPlan:
 
     def __init__(self, tables: list[TableSpec],
                  stats: "list[AccessStats]", n_devices: int,
-                 strategy: str = "table"):
+                 strategy: str = "table") -> None:
         if n_devices < 1:
             raise ValueError("n_devices must be >= 1")
         if strategy not in SHARD_STRATEGIES:
@@ -94,7 +94,7 @@ class ShardPlan:
             self.local_row_id = []
             owned_rows: list[list[np.ndarray]] = [[] for _ in
                                                   range(n_devices)]
-            for t, (spec, st) in enumerate(zip(tables, stats)):
+            for t, (spec, st) in enumerate(zip(tables, stats, strict=True)):
                 order = st.rank_order()            # rank -> global row
                 dev = np.empty(spec.n_rows, dtype=np.int64)
                 dev[order] = np.arange(spec.n_rows, dtype=np.int64) \
@@ -177,7 +177,7 @@ class RecFlashEngine:
                  policy: str | PolicyConfig = "recflash",
                  sample_stats: list[AccessStats] | None = None,
                  hot_frac: float = 0.05,
-                 cache_cfg: CacheConfig | None = None):
+                 cache_cfg: CacheConfig | None = None) -> None:
         self.tables = tables
         self.part = part
         self.policy = POLICIES[policy] if isinstance(policy, str) else policy
@@ -185,12 +185,12 @@ class RecFlashEngine:
         self.stats = sample_stats or [
             AccessStats(np.zeros(t.n_rows, dtype=np.int64)) for t in tables]
         mappings = [self._build(t, s)
-                    for t, s in zip(tables, self.stats)]
+                    for t, s in zip(tables, self.stats, strict=True)]
         self.sim = SLSSimulator(part, self.policy, mappings, TIMING, cache_cfg)
         # Algorithm-1 state (only meaningful for remapping policies)
         self.hash_tables: list[AdaptiveHashTable] = []
         if self.policy.mapping_mode != "baseline":
-            for t, s in zip(tables, self.stats):
+            for t, s in zip(tables, self.stats, strict=True):
                 order = s.rank_order()
                 self.hash_tables.append(AdaptiveHashTable(
                     keys=order, freqs=s.counts[order],
@@ -280,7 +280,7 @@ class RecFlashEngine:
         """Sparse {row: count} view of the window (trigger/Alg.-1 input)."""
         w = self._window[tid]
         idx = np.flatnonzero(w)
-        return dict(zip(idx.tolist(), w[idx].tolist()))
+        return dict(zip(idx.tolist(), w[idx].tolist(), strict=True))
 
     # -- online training / adaptive remap -------------------------------------
     def _eval_trigger(self, trigger: ThresholdTrigger | PeriodTrigger,
@@ -444,7 +444,7 @@ class ShardedEngine:
                  hot_frac: float = 0.05,
                  cache_cfg: CacheConfig | None = None,
                  n_devices: int = 2, shard: str = "table",
-                 plan: ShardPlan | None = None):
+                 plan: ShardPlan | None = None) -> None:
         self.tables = tables
         self.part = part
         self.policy = POLICIES[policy] if isinstance(policy, str) else policy
@@ -517,6 +517,6 @@ class ShardedEngine:
             if log.update_report is not None:
                 merged += log.update_report
         return DayLog(day=day, inference=SimResult(), triggered=True,
-                      remap_latency_us=max(l.remap_latency_us for l in fired),
-                      remap_energy_uj=sum(l.remap_energy_uj for l in fired),
+                      remap_latency_us=max(f.remap_latency_us for f in fired),
+                      remap_energy_uj=sum(f.remap_energy_uj for f in fired),
                       update_report=merged)

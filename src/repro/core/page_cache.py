@@ -21,6 +21,7 @@ loop (property-tested in ``tests/test_flashsim.py``).
 from __future__ import annotations
 
 from collections import OrderedDict
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -61,7 +62,8 @@ def _count_earlier_leq(vals: np.ndarray) -> np.ndarray:
     return res
 
 
-def lru_hit_mask(pages, n_slots: int, state=()) -> tuple[np.ndarray, list]:
+def lru_hit_mask(pages: np.ndarray, n_slots: int,
+                 state: Sequence[int] = ()) -> tuple[np.ndarray, list]:
     """Exact LRU hit mask for a page access stream, fully vectorised.
 
     ``state`` is the resident-page sequence in LRU -> MRU order (at most
@@ -117,7 +119,7 @@ def lru_hit_mask(pages, n_slots: int, state=()) -> tuple[np.ndarray, list]:
 class PageLRU:
     """Page-granular LRU with ``n_slots`` page frames."""
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int) -> None:
         if n_slots < 1:
             raise ValueError("cache needs at least one slot")
         self.n_slots = int(n_slots)
@@ -143,7 +145,7 @@ class PageLRU:
         self._slots[page_id] = None
         return False
 
-    def bulk_access(self, pages) -> np.ndarray:
+    def bulk_access(self, pages: np.ndarray) -> np.ndarray:
         """Touch a whole access stream at once; returns the per-access hit
         mask. Exactly equivalent (hits, final state, counters) to calling
         :meth:`access` per element, but vectorised via :func:`lru_hit_mask`.

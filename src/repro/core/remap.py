@@ -46,7 +46,8 @@ class Mapping:
     def n_pages(self) -> int:
         return int(self.page.max()) + 1 if self.page.size else 0
 
-    def lookup(self, rows: np.ndarray):
+    def lookup(self, rows: np.ndarray
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Vectorised physical address lookup for a batch of logical rows."""
         rows = np.asarray(rows)
         return self.plane[rows], self.page[rows], self.slot[rows]

@@ -1,5 +1,14 @@
 """Distribution helpers: sharding rules, gradient compression, collectives."""
 
+from repro.distributed.compression import CompressionState, compressed_psum
 from repro.distributed.shardings import (batch_spec, make_param_specs,
-                                         shard_batch, replicate)
-from repro.distributed.compression import compressed_psum, CompressionState
+                                         replicate, shard_batch)
+
+__all__ = [
+    "CompressionState",
+    "batch_spec",
+    "compressed_psum",
+    "make_param_specs",
+    "replicate",
+    "shard_batch",
+]

@@ -241,7 +241,7 @@ class SLSSimulator:
         seq_drain = pol.sequential_drain
 
         for pl, pg, sl, vb in zip(planes.tolist(), pages.tolist(),
-                                  slots.tolist(), vec_bytes.tolist()):
+                                  slots.tolist(), vec_bytes.tolist(), strict=True):
             if cache is not None and cache.access(pg):
                 cache_hits += 1
                 sram_time += ccfg.t_sram_vec

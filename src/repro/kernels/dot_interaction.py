@@ -14,7 +14,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.compat import pallas as pl
 
 
 def _dot_kernel(z_ref, out_ref, *, block_b: int):

@@ -32,8 +32,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import pallas as pl
+from repro.compat import pallas_tpu as pltpu
 
 
 def _sls_kernel(idx_ref, hot_ref, cold_ref, out_ref, scratch, sem, *,
@@ -41,38 +42,38 @@ def _sls_kernel(idx_ref, hot_ref, cold_ref, out_ref, scratch, sem, *,
     d = out_ref.shape[-1]
 
     def bag(i, _):
-        def cold_copy(l):
-            """The (deterministic) DMA descriptor for lookup ``l``."""
-            idx = idx_ref[i, l]
-            slot = l % 2
+        def cold_copy(lk):
+            """The (deterministic) DMA descriptor for lookup ``lk``."""
+            idx = idx_ref[i, lk]
+            slot = lk % 2
             return pltpu.make_async_copy(
                 cold_ref.at[pl.dslice(idx - hot_size, 1)],
                 scratch.at[pl.dslice(slot, 1)], sem.at[slot])
 
-        def start_if_cold(l):
+        def start_if_cold(lk):
             def start():
-                cold_copy(l).start()
+                cold_copy(lk).start()
                 return 0
-            jax.lax.cond(idx_ref[i, l] >= hot_size, start, lambda: 0)
+            jax.lax.cond(idx_ref[i, lk] >= hot_size, start, lambda: 0)
 
         # warm up: lookup 0's cold fetch is in flight before the loop
         start_if_cold(0)
 
-        def lookup(l, acc):
-            idx = idx_ref[i, l]
-            # start l+1's copy into the other slot before waiting on l's,
+        def lookup(lk, acc):
+            idx = idx_ref[i, lk]
+            # start lk+1's copy into the other slot before waiting on lk's,
             # so the next cold fetch overlaps this lookup's wait+accumulate
             if n_lookups > 1:
-                jax.lax.cond(l + 1 < n_lookups,
-                             lambda: (start_if_cold(l + 1), 0)[1],
+                jax.lax.cond(lk + 1 < n_lookups,
+                             lambda: (start_if_cold(lk + 1), 0)[1],
                              lambda: 0)
 
             def from_hot():
                 return hot_ref[pl.dslice(idx, 1), :]
 
             def from_cold():
-                cold_copy(l).wait()
-                return scratch[pl.dslice(l % 2, 1), :]
+                cold_copy(lk).wait()
+                return scratch[pl.dslice(lk % 2, 1), :]
 
             row = jax.lax.cond(idx < hot_size, from_hot, from_cold)
             return acc + row.astype(jnp.float32)
@@ -89,17 +90,17 @@ def recflash_sls(hot: jax.Array, cold: jax.Array, indices: jax.Array,
                  block_b: int = 8, interpret: bool = False) -> jax.Array:
     """Two-tier SLS. hot (H,D), cold (V-H,D), indices (B,L) -> (B,D) f32."""
     h, d = hot.shape
-    b, l = indices.shape
+    b, n_lk = indices.shape
     if b % block_b:
         raise ValueError(f"batch {b} must divide by block_b {block_b}")
     grid = (b // block_b,)
     kernel = functools.partial(_sls_kernel, hot_size=h, block_b=block_b,
-                               n_lookups=l)
+                               n_lookups=n_lk)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_b, l), lambda i: (i, 0),
+            pl.BlockSpec((block_b, n_lk), lambda i: (i, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((h, d), lambda i: (0, 0)),          # VMEM, pinned
             pl.BlockSpec(memory_space=pl.ANY),               # cold in HBM

@@ -17,17 +17,17 @@ mismatch, OOM at compile, unsupported collective) is a bug in the system —
 the run exits nonzero if any non-skipped cell fails.
 """
 
-import argparse
-import json
-import time
-import traceback
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
 
-import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+import jax               # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs.base import get_arch, list_archs
-from repro.launch.mesh import make_production_mesh
-from repro.launch import roofline as rl
+from repro.configs.base import get_arch, list_archs         # noqa: E402
+from repro.launch import roofline as rl                     # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
 
 
 def _shardings(mesh, spec_tree):

@@ -19,10 +19,9 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import repro.models.dlrm as dlrm
 from repro.embedding.layout import RemapSpec, remap_table
@@ -124,7 +123,7 @@ def main() -> int:
     if not args.skip_compute:
         params = dlrm.init(jax.random.PRNGKey(args.seed), cfg)
         params["tables"] = [remap_table(tbl, s)
-                            for tbl, s in zip(params["tables"], specs)]
+                            for tbl, s in zip(params["tables"], specs, strict=True)]
         rank_ofs = [jnp.asarray(s.rank_of) for s in specs]
         dense_all = np.random.default_rng(args.seed * 7919).normal(
             size=(args.requests, cfg.n_dense)).astype(np.float32)

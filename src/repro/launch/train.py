@@ -17,13 +17,11 @@ wire it into a shard_map'd step the way the tests do.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import optim
 from repro.runtime import LoopConfig, TrainLoop
@@ -59,7 +57,7 @@ def _dlrm_pipeline(args, remap: bool):
                                             cfg.n_rows[0]).counts
             specs.append(RemapSpec.from_counts(counts))
         params["tables"] = [remap_table(tbl, s)
-                            for tbl, s in zip(params["tables"], specs)]
+                            for tbl, s in zip(params["tables"], specs, strict=True)]
         rank_ofs = [jnp.asarray(s.rank_of) for s in specs]
 
     opt = optim.partitioned(

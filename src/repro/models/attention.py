@@ -85,7 +85,7 @@ def _flash_fwd_impl(q, k, v, q_start, causal, q_chunk, kv_chunk, scale):
         qblk, qp = qi           # (B,H,qc,dh), (qc,)
 
         def inner(carry, ki):
-            m, l, acc = carry
+            m, lsum, acc = carry
             kblk, vblk, kp = ki  # (B,KV,kc,dh) x2, (kc,)
             kr = jnp.repeat(kblk, n_rep, axis=1) if n_rep > 1 else kblk
             vr = jnp.repeat(vblk, n_rep, axis=1) if n_rep > 1 else vblk
@@ -97,7 +97,7 @@ def _flash_fwd_impl(q, k, v, q_start, causal, q_chunk, kv_chunk, scale):
             m_new = jnp.maximum(m, logits.max(-1))
             alpha = jnp.exp(m - m_new)
             p = jnp.exp(logits - m_new[..., None])
-            l_new = l * alpha + p.sum(-1)
+            l_new = lsum * alpha + p.sum(-1)
             acc_new = acc * alpha[..., None] + jnp.einsum(
                 "bhqk,bhkd->bhqd", p.astype(q.dtype), vr).astype(jnp.float32)
             return (m_new, l_new, acc_new), None
@@ -105,8 +105,9 @@ def _flash_fwd_impl(q, k, v, q_start, causal, q_chunk, kv_chunk, scale):
         m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, h, q_chunk, dv), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), (kc, vc, k_pos))
-        l_safe = jnp.maximum(l, 1e-37)
+        (m, lsum, acc), _ = jax.lax.scan(inner, (m0, l0, a0),
+                                         (kc, vc, k_pos))
+        l_safe = jnp.maximum(lsum, 1e-37)
         out = (acc / l_safe[..., None]).astype(q.dtype)
         lse = m + jnp.log(l_safe)                       # (B,H,qc)
         return None, (out, lse)

@@ -14,7 +14,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import attention_dense
 from repro.models.common import (dense, dense_init, layer_norm, ln_init,
                                  normal_init)
 

@@ -35,7 +35,7 @@ def dense(params, x):
 def mlp_init(key, sizes, dtype=jnp.float32, bias=True):
     keys = jax.random.split(key, len(sizes) - 1)
     return [dense_init(k, a, b, dtype, bias)
-            for k, a, b in zip(keys, sizes[:-1], sizes[1:])]
+            for k, a, b in zip(keys, sizes[:-1], sizes[1:], strict=True)]
 
 
 def mlp(params, x, act=jax.nn.relu, final_act=None):

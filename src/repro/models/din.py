@@ -37,9 +37,9 @@ class DINConfig:
         a_in = 4 * d
         sizes = (a_in,) + tuple(self.attn_mlp) + (1,)
         attn = self.seq_len * sum(2 * x * y
-                                  for x, y in zip(sizes[:-1], sizes[1:]))
+                                  for x, y in zip(sizes[:-1], sizes[1:], strict=True))
         msz = (self.mlp_in,) + tuple(self.mlp) + (1,)
-        main = sum(2 * x * y for x, y in zip(msz[:-1], msz[1:]))
+        main = sum(2 * x * y for x, y in zip(msz[:-1], msz[1:], strict=True))
         return attn + main + 2 * self.seq_len * d
 
 

@@ -14,7 +14,6 @@ masked-psum SLS of ``repro.embedding.sharded``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -51,9 +50,9 @@ class DLRMConfig:
         """MODEL_FLOPS estimate (fwd): 2*MACs of MLPs + interaction + SLS."""
         f = 0
         sizes = (self.n_dense,) + tuple(self.bot_mlp) + (self.embed_dim,)
-        f += sum(2 * a * b for a, b in zip(sizes[:-1], sizes[1:]))
+        f += sum(2 * a * b for a, b in zip(sizes[:-1], sizes[1:], strict=True))
         tsizes = (self.top_in,) + tuple(self.top_mlp) + (1,)
-        f += sum(2 * a * b for a, b in zip(tsizes[:-1], tsizes[1:]))
+        f += sum(2 * a * b for a, b in zip(tsizes[:-1], tsizes[1:], strict=True))
         f += 2 * self.n_vectors * self.n_vectors * self.embed_dim  # pairwise dot
         f += 2 * self.n_tables * self.lookups * self.embed_dim     # SLS adds
         return f

@@ -155,7 +155,7 @@ def adafactor(lr: float, eps: float = 1e-30,
         flat_p, tree = jax.tree.flatten(params)
         flat_g = tree.flatten_up_to(grads)
         flat_s = tree.flatten_up_to(state["s"])
-        outs = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        outs = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s, strict=True)]
         new_params = tree.unflatten([o[0] for o in outs])
         new_s = tree.unflatten([o[1] for o in outs])
         return new_params, {"s": new_s, "t": t}
@@ -184,7 +184,7 @@ def _map_specs(params, param_specs, fn):
     """tree.map over (params, specs) where specs leaves are PartitionSpecs."""
     flat_p, tree = jax.tree.flatten(params)
     flat_s = tree.flatten_up_to(param_specs)
-    return tree.unflatten([fn(p, s) for p, s in zip(flat_p, flat_s)])
+    return tree.unflatten([fn(p, s) for p, s in zip(flat_p, flat_s, strict=True)])
 
 
 def partitioned(label_fn: Callable[[str], str],

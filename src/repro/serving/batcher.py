@@ -49,7 +49,7 @@ class BatcherConfig:
     max_batch: int = 64        # requests per batch (coalescing upper bound)
     max_wait_us: float = 500.0  # oldest request's batching-delay budget
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if self.max_wait_us < 0:
@@ -59,7 +59,7 @@ class BatcherConfig:
 class DynamicBatcher:
     """Forms batches from a RequestQueue against a simulated clock."""
 
-    def __init__(self, cfg: BatcherConfig | None = None):
+    def __init__(self, cfg: BatcherConfig | None = None) -> None:
         self.cfg = cfg or BatcherConfig()
 
     def next_span(self, arrivals: np.ndarray, pos: int,

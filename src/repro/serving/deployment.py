@@ -28,6 +28,9 @@ one ``RecFlashEngine`` per policy, and exposes
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING, Any
+
+import numpy as np
 
 from repro.core.engine import (SHARD_STRATEGIES, DayLog, RecFlashEngine,
                                ShardedEngine, ShardPlan, TableSpec)
@@ -46,6 +49,9 @@ from repro.serving.workload import (ARRIVAL_PROCESSES, DriftScenario,
                                     diurnal_arrivals,
                                     make_drifting_requests, make_requests)
 
+if TYPE_CHECKING:  # lazy at runtime (model shapes pull in jax)
+    from repro.models.dlrm import DLRMConfig
+
 ARRIVALS = ARRIVAL_PROCESSES
 
 
@@ -58,7 +64,7 @@ class TriggerConfig:
     portion: float = 0.001
     period_days: int = 1
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.kind not in ("threshold", "period"):
             raise ValueError(f"unknown trigger kind {self.kind!r}")
 
@@ -69,7 +75,7 @@ class TriggerConfig:
         return PeriodTrigger(period_days=self.period_days)
 
 
-def _arch_shape(name: str):
+def _arch_shape(name: str) -> DLRMConfig:
     """Resolve an architecture name to its DLRMConfig shape source."""
     key = name.lower().replace("-", "_")
     if key in ("rmc1", "rmc2", "rmc3"):
@@ -89,7 +95,7 @@ def _arch_shape(name: str):
         f"dlrm_rm2, dlrm_mlperf")
 
 
-def arch_model_config(cfg: "DeploymentConfig"):
+def arch_model_config(cfg: "DeploymentConfig") -> DLRMConfig:
     """DLRMConfig for the compute half, consistent with ``cfg.tables``
     (uniform row count, deployment lookups) — requires ``cfg.arch``."""
     if not cfg.arch:
@@ -150,7 +156,7 @@ class DeploymentConfig:
     slo: SLOConfig | None = None
     arch: str | None = None         # provenance (set by from_arch)
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         self.part = self.part.upper()
         if self.part not in PARTS:
             raise ValueError(f"unknown flash part {self.part!r}; "
@@ -195,7 +201,7 @@ class DeploymentConfig:
     @classmethod
     def from_arch(cls, arch: str, part: str = "TLC",
                   n_tables: int | None = None, n_rows: int | None = None,
-                  lookups: int | None = None, **overrides
+                  lookups: int | None = None, **overrides: Any
                   ) -> "DeploymentConfig":
         """Build a config from a registered architecture's shapes.
 
@@ -275,7 +281,7 @@ class Deployment:
     """One serving deployment: offline phase + per-policy engine lanes."""
 
     def __init__(self, cfg: DeploymentConfig,
-                 sample_stats: list[AccessStats] | None = None):
+                 sample_stats: list[AccessStats] | None = None) -> None:
         self.cfg = cfg
         self.part = PARTS[cfg.part]
         n_tables = len(cfg.tables)
@@ -327,7 +333,7 @@ class Deployment:
                arrival: str = "poisson", seed: int | None = None,
                arrival_seed: int | None = None,
                scenario: DriftScenario | None = None,
-               **arrival_kw) -> list[Request]:
+               **arrival_kw: Any) -> list[Request]:
         """Materialise an open-loop request stream matching the deployment's
         table shapes. ``seed`` defaults to the config seed; the arrival
         process draws from ``arrival_seed`` (default ``seed + 2``).
@@ -439,7 +445,8 @@ class Deployment:
         return {pol: tr.report for pol, tr in self.last_traces.items()}
 
     # -- online adaptive remap (Fig. 14 / Algorithm 1) ------------------------
-    def step_day(self, day: int, tables, rows) -> dict[str, DayResult]:
+    def step_day(self, day: int, tables: np.ndarray,
+                 rows: np.ndarray) -> dict[str, DayResult]:
         """Serve one day of traffic on every lane, then evaluate the
         deployment trigger and charge the adaptive-remap cost where it
         fires. Baseline lanes serve without window recording and never

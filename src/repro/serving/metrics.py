@@ -30,6 +30,7 @@ shedding is that the aggregate hides who paid).
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -84,7 +85,8 @@ class LatencyReport:
 
 
 def percentiles(latencies_us: np.ndarray,
-                qs=(50.0, 95.0, 99.0)) -> tuple[float, ...]:
+                qs: Sequence[float] = (50.0, 95.0, 99.0)
+                ) -> tuple[float, ...]:
     """NaN-safe percentiles over served latencies (DESIGN.md §7.4).
 
     Non-finite entries (shed requests carry ``NaN``) are dropped before
@@ -101,7 +103,9 @@ def percentiles(latencies_us: np.ndarray,
 
 def tail_timeseries(completions_us: np.ndarray, latencies_us: np.ndarray,
                     bin_us: float, t0_us: float | None = None,
-                    qs=(50.0, 95.0, 99.0)):
+                    qs: Sequence[float] = (50.0, 95.0, 99.0)
+                    ) -> tuple[np.ndarray, np.ndarray,
+                               list[tuple[float, ...]]]:
     """Per-time-bin latency percentiles over a replay (DESIGN.md §5.4).
 
     Requests are bucketed by *completion* time into bins of ``bin_us``
@@ -167,7 +171,7 @@ def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,
 def summarize_classes(policy: str, classes: np.ndarray,
                       latencies_us: np.ndarray, makespan_us: float,
                       shed_mask: np.ndarray, degraded_mask: np.ndarray,
-                      class_names) -> dict:
+                      class_names: Sequence[str]) -> dict:
     """One nested LatencyReport per priority class (DESIGN.md §7.4).
 
     ``classes`` holds each request's class index into ``class_names``.

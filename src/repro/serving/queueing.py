@@ -15,13 +15,15 @@ while out-of-order pushes just mark the tail for re-sorting.
 
 from __future__ import annotations
 
+from collections.abc import Iterable
+
 from repro.serving.workload import Request
 
 
 class RequestQueue:
     """Arrival-ordered queue with arrival-time-gated pops."""
 
-    def __init__(self, requests=()):
+    def __init__(self, requests: Iterable[Request] = ()) -> None:
         self._items: list[Request] = list(requests)
         self._cursor = 0
         self._sorted = False

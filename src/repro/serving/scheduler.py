@@ -52,15 +52,22 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from collections import deque
+from collections.abc import Sequence
+from typing import TYPE_CHECKING
 
 import numpy as np
 
 from repro.core.engine import RecFlashEngine, RemapPlan, ShardedEngine
+from repro.core.freq import AccessStats
 from repro.core.triggers import PeriodTrigger, ThresholdTrigger
+from repro.flashsim.device import FlashPart
 from repro.flashsim.timeline import SERVING_POLICIES
 from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
 from repro.serving.metrics import LatencyReport, summarize
 from repro.serving.workload import Request
+
+if TYPE_CHECKING:  # lazy at runtime (slo_scheduler imports our LaneTrace)
+    from repro.serving.slo_scheduler import SLOConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,7 +86,7 @@ class LiveRemapConfig:
     window_us: float = 250_000.0
     chunk_pages: int = 64
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.window_us <= 0:
             raise ValueError("window_us must be positive")
         if self.chunk_pages < 1:
@@ -131,10 +138,12 @@ def _chunk_program_work(plan: RemapPlan, chunk_pages: int
 
 
 def build_policy_engines(n_tables: int, n_rows: int, lookups: int,
-                         vec_bytes: int, part,
-                         policies=SERVING_POLICIES,
+                         vec_bytes: int, part: FlashPart | str,
+                         policies: Sequence[str] = SERVING_POLICIES,
                          k: float = 0.0, seed: int = 0,
-                         sample_inferences: int = 512):
+                         sample_inferences: int = 512
+                         ) -> tuple[dict[str, RecFlashEngine],
+                                    list[AccessStats]]:
     """Deprecated: use ``Deployment(DeploymentConfig(...))`` instead.
 
     Kept as a thin shim over the Deployment offline phase so old callers
@@ -202,7 +211,7 @@ def replay(requests: list[Request], engine: RecFlashEngine,
            n_channels: int = 1,
            trigger: ThresholdTrigger | PeriodTrigger | None = None,
            live: LiveRemapConfig | None = None,
-           slo=None) -> LaneTrace:
+           slo: SLOConfig | None = None) -> LaneTrace:
     """Run one policy lane over the whole request stream.
 
     ``n_channels`` is the lane's concurrent-server count (see module
@@ -372,7 +381,7 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
                    n_channels: int = 1,
                    trigger: ThresholdTrigger | PeriodTrigger | None = None,
                    live: LiveRemapConfig | None = None,
-                   slo=None) -> LaneTrace:
+                   slo: SLOConfig | None = None) -> LaneTrace:
     """Scatter-gather replay over N simulated SSDs (DESIGN.md §6.2).
 
     **Scatter** — the stream is routed once through the engine's
@@ -523,7 +532,7 @@ class ServingScheduler:
 
     def __init__(self, engines: dict[str, RecFlashEngine],
                  batcher_cfg: BatcherConfig | None = None,
-                 n_channels: int = 1):
+                 n_channels: int = 1) -> None:
         warnings.warn(
             "ServingScheduler is deprecated; use repro.serving.Deployment",
             DeprecationWarning, stacklevel=2)

@@ -50,6 +50,7 @@ means this module never runs at all.
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 import numpy as np
 
@@ -57,6 +58,9 @@ from repro.core.engine import RecFlashEngine
 from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
 from repro.serving.metrics import summarize, summarize_classes
 from repro.serving.workload import SLO_CLASSES, Request
+
+if TYPE_CHECKING:  # lazy at runtime (scheduler imports our slo_replay)
+    from repro.serving.scheduler import LaneTrace
 
 # class indices into SLO_CLASSES (priority order, highest first)
 LC, STD, BULK = 0, 1, 2
@@ -90,7 +94,7 @@ class SLOConfig:
     lc_max_wait_us: float = 0.0
     ewma: float = 0.25
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         for f in ("deadline_lc_us", "deadline_std_us", "deadline_bulk_us"):
             if getattr(self, f) <= 0:
                 raise ValueError(f"{f} must be positive")
@@ -153,7 +157,7 @@ def hot_row_mask(engine: RecFlashEngine) -> tuple[np.ndarray, np.ndarray]:
     row_offset = np.zeros(len(engine.tables) + 1, dtype=np.int64)
     np.cumsum([t.n_rows for t in engine.tables], out=row_offset[1:])
     mask = np.zeros(int(row_offset[-1]), dtype=bool)
-    for t, (spec, st) in enumerate(zip(engine.tables, engine.stats)):
+    for t, (spec, st) in enumerate(zip(engine.tables, engine.stats, strict=True)):
         rank = st.rank_order()
         n_hot = max(1, int(engine.hot_frac * spec.n_rows))
         mask[row_offset[t] + rank[:n_hot]] = True
@@ -165,7 +169,7 @@ def slo_replay(requests: list[Request], engine: RecFlashEngine,
                batcher_cfg: BatcherConfig | None = None,
                record_window: bool = False,
                policy_name: str | None = None,
-               n_channels: int = 1):
+               n_channels: int = 1) -> LaneTrace:
     """Run one policy lane under the SLO discipline (module docstring).
 
     Same contract as :func:`repro.serving.scheduler.replay` — returns a
@@ -236,7 +240,7 @@ def slo_replay(requests: list[Request], engine: RecFlashEngine,
     energy = 0.0
     est = [0.0] * _NC                   # EWMA per-request service time
 
-    def _remaining():
+    def _remaining() -> list[int]:
         return [c for c in range(_NC) if hp[c] < q[c].size]
 
     while True:

@@ -26,6 +26,7 @@ device model; nothing here sleeps.
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -71,7 +72,8 @@ class Request:
                        tables=tables, rows=rows, slo=self.slo)
 
 
-def assign_slo_classes(requests: list[Request], mix,
+def assign_slo_classes(requests: list[Request],
+                       mix: Sequence[float] | np.ndarray,
                        seed: int = 0) -> list[Request]:
     """Annotate a stream with priority classes drawn i.i.d. from ``mix``.
 
@@ -90,7 +92,7 @@ def assign_slo_classes(requests: list[Request], mix,
                          "weights with a positive sum")
     rng = np.random.default_rng(seed)
     idx = rng.choice(len(SLO_CLASSES), size=len(requests), p=p / p.sum())
-    for r, i in zip(requests, idx.tolist()):
+    for r, i in zip(requests, idx.tolist(), strict=True):
         r.slo = SLO_CLASSES[i]
     return requests
 
@@ -219,7 +221,7 @@ class DriftScenario:
     diurnal_period_us: float = 2e6
     drift_seed: int = 97          # redirection draws (independent of trace)
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.kind not in DRIFT_KINDS:
             raise ValueError(f"unknown drift kind {self.kind!r}; "
                              f"have {DRIFT_KINDS}")

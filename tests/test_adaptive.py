@@ -83,7 +83,7 @@ class TestAlgorithm1:
         ht, _, _ = make_table(n=200, hot_frac=0.1, seed=3)
         rng = np.random.default_rng(4)
         ht.update({int(10_000 + k): int(f) for k, f in zip(
-            range(40), rng.integers(1, 2000, 40))})
+            range(40), rng.integers(1, 2000, 40), strict=True)})
         hot_freqs = [ht.freq_of(k) for k in ht.hot_keys()]
         assert hot_freqs == sorted(hot_freqs, reverse=True)
 

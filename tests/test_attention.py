@@ -1,7 +1,6 @@
 """Flash attention (custom FA-2 VJP) vs dense reference + decode path."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -55,7 +54,7 @@ class TestFlashAttention:
 
         gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
         gd = jax.grad(loss_dense, argnums=(0, 1, 2))(q, k, v)
-        for a, b in zip(gf, gd):
+        for a, b in zip(gf, gd, strict=True):
             np.testing.assert_allclose(a, b, atol=5e-4)
 
     def test_tiny_shapes_fall_back_to_dense(self):

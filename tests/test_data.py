@@ -64,7 +64,7 @@ class TestCriteoStream:
         s = CriteoDayStream(spec, seed=0)
         before = [p.copy() for p in s.perms]
         s.advance_day()
-        changed = sum(int((a != b).sum()) for a, b in zip(before, s.perms))
+        changed = sum(int((a != b).sum()) for a, b in zip(before, s.perms, strict=True))
         assert changed > 0
 
     def test_sampled_stats_skewed(self):

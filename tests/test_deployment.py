@@ -191,7 +191,7 @@ class TestMultiChannelLane:
         last_free = np.zeros(4)
         total_busy = 0.0
         for b, c, start in zip(tr.batches, tr.batch_channels,
-                               tr.batch_starts_us):
+                               tr.batch_starts_us, strict=True):
             done = tr.completions_us[tr.index_of[b.requests[0].rid]]
             svc = done - start
             assert svc > 0
@@ -211,7 +211,7 @@ class TestMultiChannelLane:
         reqs, tr = self.mk_trace(4)
         arrival = {r.rid: r.arrival_us for r in reqs}
         served = []
-        for b, start in zip(tr.batches, tr.batch_starts_us):
+        for b, start in zip(tr.batches, tr.batch_starts_us, strict=True):
             for r in b.requests:
                 assert start >= arrival[r.rid] - 1e-9
                 served.append(r.rid)

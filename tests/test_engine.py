@@ -6,13 +6,12 @@ the online remapping flow must fire/skip triggers and charge remap costs.
 """
 
 import numpy as np
-import pytest
 
 from repro.core.engine import RecFlashEngine, TableSpec
 from repro.core.freq import AccessStats
 from repro.core.triggers import PeriodTrigger, ThresholdTrigger
 from repro.data.tracegen import generate_sls_batch
-from repro.flashsim.device import SLC, TLC
+from repro.flashsim.device import TLC
 
 
 def build(policy, n_tables=2, n_rows=20_000, k=0.0, part=TLC, seed=0):

@@ -6,7 +6,7 @@ import pytest
 from repro.core.freq import AccessStats
 from repro.core.page_cache import PageLRU, lru_hit_mask
 from repro.core.remap import build_mapping
-from repro.flashsim.device import PARTS, SLC, TIMING, CacheConfig, FlashPart
+from repro.flashsim.device import PARTS, SLC, TIMING, CacheConfig
 from repro.flashsim.timeline import POLICIES, SLSSimulator
 
 

@@ -9,27 +9,27 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops
-from repro.kernels.recflash_sls import recflash_sls as sls_raw
 from repro.kernels.dot_interaction import dot_interaction as dot_raw
+from repro.kernels.recflash_sls import recflash_sls as sls_raw
 
 
-def _inputs(h, v, d, b, l, dtype, seed=0):
+def _inputs(h, v, d, b, lk, dtype, seed=0):
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
     hot = jax.random.normal(k1, (h, d), dtype)
     cold = jax.random.normal(k2, (v - h, d), dtype)
-    idx = jax.random.randint(k3, (b, l), 0, v, jnp.int32)
+    idx = jax.random.randint(k3, (b, lk), 0, v, jnp.int32)
     return hot, cold, idx
 
 
 class TestRecFlashSLS:
-    @pytest.mark.parametrize("h,v,d,b,l", [
+    @pytest.mark.parametrize("h,v,d,b,lk", [
         (32, 128, 8, 16, 4),
         (64, 512, 16, 32, 20),
         (16, 64, 32, 8, 1),       # single lookup per bag
         (128, 130, 64, 8, 7),     # nearly-all-hot table
     ])
-    def test_shapes_vs_oracle(self, h, v, d, b, l):
-        hot, cold, idx = _inputs(h, v, d, b, l, jnp.float32)
+    def test_shapes_vs_oracle(self, h, v, d, b, lk):
+        hot, cold, idx = _inputs(h, v, d, b, lk, jnp.float32)
         out = sls_raw(hot, cold, idx, block_b=8, interpret=True)
         ref = ops.sls_ref(hot, cold, idx)
         # the kernel accumulates its bag sequentially (fori_loop) while the

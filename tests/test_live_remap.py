@@ -56,7 +56,7 @@ class TestDriftScenarios:
             drift = make_drifting_requests(200, N_TABLES, N_ROWS, LOOKUPS,
                                            ts, DriftScenario(kind=kind),
                                            seed=3)
-            for a, b in zip(base, drift):
+            for a, b in zip(base, drift, strict=True):
                 np.testing.assert_array_equal(a.rows, b.rows)
                 np.testing.assert_array_equal(a.tables, b.tables)
                 assert a.arrival_us == b.arrival_us
@@ -223,7 +223,7 @@ class TestLiveRemapLane:
         dep, _, old_mappings = drift_run
         changed = False
         for m, (op, og, os_) in zip(dep.engine("recflash").sim.mappings,
-                                    old_mappings):
+                                    old_mappings, strict=True):
             if not (np.array_equal(m.plane, op)
                     and np.array_equal(m.page, og)
                     and np.array_equal(m.slot, os_)):
@@ -304,7 +304,7 @@ class TestEngineLiveRemapStep:
         old = [m.page.copy() for m in eng.sim.mappings]
         assert eng.live_remap_step(PeriodTrigger(10**6), 0) is None
         assert int(eng.window_counts(0).sum()) == 0
-        for m, og in zip(eng.sim.mappings, old):
+        for m, og in zip(eng.sim.mappings, old, strict=True):
             np.testing.assert_array_equal(m.page, og)
 
     def test_plan_matches_independent_mapping_diff(self):

@@ -233,7 +233,7 @@ class TestDLRM:
                  for v in self.cfg.n_rows]
         stored = dict(self.params)
         stored["tables"] = [remap_table(t, s)
-                            for t, s in zip(self.params["tables"], specs)]
+                            for t, s in zip(self.params["tables"], specs, strict=True)]
         stored = dlrm.add_remap(
             stored, [jnp.asarray(s.rank_of) for s in specs])
         out = dlrm.forward(stored, batch, self.cfg)

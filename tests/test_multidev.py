@@ -10,8 +10,6 @@ import os
 import subprocess
 import sys
 
-import pytest
-
 ENV = {**os.environ,
        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
        "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}

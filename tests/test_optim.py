@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import optim
@@ -95,5 +94,5 @@ class TestOptimizers:
         new_params, _ = opt.update(grads, state, params)
         assert jax.tree.structure(new_params) == jax.tree.structure(params)
         for a, b in zip(jax.tree.leaves(new_params),
-                        jax.tree.leaves(params)):
+                        jax.tree.leaves(params), strict=True):
             assert a.shape == b.shape

@@ -1,14 +1,8 @@
 """Hypothesis property tests on the system's invariants."""
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-
-hypothesis = pytest.importorskip("hypothesis")
-
-import hypothesis.strategies as st               # noqa: E402
-from hypothesis import given, settings           # noqa: E402
-
-import jax.numpy as jnp
 
 from repro.core.adaptive import AdaptiveHashTable
 from repro.core.freq import AccessStats
@@ -17,6 +11,11 @@ from repro.embedding.layout import RemapSpec
 from repro.flashsim.device import PARTS, TIMING
 from repro.flashsim.timeline import POLICIES, SLSSimulator
 from repro.models import lm
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st               # noqa: E402
+from hypothesis import given, settings           # noqa: E402
 
 
 @st.composite

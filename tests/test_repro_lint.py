@@ -1,0 +1,351 @@
+"""Fixture tests for the repro-lint static-analysis suite (DESIGN.md §8).
+
+One positive (fires) and one negative (stays quiet) snippet per rule
+RL001-RL005, plus the baseline lifecycle: add/remove round-trip, new
+findings failing, stale entries failing, --update-baseline regenerating.
+Snippets are linted via ``check_source`` with production scoping — the
+*path* a snippet pretends to live at is part of each fixture.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+import textwrap
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:  # tools/ is a repo-root namespace package
+    sys.path.insert(0, str(ROOT))
+
+from tools.repro_lint import (  # noqa: E402
+    diff_against_baseline,
+    load_baseline,
+    main,
+    save_baseline,
+)
+from tools.repro_lint.checkers import check_source  # noqa: E402
+
+SERVING = "src/repro/serving/snippet.py"
+CORE = "src/repro/core/snippet.py"
+
+
+def ids(path: str, source: str) -> list[str]:
+    return [f.checker_id for f in check_source(path, textwrap.dedent(source))]
+
+
+# ---------------------------------------------------------------- RL001
+
+
+def test_rl001_flags_wall_clock_in_serving():
+    src = """
+        import time
+
+        def stamp():
+            return time.time()
+    """
+    assert "RL001" in ids(SERVING, src)
+
+
+def test_rl001_flags_from_import_and_datetime():
+    src = """
+        from time import perf_counter
+        import datetime
+
+        def stamp():
+            return perf_counter(), datetime.datetime.now()
+    """
+    found = ids(SERVING, src)
+    assert found.count("RL001") >= 2
+
+
+def test_rl001_quiet_on_simulated_clock_and_benchmarks():
+    src = """
+        def advance(now_us, step_us):
+            return now_us + step_us
+    """
+    assert ids(SERVING, src) == []
+    # benchmarks time themselves with the wall clock on purpose
+    wall = """
+        import time
+
+        def bench():
+            return time.perf_counter()
+    """
+    assert ids("benchmarks/bench_snippet.py", wall) == []
+
+
+# ---------------------------------------------------------------- RL002
+
+
+def test_rl002_flags_global_numpy_draw():
+    src = """
+        import numpy as np
+
+        def sample(n):
+            return np.random.rand(n)
+    """
+    assert "RL002" in ids(CORE, src)
+
+
+def test_rl002_flags_module_level_random():
+    src = """
+        import random
+
+        def pick(xs):
+            return random.choice(xs)
+    """
+    assert "RL002" in ids(CORE, src)
+
+
+def test_rl002_quiet_on_seeded_generator():
+    src = """
+        import numpy as np
+
+        def sample(n, seed):
+            rng = np.random.default_rng(seed)
+            return rng.integers(0, 10, n)
+    """
+    assert ids(CORE, src) == []
+
+
+# ---------------------------------------------------------------- RL003
+
+
+def test_rl003_flags_set_into_array():
+    src = """
+        import numpy as np
+
+        def pack(xs):
+            uniq = set(xs)
+            return np.array(list(uniq))
+    """
+    assert "RL003" in ids(CORE, src)
+
+
+def test_rl003_flags_dict_values_into_concatenate():
+    src = """
+        import numpy as np
+
+        def cat(d):
+            return np.concatenate(list(d.values()))
+    """
+    assert "RL003" in ids(CORE, src)
+
+
+def test_rl003_quiet_when_sorted_or_order_insensitive():
+    src = """
+        import numpy as np
+
+        def pack(xs, d):
+            uniq = set(xs)
+            a = np.array(sorted(uniq))
+            total = sum(d.values())
+            return a, total
+    """
+    assert ids(CORE, src) == []
+
+
+# ---------------------------------------------------------------- RL004
+
+
+def test_rl004_flags_unit_mixing():
+    src = """
+        def cost(lat_us, n_bytes):
+            return lat_us + n_bytes
+    """
+    assert "RL004" in ids(CORE, src)
+
+
+def test_rl004_flags_bare_literal_on_us():
+    src = """
+        def pad(lat_us):
+            return lat_us + 5
+    """
+    assert "RL004" in ids(CORE, src)
+
+
+def test_rl004_quiet_on_same_unit_and_conversions():
+    src = """
+        def total(read_us, wait_us, n_pages, page_bytes):
+            lat_us = read_us + wait_us
+            size_bytes = n_pages * page_bytes
+            return lat_us, size_bytes
+    """
+    assert ids(CORE, src) == []
+
+
+def test_rl004_device_py_exempt_from_literal_rule():
+    src = """
+        def t_read(base_us):
+            return base_us + 3
+    """
+    assert ids("src/repro/flashsim/device.py", src) == []
+    assert "RL004" in ids("src/repro/flashsim/timeline.py", src)
+
+
+# ---------------------------------------------------------------- RL005
+
+
+def test_rl005_flags_jax_experimental_outside_compat():
+    src = """
+        from jax.experimental import pallas
+    """
+    assert "RL005" in ids(CORE, src)
+    assert ids("src/repro/compat.py", src) == []
+
+
+def test_rl005_flags_direct_engine_construction():
+    src = """
+        from repro.core import RecFlashEngine
+
+        def build(spec):
+            return RecFlashEngine(spec)
+    """
+    assert "RL005" in ids("benchmarks/bench_snippet.py", src)
+    assert "RL005" not in ids("src/repro/serving/deployment.py", src)
+
+
+def test_rl005_quiet_on_compat_and_deployment_route():
+    src = """
+        from repro.compat import pallas as pl
+        from repro.serving import Deployment
+
+        def build(cfg):
+            return Deployment(cfg)
+    """
+    assert ids(CORE, src) == []
+
+
+# ------------------------------------------------------------- pragmas
+
+
+def test_pragma_suppresses_named_checker_only():
+    src = """
+        import numpy as np
+
+        def sample(n):
+            return np.random.rand(n)  # repro-lint: skip[RL002]
+    """
+    assert ids(CORE, src) == []
+
+
+def test_pragma_on_comment_line_covers_next_line():
+    src = """
+        import time
+
+        def stamp():
+            # repro-lint: skip
+            return time.time()
+    """
+    assert ids(SERVING, src) == []
+
+
+def test_pragma_for_other_checker_does_not_suppress():
+    src = """
+        import numpy as np
+
+        def sample(n):
+            return np.random.rand(n)  # repro-lint: skip[RL001]
+    """
+    assert "RL002" in ids(CORE, src)
+
+
+# ------------------------------------------------------------- baseline
+
+
+def _findings(path: str, source: str):
+    return check_source(path, textwrap.dedent(source))
+
+
+BAD_SNIPPET = """
+    import numpy as np
+
+    def sample(n):
+        return np.random.rand(n)
+"""
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = _findings(CORE, BAD_SNIPPET)
+    assert findings
+    bl = tmp_path / "baseline.txt"
+    save_baseline(bl, findings)
+    keys = load_baseline(bl)
+    assert keys == {f.key() for f in findings}
+    new, stale = diff_against_baseline(findings, keys)
+    assert new == [] and stale == []
+
+
+def test_baseline_new_finding_detected(tmp_path):
+    bl = tmp_path / "baseline.txt"
+    save_baseline(bl, [])
+    findings = _findings(CORE, BAD_SNIPPET)
+    new, stale = diff_against_baseline(findings, load_baseline(bl))
+    assert len(new) == len(findings) and stale == []
+
+
+def test_baseline_stale_entry_detected(tmp_path):
+    findings = _findings(CORE, BAD_SNIPPET)
+    bl = tmp_path / "baseline.txt"
+    save_baseline(bl, findings)
+    new, stale = diff_against_baseline([], load_baseline(bl))
+    assert new == [] and stale == sorted(f.key() for f in findings)
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "nope.txt") == set()
+
+
+# ------------------------------------------------------------------ CLI
+
+
+def _mini_repo(tmp_path: pathlib.Path) -> pathlib.Path:
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "mod.py").write_text(textwrap.dedent(BAD_SNIPPET))
+    (tmp_path / "tools" / "repro_lint").mkdir(parents=True)
+    return tmp_path
+
+
+def test_cli_gate_new_then_baseline_then_stale(tmp_path, capsys):
+    root = _mini_repo(tmp_path)
+    bl = root / "tools" / "repro_lint" / "baseline.txt"
+    argv = ["--root", str(root), "--baseline", str(bl)]
+
+    # new finding, no baseline -> fail
+    assert main(argv) == 1
+    assert "RL002" in capsys.readouterr().out
+
+    # grandfather it -> pass
+    assert main(argv + ["--update-baseline"]) == 0
+    assert main(argv) == 0
+    assert "grandfathered" in capsys.readouterr().out
+
+    # fix the violation -> baseline entry is stale -> fail
+    mod = root / "src" / "repro" / "core" / "mod.py"
+    mod.write_text("def sample(n, rng):\n    return rng.integers(0, 10, n)\n")
+    assert main(argv) == 1
+    assert "stale" in capsys.readouterr().out
+
+    # regenerate -> empty baseline, pass
+    assert main(argv + ["--update-baseline"]) == 0
+    assert main(argv) == 0
+
+
+def test_cli_report_artifact(tmp_path):
+    root = _mini_repo(tmp_path)
+    bl = root / "tools" / "repro_lint" / "baseline.txt"
+    report = tmp_path / "out" / "findings.txt"
+    main(["--root", str(root), "--baseline", str(bl),
+          "--report", str(report)])
+    text = report.read_text()
+    assert "RL002" in text and "src/repro/core/mod.py" in text
+
+
+def test_repo_baseline_is_empty_for_core_flashsim_serving():
+    """The shipped baseline grandfathers nothing in the burned-down dirs."""
+    shipped = load_baseline(ROOT / "tools" / "repro_lint" / "baseline.txt")
+    for key in shipped:
+        assert not key.startswith(("src/repro/core/",
+                                   "src/repro/flashsim/",
+                                   "src/repro/serving/"))

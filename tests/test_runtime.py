@@ -27,7 +27,7 @@ class TestCheckpoint:
         assert ckpt.latest_step(str(tmp_path)) == 7
         like = jax.tree.map(jnp.zeros_like, tree)
         out = ckpt.restore(str(tmp_path), 7, like)
-        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree), strict=True):
             np.testing.assert_array_equal(a, b)
         assert ckpt.load_meta(str(tmp_path), 7)["loss"] == 1.5
 

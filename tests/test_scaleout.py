@@ -166,7 +166,7 @@ class TestScatterGatherInvariants:
         _, reqs, tr = mk_sharded_trace(shard)
         arrival = {r.rid: r.arrival_us for r in reqs}
         for dtr in tr.device_traces:
-            for b, start in zip(dtr.batches, dtr.batch_starts_us):
+            for b, start in zip(dtr.batches, dtr.batch_starts_us, strict=True):
                 for r in b.requests:
                     assert start >= arrival[r.rid] - 1e-9
 
@@ -195,7 +195,7 @@ class TestScatterGatherInvariants:
         for d, dtr in enumerate(tr.device_traces):
             # device busy == sum of its batches' service times
             svc = 0.0
-            for b, start in zip(dtr.batches, dtr.batch_starts_us):
+            for b, start in zip(dtr.batches, dtr.batch_starts_us, strict=True):
                 done = dtr.completions_us[dtr.index_of[b.requests[0].rid]]
                 svc += float(done) - float(start)
             assert dtr.busy_us == pytest.approx(svc)
@@ -277,7 +277,7 @@ class TestDeviceLocalRemap:
         for dtr in tr.device_traces:
             prog = sum(ev.program_latency_us for ev in dtr.remap_events)
             svc = 0.0
-            for b, start in zip(dtr.batches, dtr.batch_starts_us):
+            for b, start in zip(dtr.batches, dtr.batch_starts_us, strict=True):
                 done = dtr.completions_us[dtr.index_of[b.requests[0].rid]]
                 svc += float(done) - float(start)
             assert dtr.busy_us == pytest.approx(svc + prog)

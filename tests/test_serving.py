@@ -300,7 +300,7 @@ class TestRecordWindowVectorized:
             sel = tables_arr == tid
             idx, cnt = np.unique(rows_arr[sel], return_counts=True)
             w = window[tid]
-            for i, c in zip(idx.tolist(), cnt.tolist()):
+            for i, c in zip(idx.tolist(), cnt.tolist(), strict=True):
                 w[i] = w.get(i, 0) + c
         return window
 

@@ -102,7 +102,7 @@ def check_no_service_before_arrival(engine, seed):
     served = np.isfinite(tr.completions_us)
     assert np.all(tr.completions_us[served] >= arr[served] - 1e-9)
     assert np.all(tr.latencies_us[served] >= -1e-9)
-    for b, start in zip(tr.batches, tr.batch_starts_us):
+    for b, start in zip(tr.batches, tr.batch_starts_us, strict=True):
         head = min(r.arrival_us for r in b.requests)
         assert start >= head - 1e-9
         assert b.dispatch_us >= head - 1e-9
@@ -117,7 +117,7 @@ def check_busy_conservation(engine, seed):
     total = 0.0
     per_chan: dict[int, list] = {}
     for b, c, start in zip(tr.batches, tr.batch_channels.tolist(),
-                           tr.batch_starts_us.tolist()):
+                           tr.batch_starts_us.tolist(), strict=True):
         done = float(tr.completions_us[tr.index_of[b.requests[0].rid]])
         assert done >= start - 1e-9
         total += done - start
@@ -125,7 +125,7 @@ def check_busy_conservation(engine, seed):
     assert total == pytest.approx(tr.busy_us, rel=1e-9, abs=1e-6)
     for spans in per_chan.values():
         spans.sort()
-        for (s0, d0), (s1, _) in zip(spans, spans[1:]):
+        for (s0, d0), (s1, _) in zip(spans, spans[1:], strict=False):
             assert s1 >= d0 - 1e-9, "overlapping service on one channel"
 
 

@@ -17,7 +17,8 @@ import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-SEARCH_DIRS = ("src", "tests", "benchmarks", "examples", "README.md")
+SEARCH_DIRS = ("src", "tests", "benchmarks", "examples", "tools",
+               "README.md")
 # any numeric §x[.y] token on a line that cites DESIGN.md counts as a
 # reference — this catches comma/range forms like "DESIGN.md §3.4, §5.4"
 # and "DESIGN.md §5.2-§5.4". Paper sections use roman numerals (§III-C),

@@ -1,0 +1,46 @@
+"""repro-lint — repo-specific determinism & simulated-clock static analysis.
+
+The repo's headline guarantees are *determinism* guarantees: bit-identical
+lanes when a feature is disabled, NaN-safe shed accounting, busy-time
+conservation on a simulated clock. The tests enforce them dynamically, but
+a test cannot see a *new* call site that quietly breaks the contract — a
+``time.time()`` on the simulated clock, a global ``np.random.*`` draw, a
+``set`` iterated into an array. repro-lint makes those disciplines
+machine-checked (DESIGN.md §8):
+
+========  ==========================================================
+checker   invariant enforced
+========  ==========================================================
+RL001     simulated-clock purity — no wall-clock reads in
+          ``src/repro/{flashsim,core,serving}/`` (DESIGN.md §8.1)
+RL002     RNG discipline — no global ``np.random.*`` / module-level
+          ``random`` state in ``src/repro/`` (DESIGN.md §8.2)
+RL003     ordering hazards — no set/dict-view iteration feeding
+          order-sensitive numeric sinks (DESIGN.md §8.3)
+RL004     units discipline — no mixing of ``_us``/``_bytes``/``_pages``
+          quantities or bare literals added to ``_us`` (DESIGN.md §8.4)
+RL005     API discipline — ``jax.experimental`` only via ``compat.py``,
+          engines only via ``serving/deployment.py`` (DESIGN.md §8.5)
+========  ==========================================================
+
+Run via ``make lint-deep`` (→ ``python -m tools.repro_lint``). Findings
+not yet burned down live in ``tools/repro_lint/baseline.txt``; CI fails
+on *new* findings and on stale baseline entries (DESIGN.md §8.6).
+"""
+
+from tools.repro_lint.base import Finding, iter_pragmas
+from tools.repro_lint.baseline import (load_baseline, save_baseline,
+                                       diff_against_baseline)
+from tools.repro_lint.checkers import CHECKERS, run_checkers
+from tools.repro_lint.cli import main
+
+__all__ = [
+    "CHECKERS",
+    "Finding",
+    "diff_against_baseline",
+    "iter_pragmas",
+    "load_baseline",
+    "main",
+    "run_checkers",
+    "save_baseline",
+]

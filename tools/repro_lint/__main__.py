@@ -1,0 +1,7 @@
+"""Entry point: ``python -m tools.repro_lint`` (== ``make lint-deep``)."""
+
+import sys
+
+from tools.repro_lint.cli import main
+
+sys.exit(main())

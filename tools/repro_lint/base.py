@@ -1,0 +1,115 @@
+"""Shared repro-lint plumbing: findings, checker protocol, skip pragmas.
+
+A checker is a class with a ``CHECKER_ID``, a one-line ``INVARIANT`` (its
+DESIGN.md §8 anchor lives in the class docstring), and a
+``check(path, tree, source) -> list[Finding]`` method. Checkers are pure
+AST passes — they never import the code under analysis, so a broken or
+jax-less tree still lints.
+
+Inline exemptions (DESIGN.md §8.6): a finding whose source line (or the
+line above it) carries ``# repro-lint: skip[RL00x]`` is suppressed for
+that checker id; a bare ``# repro-lint: skip`` suppresses every checker
+on that line. Pragmas are for reviewed false positives — genuine
+violations get fixed, not skipped.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+
+PRAGMA_RE = re.compile(r"#\s*repro-lint:\s*skip(?:\[([A-Z0-9,\s]+)\])?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str            # repo-relative, posix separators
+    line: int            # 1-based
+    checker_id: str      # e.g. "RL001"
+    message: str
+
+    def key(self) -> str:
+        """Stable identity used by the baseline (message excluded so
+        wording tweaks don't churn baseline files)."""
+        return f"{self.path}:{self.line}:{self.checker_id}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.checker_id} {self.message}"
+
+
+def iter_pragmas(source: str) -> dict[int, frozenset[str] | None]:
+    """Map line number -> skipped checker ids (``None`` = skip all).
+
+    A pragma applies to its own line and, when it is the only thing on
+    its line (a comment line), to the following line as well.
+    """
+    out: dict[int, frozenset[str] | None] = {}
+    for i, text in enumerate(source.splitlines(), 1):
+        m = PRAGMA_RE.search(text)
+        if not m:
+            continue
+        ids = (frozenset(s.strip() for s in m.group(1).split(","))
+               if m.group(1) else None)
+        out[i] = ids
+        if text.lstrip().startswith("#"):
+            out[i + 1] = ids
+    return out
+
+
+def apply_pragmas(findings: list[Finding], source: str) -> list[Finding]:
+    """Drop findings suppressed by an inline ``repro-lint: skip`` pragma."""
+    pragmas = iter_pragmas(source)
+    if not pragmas:
+        return findings
+    kept = []
+    for f in findings:
+        ids = pragmas.get(f.line, frozenset())
+        if ids is None or (ids and f.checker_id in ids):
+            continue
+        kept.append(f)
+    return kept
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class Checker:
+    """Base class; subclasses set CHECKER_ID/INVARIANT and visit the AST."""
+
+    CHECKER_ID = "RL000"
+    INVARIANT = ""
+
+    def applies_to(self, path: str) -> bool:
+        """Whether ``path`` (repo-relative posix) is in this checker's
+        scope. Overridden via config-injected include/exclude prefixes."""
+        raise NotImplementedError
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, path: str, node: ast.AST, message: str) -> Finding:
+        return Finding(path=path, line=getattr(node, "lineno", 1),
+                       checker_id=self.CHECKER_ID, message=message)
+
+
+def path_in_scope(path: str, include: tuple[str, ...],
+                  exclude: tuple[str, ...] = ()) -> bool:
+    """Prefix-based scope test over repo-relative posix paths."""
+    if any(path == e or path.startswith(e.rstrip("/") + "/")
+           for e in exclude):
+        return False
+    return any(path == i or path.startswith(i.rstrip("/") + "/")
+               for i in include)

@@ -1,0 +1,58 @@
+"""Baseline (grandfathering) support for repro-lint (DESIGN.md §8.6).
+
+``baseline.txt`` is the committed set of findings the repo has accepted
+*for now*: one ``path:line:RL00x`` key per line, sorted, with ``#``
+comments allowed. The CI contract is two-sided:
+
+* a finding **not** in the baseline is *new* → fail (the rule holds for
+  all code written after the checker landed);
+* a baseline entry with no matching finding is *stale* → fail (the debt
+  was paid down or the line moved; regenerate with ``--update-baseline``
+  so the file never overstates the remaining debt).
+
+Keys deliberately exclude the message so wording tweaks in a checker
+don't churn the baseline; line moves do churn it, which is the point —
+touching a grandfathered region is the moment to fix it.
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+from tools.repro_lint.base import Finding
+
+
+def load_baseline(path: pathlib.Path) -> set[str]:
+    """Read baseline keys; a missing file is an empty baseline."""
+    if not path.is_file():
+        return set()
+    keys: set[str] = set()
+    for raw in path.read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        keys.add(line)
+    return keys
+
+
+def save_baseline(path: pathlib.Path, findings: list[Finding]) -> None:
+    """Write the sorted key set for ``findings`` (plus a header)."""
+    keys = sorted({f.key() for f in findings})
+    lines = [
+        "# repro-lint baseline — grandfathered findings (DESIGN.md §8.6).",
+        "# One `path:line:RL00x` key per line. Regenerate with:",
+        "#   python -m tools.repro_lint --update-baseline",
+        "# New findings and stale entries both fail CI.",
+    ]
+    lines.extend(keys)
+    path.write_text("\n".join(lines) + "\n")
+
+
+def diff_against_baseline(
+        findings: list[Finding],
+        baseline: set[str]) -> tuple[list[Finding], list[str]]:
+    """Split the run into (new findings, stale baseline keys)."""
+    current = {f.key() for f in findings}
+    new = [f for f in findings if f.key() not in baseline]
+    stale = sorted(baseline - current)
+    return new, stale

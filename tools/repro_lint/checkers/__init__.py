@@ -1,0 +1,70 @@
+"""Checker registry + file runner for repro-lint (DESIGN.md §8).
+
+``CHECKERS`` is the ordered registry the CLI, the docs and the fixture
+tests all iterate; adding a checker means adding it here and nothing
+else. ``run_checkers`` parses each file once and applies every in-scope
+checker to the shared AST, then strips pragma-suppressed findings
+(``base.apply_pragmas``).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from tools.repro_lint.base import Checker, Finding, apply_pragmas
+from tools.repro_lint.checkers.api import ApiDisciplineChecker
+from tools.repro_lint.checkers.clock import ClockPurityChecker
+from tools.repro_lint.checkers.ordering import OrderingHazardChecker
+from tools.repro_lint.checkers.rng import RngDisciplineChecker
+from tools.repro_lint.checkers.units import UnitsDisciplineChecker
+
+CHECKERS: tuple[Checker, ...] = (
+    ClockPurityChecker(),
+    RngDisciplineChecker(),
+    OrderingHazardChecker(),
+    UnitsDisciplineChecker(),
+    ApiDisciplineChecker(),
+)
+
+
+def check_source(path: str, source: str,
+                 checkers: tuple[Checker, ...] = CHECKERS) -> list[Finding]:
+    """Lint one file's source text (``path`` is repo-relative posix).
+
+    Scope rules still apply — a checker whose ``applies_to`` rejects
+    ``path`` is skipped — so fixture tests exercise exactly the
+    production scoping. Syntax errors are reported as an ``RL000``
+    finding rather than crashing the run (the file is broken either way;
+    ``make lint`` / ruff owns the real syntax gate).
+    """
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(path=path, line=e.lineno or 1, checker_id="RL000",
+                        message=f"syntax error: {e.msg}")]
+    findings: list[Finding] = []
+    for checker in checkers:
+        if checker.applies_to(path):
+            findings.extend(checker.check(path, tree, source))
+    return apply_pragmas(findings, source)
+
+
+def run_checkers(root: pathlib.Path,
+                 checkers: tuple[Checker, ...] = CHECKERS) -> list[Finding]:
+    """Lint every in-scope .py file under ``root`` (the repo)."""
+    from tools.repro_lint import config
+    findings: list[Finding] = []
+    for scan in config.SCAN_ROOTS:
+        base = root / scan
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if "__pycache__" in p.parts:
+                continue
+            rel = p.relative_to(root).as_posix()
+            if not any(c.applies_to(rel) for c in checkers):
+                continue
+            findings.extend(check_source(rel, p.read_text(), checkers))
+    findings.sort(key=lambda f: (f.path, f.line, f.checker_id))
+    return findings

@@ -1,0 +1,92 @@
+"""RL005 — API discipline (DESIGN.md §8.5).
+
+Two single-point-of-entry contracts:
+
+* ``jax.experimental`` drifts release to release (shard_map moved, flag
+  names changed — the PR-1..6 known-failure burn-down was mostly this).
+  ``src/repro/compat.py`` exists to be the one module that touches it;
+  everything else imports the shim. Direct ``jax.experimental`` imports
+  or attribute chains anywhere else in ``src/repro/`` are flagged.
+* ``RecFlashEngine`` / ``ShardedEngine`` are constructed through
+  ``serving/deployment.py`` only (the declared single construction path,
+  DESIGN.md §3): the Deployment facade owns the offline phase, so a
+  stray direct construction silently gets empty ``AccessStats`` and a
+  meaningless mapping. ``core/engine.py`` itself is exempt
+  (``ShardedEngine`` builds its per-device engines internally); tests
+  are out of scope (they construct the object under test on purpose).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import config
+from tools.repro_lint.base import Checker, Finding, dotted_name, path_in_scope
+
+
+class ApiDisciplineChecker(Checker):
+    """jax.experimental via compat.py; engines via deployment.py (§8.5)."""
+
+    CHECKER_ID = "RL005"
+    INVARIANT = ("jax.experimental only inside compat.py; "
+                 "RecFlashEngine/ShardedEngine built only by "
+                 "serving/deployment.py")
+
+    def applies_to(self, path: str) -> bool:
+        return (path_in_scope(path, config.API_EXPERIMENTAL_INCLUDE,
+                              config.API_EXPERIMENTAL_EXCLUDE)
+                or path_in_scope(path, config.API_CONSTRUCT_INCLUDE,
+                                 config.API_CONSTRUCT_EXCLUDE))
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        out: list[Finding] = []
+        if path_in_scope(path, config.API_EXPERIMENTAL_INCLUDE,
+                         config.API_EXPERIMENTAL_EXCLUDE):
+            self._experimental(path, tree, out)
+        if path_in_scope(path, config.API_CONSTRUCT_INCLUDE,
+                         config.API_CONSTRUCT_EXCLUDE):
+            self._construction(path, tree, out)
+        return out
+
+    def _experimental(self, path: str, tree: ast.AST,
+                      out: list[Finding]) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod == "jax.experimental" or mod.startswith(
+                        "jax.experimental."):
+                    out.append(self.finding(
+                        path, node,
+                        f"direct `from {mod} import ...`; route drifting "
+                        f"jax APIs through repro.compat"))
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.startswith("jax.experimental"):
+                        out.append(self.finding(
+                            path, node,
+                            f"direct `import {alias.name}`; route "
+                            f"drifting jax APIs through repro.compat"))
+            elif isinstance(node, ast.Attribute):
+                name = dotted_name(node)
+                if name and name.startswith("jax.experimental"):
+                    out.append(self.finding(
+                        path, node,
+                        f"direct `{name}` reference; route drifting jax "
+                        f"APIs through repro.compat"))
+
+    def _construction(self, path: str, tree: ast.AST,
+                      out: list[Finding]) -> None:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            base = name.split(".")[-1]
+            if base in config.API_SINGLE_CONSTRUCTION:
+                out.append(self.finding(
+                    path, node,
+                    f"direct `{base}(...)` construction; build engines "
+                    f"through repro.serving.Deployment (the single "
+                    f"construction path)"))

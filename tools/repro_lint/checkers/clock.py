@@ -1,0 +1,75 @@
+"""RL001 — simulated-clock purity (DESIGN.md §8.1).
+
+The flashsim/core/serving stack advances a *simulated* microsecond clock
+(``SimResult.latency_us``, channel ``free[c]`` arrays, window
+boundaries); every latency number the benchmarks report is derived from
+it. A wall-clock read inside that stack couples results to host speed
+and scheduling noise — the exact failure RecSSD/RecNMP-style timing
+models exist to avoid. This checker bans call sites *and* aliased
+references (``clock = time.time`` smuggles the read past a call-only
+ban) to the banned reads inside the scoped directories.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import config
+from tools.repro_lint.base import Checker, Finding, dotted_name, path_in_scope
+
+# Wall-clock reads (module.attr). time.monotonic is banned too: it is
+# wall-ish for our purposes — any host-time source breaks replay
+# determinism of simulated results.
+BANNED_CALLS = frozenset({
+    "time.time",
+    "time.time_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "time.process_time",
+    "time.process_time_ns",
+    "time.localtime",
+    "time.gmtime",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "datetime.datetime.today",
+    "datetime.date.today",
+    "datetime.now",
+    "datetime.utcnow",
+})
+
+
+class ClockPurityChecker(Checker):
+    """No wall-clock reads on the simulated-clock stack (DESIGN.md §8.1)."""
+
+    CHECKER_ID = "RL001"
+    INVARIANT = ("no wall-clock reads inside "
+                 "src/repro/{flashsim,core,serving}/")
+
+    def applies_to(self, path: str) -> bool:
+        return path_in_scope(path, config.CLOCK_INCLUDE,
+                             config.CLOCK_EXCLUDE)
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(tree):
+            name = None
+            if isinstance(node, ast.Attribute):
+                name = dotted_name(node)
+            if name in BANNED_CALLS:
+                out.append(self.finding(
+                    path, node,
+                    f"wall-clock read `{name}` on the simulated-clock "
+                    f"stack; pass simulated timestamps in instead"))
+            # `from time import time / perf_counter` defeats the
+            # attribute scan — flag the import itself.
+            if isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if f"time.{alias.name}" in BANNED_CALLS:
+                        out.append(self.finding(
+                            path, node,
+                            f"`from time import {alias.name}` on the "
+                            f"simulated-clock stack"))
+        return out

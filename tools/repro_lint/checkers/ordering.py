@@ -1,0 +1,135 @@
+"""RL003 — ordering hazards (DESIGN.md §8.3).
+
+Python ``set``s and ``dict`` views iterate in an order that depends on
+insertion history and (for str keys) ``PYTHONHASHSEED`` — not on the
+values. Feeding one into an order-*sensitive* numeric sink
+(``np.array``, ``np.concatenate``, ``np.fromiter``, ...) makes the array
+layout, and hence every downstream latency/energy total, depend on that
+incidental order. The fix is always one call: ``sorted(...)`` (or
+``np.sort``) between the unordered collection and the sink.
+
+The pass is function-local dataflow: expressions that *produce* an
+unordered iteration order (set/frozenset literals, comps and calls;
+``.keys()``/``.values()``/``.items()`` on non-dict-comprehension
+receivers) taint the names they are assigned to; a sink call whose
+argument subtree contains a tainted expression — outside an
+order-insensitive wrapper (``sorted``, ``min``, ``sum``, ``len``, ...)
+— is flagged. ``dict.values()`` feeding ``sum(...)`` is fine;
+``np.fromiter(myset, ...)`` is not.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import config
+from tools.repro_lint.base import Checker, Finding, dotted_name, path_in_scope
+
+NUMERIC_SINKS = frozenset({
+    "np.array", "np.asarray", "np.fromiter", "np.concatenate",
+    "np.stack", "np.hstack", "np.vstack", "np.column_stack",
+    "numpy.array", "numpy.asarray", "numpy.fromiter", "numpy.concatenate",
+    "numpy.stack", "numpy.hstack", "numpy.vstack", "numpy.column_stack",
+})
+# Calls whose result does not depend on argument order — a tainted value
+# inside one of these is laundered clean.
+ORDER_INSENSITIVE = frozenset({
+    "sorted", "min", "max", "sum", "len", "any", "all", "set", "frozenset",
+    "np.sort", "numpy.sort", "np.unique", "numpy.unique",
+    "np.bincount", "numpy.bincount",
+})
+UNORDERED_METHODS = frozenset({"keys", "values", "items"})
+
+
+def _is_unordered_expr(node: ast.AST, tainted: set[str]) -> bool:
+    """Does ``node`` itself produce an unordered iteration order?"""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Name) and node.id in tainted:
+        return True
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name in ("set", "frozenset"):
+            return True
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in UNORDERED_METHODS):
+            return True
+    return False
+
+
+def _tainted_in(node: ast.AST, tainted: set[str]) -> ast.AST | None:
+    """First unordered sub-expression inside ``node``, skipping subtrees
+    wrapped in an order-insensitive call."""
+    if _is_unordered_expr(node, tainted):
+        return node
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name in ORDER_INSENSITIVE:
+            return None
+    for child in ast.iter_child_nodes(node):
+        hit = _tainted_in(child, tainted)
+        if hit is not None:
+            return hit
+    return None
+
+
+class _FunctionScan(ast.NodeVisitor):
+    """One pass over a function (or module) body."""
+
+    def __init__(self, checker: "OrderingHazardChecker", path: str,
+                 findings: list[Finding]):
+        self.checker = checker
+        self.path = path
+        self.findings = findings
+        self.tainted: set[str] = set()
+
+    # new scope -> fresh taint set (names are function-local)
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        _FunctionScan(self.checker, self.path, self.findings).generic_visit(
+            node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if _is_unordered_expr(node.value, self.tainted):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.tainted.add(tgt.id)
+        else:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.tainted.discard(tgt.id)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = dotted_name(node.func)
+        if name in NUMERIC_SINKS:
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                hit = _tainted_in(arg, self.tainted)
+                if hit is not None:
+                    what = (dotted_name(hit) or
+                            getattr(hit, "id", None) or "set/dict-view")
+                    self.findings.append(self.checker.finding(
+                        self.path, node,
+                        f"unordered `{what}` flows into order-sensitive "
+                        f"`{name}`; wrap it in sorted(...)"))
+                    break
+        self.generic_visit(node)
+
+
+class OrderingHazardChecker(Checker):
+    """No set/dict-view iteration into numeric sinks (DESIGN.md §8.3)."""
+
+    CHECKER_ID = "RL003"
+    INVARIANT = ("set/dict-view iteration never feeds np.array/"
+                 "np.concatenate/np.fromiter unsorted")
+
+    def applies_to(self, path: str) -> bool:
+        return path_in_scope(path, config.ORDER_INCLUDE,
+                             config.ORDER_EXCLUDE)
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        findings: list[Finding] = []
+        _FunctionScan(self, path, findings).visit(tree)
+        return findings

@@ -1,0 +1,91 @@
+"""RL002 — RNG discipline (DESIGN.md §8.2).
+
+Every bit-identity claim in the repo (disabled-feature lanes byte-equal
+to main, seeded replays reproducible across runs) rests on randomness
+flowing through explicitly seeded ``np.random.Generator`` objects (or
+``jax.random`` keys). A draw from *global* RNG state — ``np.random.rand``,
+``np.random.seed``, stdlib ``random.random`` — is invisible shared
+mutable state: any unrelated caller advancing it changes this module's
+output. The checker bans global-state attributes of ``np.random`` and
+the stdlib ``random`` module inside ``src/repro/``; constructing seeded
+generator objects (``default_rng``, ``Generator``, ``SeedSequence``,
+bit generators, ``random.Random(seed)``) stays allowed, as do
+``np.random.Generator`` *annotations*.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import config
+from tools.repro_lint.base import Checker, Finding, dotted_name, path_in_scope
+
+# np.random attributes that are constructors/types, not global-state draws
+ALLOWED_NP_RANDOM = frozenset({
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "SFC64", "MT19937",
+})
+# stdlib random: only the seeded-instance class is allowed
+ALLOWED_STDLIB_RANDOM = frozenset({"Random", "SystemRandom"})
+
+
+class RngDisciplineChecker(Checker):
+    """No global np.random/random state in src/repro/ (DESIGN.md §8.2)."""
+
+    CHECKER_ID = "RL002"
+    INVARIANT = ("randomness only via seeded Generators passed in; "
+                 "no global np.random.* / random.* state")
+
+    def applies_to(self, path: str) -> bool:
+        return path_in_scope(path, config.RNG_INCLUDE, config.RNG_EXCLUDE)
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        out: list[Finding] = []
+        stdlib_random_names = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "random":
+                        stdlib_random_names.add(alias.asname or "random")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "random":
+                    for alias in node.names:
+                        if alias.name not in ALLOWED_STDLIB_RANDOM:
+                            out.append(self.finding(
+                                path, node,
+                                f"`from random import {alias.name}` uses "
+                                f"the module-global RNG; pass a seeded "
+                                f"Generator in"))
+                elif node.module in ("numpy.random", "numpy"):
+                    for alias in node.names:
+                        if (node.module == "numpy.random"
+                                and alias.name not in ALLOWED_NP_RANDOM):
+                            out.append(self.finding(
+                                path, node,
+                                f"`from numpy.random import {alias.name}` "
+                                f"is a global-state draw; use "
+                                f"default_rng(seed)"))
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            name = dotted_name(node)
+            if name is None:
+                continue
+            parts = name.split(".")
+            # np.random.X / numpy.random.X with X a global-state member
+            if (len(parts) >= 3 and parts[-2] == "random"
+                    and parts[0] in ("np", "numpy")
+                    and parts[-1] not in ALLOWED_NP_RANDOM):
+                out.append(self.finding(
+                    path, node,
+                    f"global-state `{name}`; use "
+                    f"np.random.default_rng(seed) and pass the Generator"))
+            # stdlib random.X (module imported as `random` or aliased)
+            elif (len(parts) == 2 and parts[0] in stdlib_random_names
+                    and parts[1] not in ALLOWED_STDLIB_RANDOM):
+                out.append(self.finding(
+                    path, node,
+                    f"module-global `{name}`; use random.Random(seed) "
+                    f"or np.random.default_rng(seed)"))
+        return out

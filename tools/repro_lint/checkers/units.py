@@ -1,0 +1,114 @@
+"""RL004 — units discipline (DESIGN.md §8.4).
+
+``_us`` (simulated microseconds), ``_bytes`` and ``_pages`` suffixes are
+a units contract across the simulator and serving stack. Two rules:
+
+* **mix** — an additive binary op (``+``/``-``), augmented assign,
+  comparison or direct assignment between names carrying *different*
+  unit suffixes (``t_us + n_bytes``) is a dimensional error. Multiply
+  and divide are conversions (``n_pages * page_bytes``) and stay legal.
+* **literal** — a bare numeric literal added to / subtracted from a
+  ``_us`` quantity outside ``flashsim/device.py`` hides a magic timing
+  constant; name it (``*_us``) or move it into the device timing model.
+  ``x_us + 0.0``-style identity literals are still flagged — a zero
+  with no name is a zero nobody can grep for.
+
+Only names/attributes *ending* in a suffix participate; ``bytes_out``
+(no trailing ``_bytes``) is not a unit-carrying name. Comparisons
+against ``0`` (emptiness/sign tests) are exempt from the literal rule.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import config
+from tools.repro_lint.base import Checker, Finding, path_in_scope
+
+UNIT_SUFFIXES = ("_us", "_bytes", "_pages")
+ADDITIVE = (ast.Add, ast.Sub)
+COMPARES = (ast.Lt, ast.LtE, ast.Gt, ast.GtE, ast.Eq, ast.NotEq)
+
+
+def unit_of(node: ast.AST) -> str | None:
+    """The unit suffix carried by a Name/Attribute, if any."""
+    name = None
+    if isinstance(node, ast.Name):
+        name = node.id
+    elif isinstance(node, ast.Attribute):
+        name = node.attr
+    if name is None:
+        return None
+    for suf in UNIT_SUFFIXES:
+        if name.endswith(suf) and name != suf.lstrip("_"):
+            return suf
+    return None
+
+
+def _is_number(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float)) \
+            and not isinstance(node.value, bool)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op,
+                                                    (ast.USub, ast.UAdd)):
+        return _is_number(node.operand)
+    return False
+
+
+class UnitsDisciplineChecker(Checker):
+    """_us/_bytes/_pages never mix; no bare literals on _us (§8.4)."""
+
+    CHECKER_ID = "RL004"
+    INVARIANT = ("no additive mixing of _us/_bytes/_pages quantities; "
+                 "no bare literals added to _us outside device.py")
+
+    def applies_to(self, path: str) -> bool:
+        return path_in_scope(path, config.UNITS_INCLUDE,
+                             config.UNITS_EXCLUDE)
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        out: list[Finding] = []
+        literal_scoped = not path_in_scope(
+            path, config.UNITS_LITERAL_EXCLUDE)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ADDITIVE):
+                self._additive(path, node, node.left, node.right,
+                               literal_scoped, out)
+            elif isinstance(node, ast.AugAssign) and isinstance(node.op,
+                                                                ADDITIVE):
+                self._additive(path, node, node.target, node.value,
+                               literal_scoped, out)
+            elif isinstance(node, ast.Compare):
+                units = [unit_of(node.left)] + [unit_of(c)
+                                                for c in node.comparators]
+                ops_ok = all(isinstance(op, COMPARES) for op in node.ops)
+                present = [u for u in units if u is not None]
+                if ops_ok and len(set(present)) > 1:
+                    out.append(self.finding(
+                        path, node,
+                        f"comparison mixes units "
+                        f"{'/'.join(sorted(set(present)))}"))
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tu = unit_of(node.targets[0])
+                vu = unit_of(node.value)
+                if tu and vu and tu != vu:
+                    out.append(self.finding(
+                        path, node,
+                        f"assignment mixes units {tu} = {vu}"))
+        return out
+
+    def _additive(self, path: str, node: ast.AST, left: ast.AST,
+                  right: ast.AST, literal_scoped: bool,
+                  out: list[Finding]) -> None:
+        lu, ru = unit_of(left), unit_of(right)
+        if lu and ru and lu != ru:
+            out.append(self.finding(
+                path, node, f"additive op mixes units {lu} and {ru}"))
+        elif literal_scoped and (
+                (lu == "_us" and _is_number(right))
+                or (ru == "_us" and _is_number(left))):
+            out.append(self.finding(
+                path, node,
+                "bare numeric literal added to a _us quantity; name the "
+                "constant *_us (or move it into flashsim/device.py)"))

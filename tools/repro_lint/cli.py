@@ -1,0 +1,77 @@
+"""CLI driver for repro-lint: ``python -m tools.repro_lint``.
+
+Exit status is the CI gate (DESIGN.md §8.6): 0 when every finding is
+grandfathered and no baseline entry is stale, 1 otherwise. ``--report``
+writes the full findings list (baselined or not) to a file for the CI
+artifact, so a red run ships its evidence.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from tools.repro_lint.baseline import (diff_against_baseline, load_baseline,
+                                       save_baseline)
+from tools.repro_lint.checkers import CHECKERS, run_checkers
+
+
+def _repo_root() -> pathlib.Path:
+    # tools/repro_lint/cli.py -> repo root is two parents up from tools/.
+    return pathlib.Path(__file__).resolve().parent.parent.parent
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro_lint",
+        description="repo-specific determinism static analysis "
+                    "(RL001-RL005; see DESIGN.md §8)")
+    parser.add_argument("--root", type=pathlib.Path, default=None,
+                        help="repo root to scan (default: auto-detected)")
+    parser.add_argument("--baseline", type=pathlib.Path, default=None,
+                        help="baseline file (default: "
+                             "tools/repro_lint/baseline.txt under root)")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="rewrite the baseline from this run's "
+                             "findings and exit 0")
+    parser.add_argument("--report", type=pathlib.Path, default=None,
+                        help="also write every finding (new or "
+                             "grandfathered) to this file")
+    args = parser.parse_args(argv)
+
+    root = (args.root or _repo_root()).resolve()
+    baseline_path = args.baseline or root / "tools/repro_lint/baseline.txt"
+
+    findings = run_checkers(root, CHECKERS)
+
+    if args.report is not None:
+        args.report.parent.mkdir(parents=True, exist_ok=True)
+        args.report.write_text(
+            "".join(f.render() + "\n" for f in findings))
+
+    if args.update_baseline:
+        save_baseline(baseline_path, findings)
+        print(f"repro-lint: baseline updated with {len(findings)} "
+              f"finding(s) -> {baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new, stale = diff_against_baseline(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    for key in stale:
+        print(f"{key}: stale baseline entry (finding no longer "
+              f"produced; run --update-baseline)")
+
+    grandfathered = len(findings) - len(new)
+    status = "FAIL" if (new or stale) else "ok"
+    print(f"repro-lint: {status} — {len(new)} new finding(s), "
+          f"{len(stale)} stale baseline entr(y/ies), "
+          f"{grandfathered} grandfathered, {len(CHECKERS)} checkers")
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,60 @@
+"""Scope configuration for the repro-lint checkers (DESIGN.md §8.6).
+
+Every entry is a tuple of repo-relative path prefixes. The scan set is
+the union of all checker scopes; each checker then applies only inside
+its own include/exclude lists. Exemptions are *structural* — benchmarks
+and launch drivers legitimately read the wall clock to time themselves,
+``compat.py`` exists to be the one ``jax.experimental`` call site,
+``deployment.py`` is the declared engine construction path — so they are
+carved out here, in one reviewable place, rather than with scattered
+inline pragmas.
+"""
+
+from __future__ import annotations
+
+# Directories walked for .py files (union of all checker scopes).
+SCAN_ROOTS = ("src/repro", "benchmarks", "examples")
+
+# RL001 — simulated-clock purity. The simulator/serving stack runs on a
+# *simulated* microsecond clock; a wall-clock read inside it silently
+# couples results to host speed. Benchmarks and launch drivers time
+# themselves with the wall clock on purpose and are out of scope, as is
+# runtime/ (its Clock protocol defaults to time.monotonic for real
+# deployments and is injected everywhere else).
+CLOCK_INCLUDE = ("src/repro/flashsim", "src/repro/core", "src/repro/serving")
+CLOCK_EXCLUDE: tuple = ()
+
+# RL002 — RNG discipline. Every bit-identity claim depends on seeded
+# ``np.random.Generator`` state passed in explicitly; a global draw
+# (np.random.rand, random.random, ...) breaks replay determinism for
+# every caller sharing the process.
+RNG_INCLUDE = ("src/repro",)
+RNG_EXCLUDE: tuple = ()
+
+# RL003 — ordering hazards. Python sets and dict views have no guaranteed
+# cross-run order (sets hash-order by insertion history; PYTHONHASHSEED
+# perturbs str keys); iterating one into an array/concatenate makes lane
+# output depend on it.
+ORDER_INCLUDE = ("src/repro",)
+ORDER_EXCLUDE: tuple = ()
+
+# RL004 — units discipline. ``_us``/``_bytes``/``_pages`` suffixes are a
+# contract; adding/comparing across them, or adding a bare literal to a
+# ``_us`` quantity, is how timing bugs enter. device.py is the one module
+# allowed to combine raw datasheet literals with _us quantities (it
+# *defines* the timing model).
+UNITS_INCLUDE = ("src/repro",)
+UNITS_EXCLUDE: tuple = ()
+UNITS_LITERAL_EXCLUDE = ("src/repro/flashsim/device.py",)
+
+# RL005 — API discipline. jax.experimental drifts release to release;
+# compat.py is the single shim point (its docstring is the contract).
+# Engines are constructed through serving/deployment.py only, so every
+# driver/benchmark shares one offline phase; core/engine.py itself is
+# exempt (ShardedEngine builds its per-device engines internally).
+API_EXPERIMENTAL_INCLUDE = ("src/repro",)
+API_EXPERIMENTAL_EXCLUDE = ("src/repro/compat.py",)
+API_CONSTRUCT_INCLUDE = ("src/repro", "benchmarks", "examples")
+API_CONSTRUCT_EXCLUDE = ("src/repro/serving/deployment.py",
+                         "src/repro/core/engine.py")
+API_SINGLE_CONSTRUCTION = ("RecFlashEngine", "ShardedEngine")
