@@ -15,12 +15,16 @@ test:
 # throughput scales >=1.8x from 1 to 2 devices, DESIGN.md §6), and the
 # SLO overload gate (fig_slo_tail --smoke asserts latency-critical p99 at
 # 4x load stays within 2x of its 1x value while >=30% of bulk is shed,
-# DESIGN.md §7)
+# DESIGN.md §7), and the fault-injection gate (fig_fault_tail --smoke
+# asserts the disabled fault layer is byte-identical to fig_serving_tail
+# and that replicated+hedged failover contains a mid-stream device loss
+# within 3x the fault-free p99, DESIGN.md §9)
 bench-smoke:
 	$(PY) benchmarks/fig_serving_tail.py --smoke
 	$(PY) benchmarks/fig_drift_tail.py --smoke
 	$(PY) benchmarks/fig_scaleout.py --smoke
 	$(PY) benchmarks/fig_slo_tail.py --smoke
+	$(PY) benchmarks/fig_fault_tail.py --smoke
 
 # simulator fast-path microbenchmark (DESIGN.md §2.3): smoke sweep into
 # BENCH_sim_smoke.json (the committed root BENCH_sim.json is the tracked

@@ -1,0 +1,252 @@
+"""Fault-injection tail — fault rate x replication x hedging sweep.
+
+The plain serving sweep (``fig_serving_tail``) assumes a perfect device:
+every read returns first try and no SSD ever dies. This figure turns on
+the seeded fault model (DESIGN.md §9) and measures what the tail costs:
+
+* **RBER sweep** — raising the raw-bit-error rate makes the read-retry
+  ladder re-pay ``tR`` per rung; p99 inflates smoothly until reads start
+  going *uncorrectable* and requests fail outright. ``p99_eff`` charges a
+  failed request infinite latency, so availability loss shows up in the
+  tail column rather than being silently dropped from it.
+* **Device-failure scenario** — one of the two SSDs dies mid-stream.
+  Without replication every sub-lookup routed to it is lost
+  (``p99_eff = inf``). With a replica group (DESIGN.md §9.2) the failed
+  sub-requests re-dispatch to the hot-set replica; hedged reads
+  (DESIGN.md §9.3) additionally duplicate projected-slow sub-requests and
+  take the earlier completion.
+
+Emits CSV rows:
+
+    fig_fault,scenario,fault_rate,k,hedge,policy,p50_ms,p95_ms,
+    p99_eff_ms,availability,n_failed,n_failover,n_hedged,hedge_win_rate,
+    n_retries
+
+``--smoke`` runs the CI gate (acceptance criteria, ISSUE 8):
+
+* with the fault layer *disabled* the serving sweep is byte-identical to
+  ``fig_serving_tail --smoke`` (the fault-free path pays nothing);
+* under a mid-stream device failure, the replicated+hedged lane's
+  ``p99_eff`` stays within 3x the fault-free value while the
+  unreplicated lane's does not.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import ReplicationConfig, TableSpec
+from repro.serving import (BatcherConfig, Deployment, DeploymentConfig,
+                           FaultConfig, FaultEvent)
+
+# same serving-scale table set as fig_serving_tail
+N_TABLES = 8
+N_ROWS = 100_000
+LOOKUPS = 20
+VEC_BYTES = 128
+
+# raw-bit-error probability per page read (before part/retention scaling)
+FAULT_RATES = (0.0, 1e-4, 1e-3, 5e-3)
+# (k copies, hedge): 1 = unreplicated, 2 = one hot-set replica
+MODES = ((1, False), (2, False), (2, True))
+RATE_RPS = 500.0
+BATCHER = BatcherConfig(max_batch=16, max_wait_us=200.0)
+HOT_FRAC = 0.3          # replica hot-set share of every table
+K_LOCALITY = 0.0        # trace locality knob (0.0 = most concentrated;
+                        # hedging needs fully-hot-covered sub-requests)
+
+
+def build_deployment(fault: FaultConfig | None = None,
+                     replication: ReplicationConfig | None = None,
+                     policies=("recflash",), part: str = "TLC",
+                     k: float = K_LOCALITY, seed: int = 0,
+                     n_devices: int = 2, n_channels: int = 2) -> Deployment:
+    return Deployment(DeploymentConfig(
+        tables=[TableSpec(N_ROWS, VEC_BYTES)] * N_TABLES, part=part,
+        policies=tuple(policies), lookups=LOOKUPS, k=k, seed=seed + 100,
+        n_channels=n_channels, n_devices=n_devices, shard="row",
+        batcher=BATCHER, fault=fault, replication=replication))
+
+
+def p99_eff_us(tr) -> float:
+    """p99 with failed requests charged +inf latency (DESIGN.md §9.4).
+
+    Shed requests (NaN, policy decision) stay excluded; *failed* ones
+    (device outcome) are what availability is about, so they keep their
+    place in the distribution as unbounded latencies.
+    """
+    lat = np.asarray(tr.latencies_us, dtype=np.float64).copy()
+    if tr.failed_mask is not None:
+        lat[tr.failed_mask] = np.inf
+    lat = lat[~np.isnan(lat)]
+    if lat.size == 0:
+        return float("nan")
+    # interpolating between two +inf order statistics yields nan; that
+    # means the p99 position itself is inside the failed mass -> inf
+    with np.errstate(invalid="ignore"):
+        p = float(np.percentile(lat, 99.0))
+    return float("inf") if np.isnan(p) else p
+
+
+def _mode_cfg(k: int, hedge: bool) -> ReplicationConfig | None:
+    if k <= 1:
+        return None
+    return ReplicationConfig(k=k, hot_frac=HOT_FRAC, hedge=hedge)
+
+
+def _rows_for(traces, scenario: str, fault_rate: float, k: int,
+              hedge: bool) -> list:
+    rows = []
+    for pol, tr in traces.items():
+        r = tr.report
+        p50, p95, _ = (r.p50_us, r.p95_us, r.p99_us)
+        rows.append(dict(
+            scenario=scenario, fault_rate=fault_rate, k=k, hedge=hedge,
+            policy=pol, p50_ms=p50 / 1e3, p95_ms=p95 / 1e3,
+            p99_eff_ms=p99_eff_us(tr) / 1e3,
+            availability=r.availability, n_failed=r.n_failed,
+            n_failover=r.n_failover, n_hedged=r.n_hedged,
+            hedge_win_rate=r.hedge_win_rate, n_retries=r.n_retries))
+    return rows
+
+
+def run(n_requests: int = 1000, fault_rates=FAULT_RATES, modes=MODES,
+        policies=("recflash",), seed: int = 0, n_channels: int = 2):
+    rows = []
+    # RBER sweep: per-read error rate x replication mode
+    for k, hedge in modes:
+        for fr in fault_rates:
+            fault = (FaultConfig(seed=seed + 9, read_fail_base=fr)
+                     if fr > 0 else None)
+            dep = build_deployment(fault, _mode_cfg(k, hedge),
+                                   policies=policies, seed=seed,
+                                   n_channels=n_channels)
+            reqs = dep.stream(n_requests, RATE_RPS, seed=seed,
+                              arrival_seed=seed + 7)
+            traces = dep.run_stream(reqs)
+            rows += _rows_for(traces, "rber", fr, k, hedge)
+    # device-failure scenario: SSD 1 dies mid-stream
+    t_fail = 0.5 * n_requests / RATE_RPS * 1e6
+    devfail = FaultConfig(seed=seed + 9, events=(
+        FaultEvent(t_us=t_fail, kind="device_fail", device=1),))
+    for k, hedge in modes:
+        dep = build_deployment(devfail, _mode_cfg(k, hedge),
+                               policies=policies, seed=seed,
+                               n_channels=n_channels)
+        reqs = dep.stream(n_requests, RATE_RPS, seed=seed,
+                          arrival_seed=seed + 7)
+        traces = dep.run_stream(reqs)
+        rows += _rows_for(traces, "devfail", 0.0, k, hedge)
+    return rows
+
+
+# -- smoke gates (CI acceptance) ----------------------------------------------
+def identity_rows(n_requests: int = 300, n_channels: int = 1,
+                  fault: FaultConfig | None = None) -> list:
+    """``fig_serving_tail --smoke``'s sweep with a fault config threaded.
+
+    Mirrors its parameters exactly so a *disabled* fault config can be
+    compared row-for-row against the fault-free reference output.
+    """
+    import fig_serving_tail as fst
+    dep = Deployment(DeploymentConfig(
+        tables=[TableSpec(fst.N_ROWS, fst.VEC_BYTES)] * fst.N_TABLES,
+        part="TLC", lookups=fst.LOOKUPS, k=0.0, seed=100,
+        n_channels=n_channels, fault=fault))
+    rows = []
+    reqs = dep.stream(n_requests, 500.0, arrival="poisson", seed=0,
+                      arrival_seed=7)
+    for max_batch, max_wait in ((1, 0.0), (64, 1000.0)):
+        traces = dep.run_stream(
+            reqs, batcher=BatcherConfig(max_batch=max_batch,
+                                        max_wait_us=max_wait))
+        for pol, tr in traces.items():
+            r = tr.report
+            rows.append(dict(
+                arrival="poisson", rate=500.0, max_batch=max_batch,
+                max_wait_us=max_wait, policy=pol,
+                p50_ms=r.p50_us / 1e3, p95_ms=r.p95_us / 1e3,
+                p99_ms=r.p99_us / 1e3, throughput_rps=r.throughput_rps,
+                mean_batch=r.mean_batch_size, util=r.device_busy_frac))
+    return rows
+
+
+def smoke(n_requests: int = 300, seed: int = 0, n_channels: int = 2):
+    import fig_serving_tail as fst
+    # gate 1: disabled fault layer is byte-identical to fig_serving_tail
+    ref = fst.run(n_requests=n_requests, rates=(500.0,),
+                  points=((1, 0.0), (64, 1000.0)), arrivals=("poisson",))
+    off = identity_rows(n_requests,
+                        fault=FaultConfig(enabled=False, read_fail_base=0.5,
+                                          bad_block_frac=0.5))
+    assert ref == off, (
+        "disabled FaultConfig changed fig_serving_tail output — the "
+        "fault-free path is no longer byte-identical")
+    print("identity_gate,ok")
+    # gate 2: mid-stream device failure, replicated+hedged vs unreplicated
+    t_fail = 0.5 * n_requests / RATE_RPS * 1e6
+    devfail = FaultConfig(seed=seed + 9, events=(
+        FaultEvent(t_us=t_fail, kind="device_fail", device=1),))
+    runs = {}
+    for label, fault, repl in (
+            ("clean", None, None),
+            ("unreplicated", devfail, None),
+            ("replicated", devfail,
+             ReplicationConfig(k=2, hot_frac=HOT_FRAC, hedge=True))):
+        dep = build_deployment(fault, repl, seed=seed,
+                               n_channels=n_channels)
+        reqs = dep.stream(n_requests, RATE_RPS, seed=seed,
+                          arrival_seed=seed + 7)
+        tr = dep.run_stream(reqs)["recflash"]
+        runs[label] = tr
+        print(f"devfail_{label},p99_eff_ms="
+              f"{p99_eff_us(tr) / 1e3:.3f},"
+              f"availability={tr.report.availability:.3f},"
+              f"n_failover={tr.report.n_failover},"
+              f"n_hedged={tr.report.n_hedged}")
+    ref99 = p99_eff_us(runs["clean"])
+    repl99 = p99_eff_us(runs["replicated"])
+    unrepl99 = p99_eff_us(runs["unreplicated"])
+    assert repl99 <= 3.0 * ref99, (
+        f"replicated+hedged p99_eff {repl99 / 1e3:.2f} ms exceeds 3x the "
+        f"fault-free {ref99 / 1e3:.2f} ms — failover is not containing "
+        "the device loss")
+    assert not unrepl99 <= 3.0 * ref99, (
+        f"unreplicated p99_eff {unrepl99 / 1e3:.2f} ms stayed within 3x "
+        f"fault-free {ref99 / 1e3:.2f} ms — the failure scenario is too "
+        "mild to gate on")
+    assert runs["replicated"].report.n_failover > 0
+    print(f"devfail_gate,repl_over_clean="
+          f"{repl99 / max(ref99, 1e-9):.2f}x,ok")
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=1000)
+    ap.add_argument("--channels", type=int, default=2,
+                    help="concurrent SLS servers per policy lane")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gates: fault-off identity + device-failure "
+                         "containment")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(n_channels=args.channels)
+        rows = run(n_requests=300, fault_rates=(0.0, 1e-3),
+                   modes=((1, False), (2, True)), n_channels=args.channels)
+    else:
+        rows = run(n_requests=args.requests, n_channels=args.channels)
+    print("figure,scenario,fault_rate,k,hedge,policy,p50_ms,p95_ms,"
+          "p99_eff_ms,availability,n_failed,n_failover,n_hedged,"
+          "hedge_win_rate,n_retries")
+    for r in rows:
+        print(f"fig_fault,{r['scenario']},{r['fault_rate']:g},{r['k']},"
+              f"{int(r['hedge'])},{r['policy']},{r['p50_ms']:.3f},"
+              f"{r['p95_ms']:.3f},{r['p99_eff_ms']:.3f},"
+              f"{r['availability']:.3f},{r['n_failed']},{r['n_failover']},"
+              f"{r['n_hedged']},{r['hedge_win_rate']:.3f},"
+              f"{r['n_retries']}")
+
+
+if __name__ == "__main__":
+    main()

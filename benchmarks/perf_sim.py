@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.core.freq import AccessStats
 from repro.core.remap import build_mapping
-from repro.flashsim.device import PARTS, TIMING, CacheConfig
+from repro.flashsim.device import PARTS, TIMING, CacheConfig, FaultConfig
 from repro.flashsim.timeline import POLICIES, SLSSimulator
 
 N_ROWS = 100_000
@@ -36,13 +36,14 @@ SMOKE_SIZES = (20_000,)
 SMOKE_PARTS = ("TLC",)
 
 
-def make_sim(policy: str, part_name: str, stats: AccessStats) -> SLSSimulator:
+def make_sim(policy: str, part_name: str, stats: AccessStats,
+             fault: FaultConfig | None = None) -> SLSSimulator:
     part = PARTS[part_name]
     pol = POLICIES[policy]
     m = build_mapping(N_ROWS, VEC_BYTES, part.page_bytes, part.n_planes,
                       mode=pol.mapping_mode,
                       stats=None if pol.mapping_mode == "baseline" else stats)
-    return SLSSimulator(part, pol, [m], TIMING, CacheConfig())
+    return SLSSimulator(part, pol, [m], TIMING, CacheConfig(), fault=fault)
 
 
 def time_run(sim: SLSSimulator, tables: np.ndarray, rows: np.ndarray,
@@ -88,6 +89,45 @@ def run(sizes, parts, policies=tuple(POLICIES), seed: int = 0,
     return results
 
 
+def run_faults(sizes, parts, policies=tuple(POLICIES), seed: int = 0,
+               repeats: int = 3) -> list[dict]:
+    """Fault-layer overhead lanes (DESIGN.md §9.1).
+
+    Times the vectorised run with the retry ladder armed against the
+    identical clean run. Lane keys are ``policy@faults`` so they gate
+    independently; ``speedup`` is ``t_clean / t_faulted`` (host speed
+    cancels), so the 2x check fires when fault accounting gets slower
+    *relative to* the clean path it decorates.
+    """
+    results = []
+    rng = np.random.default_rng(seed)
+    fault = FaultConfig(seed=seed, read_fail_base=1e-3)
+    for n in sizes:
+        rows = rng.zipf(ZIPF_A, size=n) % N_ROWS
+        tables = np.zeros(n, dtype=np.int64)
+        stats = AccessStats.from_trace(rows, N_ROWS)
+        for part in parts:
+            for pol in policies:
+                sim = make_sim(pol, part, stats)
+                simf = make_sim(pol, part, stats, fault=fault)
+                # equivalence guard: retries re-pay tR on the same page
+                # reads — counts must match, latency must not shrink.
+                r_clean = sim.run(tables, rows)
+                r_fault = simf.run(tables, rows)
+                assert r_fault.n_page_reads == r_clean.n_page_reads, \
+                    (pol, part)
+                assert r_fault.latency_us >= r_clean.latency_us, (pol, part)
+                t_clean = time_run(sim, tables, rows, False, repeats)
+                t_fault = time_run(simf, tables, rows, False, repeats)
+                results.append(dict(
+                    policy=f"{pol}@faults", part=part, n=int(n),
+                    t_vec_s=round(t_fault, 6), t_exact_s=round(t_clean, 6),
+                    speedup=round(t_clean / max(t_fault, 1e-9), 2)))
+                print(f"perf_sim,{pol}@faults,{part},{n},{t_fault:.6f},"
+                      f"{t_clean:.6f},{results[-1]['speedup']:.1f}x")
+    return results
+
+
 def check(results: list[dict], baseline_path: str) -> int:
     with open(baseline_path) as f:
         base = json.load(f)
@@ -123,6 +163,7 @@ def main() -> int:
     parts = SMOKE_PARTS if args.smoke else FULL_PARTS
     print("figure,policy,part,n_accesses,t_vectorized_s,t_exact_s,speedup")
     results = run(sizes, parts, seed=args.seed)
+    results += run_faults(sizes, parts, seed=args.seed)
     payload = dict(
         meta=dict(n_rows=N_ROWS, vec_bytes=VEC_BYTES, zipf_a=ZIPF_A,
                   smoke=bool(args.smoke), seed=args.seed),

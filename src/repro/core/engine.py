@@ -18,7 +18,8 @@ from repro.core.adaptive import AdaptiveHashTable, UpdateReport
 from repro.core.freq import AccessStats
 from repro.core.remap import Mapping, build_mapping, build_mapping_from_order
 from repro.core.triggers import PeriodTrigger, ThresholdTrigger
-from repro.flashsim.device import CacheConfig, FlashPart, TIMING
+from repro.flashsim.device import (CacheConfig, FaultConfig, FlashPart,
+                                   PARTS, TIMING)
 from repro.flashsim.timeline import POLICIES, PolicyConfig, SimResult, SLSSimulator
 
 
@@ -33,6 +34,56 @@ class TableSpec:
 
 
 SHARD_STRATEGIES = ("table", "row")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicationConfig:
+    """Replicated hot-set failover policy for a flash fleet (DESIGN.md §9.2).
+
+    The top ``hot_frac`` rows of every table by sampled-frequency rank
+    (the ``popularity_perm``/``rank_order`` convention) are mirrored on
+    ``k - 1`` dedicated replica devices in addition to their primary —
+    ``k`` copies total, RecNMP-style hot-set replication. Replicas may
+    sit on a different (faster) flash part, e.g. SLC for the hot tier.
+
+    ``hedge`` opts into hedged reads (Dean & Barroso tail-at-scale): a
+    sub-request fully covered by the hot set gets a duplicate dispatched
+    to the least-loaded replica when its primary device's projected
+    completion exceeds ``hedge_percentile``-ish of that device's recent
+    completions (asymmetric-EWMA tail estimate); the request completes
+    at the min of the two.
+    """
+
+    k: int = 2                   # total copies of the hot set (1 = none)
+    hot_frac: float = 0.1        # top share of each table replicated
+    part: str | None = None      # replica flash part name (None = primary's)
+    hedge: bool = False          # opt-in hedged reads
+    hedge_alpha: float = 0.05    # EWMA step for the tail estimator
+    hedge_boost: float = 20.0    # upper-side EWMA multiplier (~p95 chase)
+
+    def __post_init__(self) -> None:
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+        if not 0.0 < self.hot_frac <= 1.0:
+            raise ValueError("hot_frac must be in (0, 1]")
+        if self.part is not None and self.part not in PARTS:
+            raise ValueError(f"unknown replica part {self.part!r}; "
+                             f"have {tuple(PARTS)}")
+        if not 0.0 < self.hedge_alpha <= 1.0:
+            raise ValueError("hedge_alpha must be in (0, 1]")
+        if self.hedge_boost < 1.0:
+            raise ValueError("hedge_boost must be >= 1")
+
+    @property
+    def n_replicas(self) -> int:
+        return self.k - 1
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ReplicationConfig":
+        return cls(**d)
 
 
 class ShardPlan:
@@ -57,11 +108,18 @@ class ShardPlan:
     The plan is a property of the *deployment*, shared by every policy
     lane, so all policies see the identical device-level load split and
     differ only in their per-device physical page mapping.
+
+    With a :class:`ReplicationConfig` the plan additionally carries the
+    replica-group routing state (DESIGN.md §9.2): per table, the hot rows
+    (by rank) mirrored on every replica device, and a dense
+    ``replica_local_row`` array mapping global row -> replica-local row
+    (``-1`` for unreplicated cold rows).
     """
 
     def __init__(self, tables: list[TableSpec],
                  stats: "list[AccessStats]", n_devices: int,
-                 strategy: str = "table") -> None:
+                 strategy: str = "table",
+                 replication: "ReplicationConfig | None" = None) -> None:
         if n_devices < 1:
             raise ValueError("n_devices must be >= 1")
         if strategy not in SHARD_STRATEGIES:
@@ -72,6 +130,23 @@ class ShardPlan:
         self.strategy = strategy
         self.n_devices = n_devices
         self.n_tables = len(tables)
+        self.replication = replication
+        # replica-group structures (empty without replication)
+        self.replica_tables: list[TableSpec] = []
+        self.replica_stats: list[AccessStats] = []
+        self.hot_rows: list[np.ndarray] = []
+        self.replica_local_row: list[np.ndarray] = []
+        if replication is not None and replication.n_replicas > 0:
+            for spec, st in zip(tables, stats, strict=True):
+                n_hot = min(spec.n_rows, max(1, int(
+                    np.ceil(replication.hot_frac * spec.n_rows))))
+                hot = st.rank_order()[:n_hot]       # rank order
+                local = np.full(spec.n_rows, -1, dtype=np.int64)
+                local[hot] = np.arange(n_hot, dtype=np.int64)
+                self.hot_rows.append(hot)
+                self.replica_local_row.append(local)
+                self.replica_tables.append(TableSpec(n_hot, spec.vec_bytes))
+                self.replica_stats.append(AccessStats(st.counts[hot]))
         # per device: local TableSpecs and matching local AccessStats
         self.device_tables: list[list[TableSpec]] = []
         self.device_stats: list[list[AccessStats]] = []
@@ -136,6 +211,26 @@ class ShardPlan:
             lrow[sel] = self.local_row_id[t][rows[sel]]
         return dev, tables, lrow
 
+    def replica_route(self, tables: np.ndarray, rows: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray]:
+        """Replica-local routing of one access stream (DESIGN.md §9.2).
+
+        Returns ``(covered, local_row)`` aligned with the input:
+        ``covered[i]`` iff access ``i`` hits a replicated hot row, and
+        ``local_row[i]`` is its row id on every replica device (valid only
+        where covered; ``-1`` elsewhere). Replica table ids equal global
+        table ids — each replica holds the hot slice of *every* table.
+        """
+        if not self.replica_local_row:
+            raise ValueError("plan has no replication configured")
+        tables = np.asarray(tables, dtype=np.int64).ravel()
+        rows = np.asarray(rows, dtype=np.int64).ravel()
+        lrow = np.empty(rows.size, dtype=np.int64)
+        for t in np.unique(tables):
+            sel = tables == t
+            lrow[sel] = self.replica_local_row[t][rows[sel]]
+        return lrow >= 0, lrow
+
 
 @dataclasses.dataclass
 class RemapPlan:
@@ -177,16 +272,21 @@ class RecFlashEngine:
                  policy: str | PolicyConfig = "recflash",
                  sample_stats: list[AccessStats] | None = None,
                  hot_frac: float = 0.05,
-                 cache_cfg: CacheConfig | None = None) -> None:
+                 cache_cfg: CacheConfig | None = None,
+                 fault: FaultConfig | None = None) -> None:
         self.tables = tables
         self.part = part
         self.policy = POLICIES[policy] if isinstance(policy, str) else policy
         self.hot_frac = hot_frac
+        # device-filtered fault model (DESIGN.md §9); the serving replay
+        # reads it back for event (stall/device-fail) scheduling
+        self.fault = fault
         self.stats = sample_stats or [
             AccessStats(np.zeros(t.n_rows, dtype=np.int64)) for t in tables]
         mappings = [self._build(t, s)
                     for t, s in zip(tables, self.stats, strict=True)]
-        self.sim = SLSSimulator(part, self.policy, mappings, TIMING, cache_cfg)
+        self.sim = SLSSimulator(part, self.policy, mappings, TIMING, cache_cfg,
+                                fault=fault)
         # Algorithm-1 state (only meaningful for remapping policies)
         self.hash_tables: list[AdaptiveHashTable] = []
         if self.policy.mapping_mode != "baseline":
@@ -270,7 +370,10 @@ class RecFlashEngine:
         cache_cfg = self.sim.cache_cfg
         sliced = dataclasses.replace(
             cache_cfg, sram_bytes=cache_cfg.sram_bytes // n_channels)
-        return [self.sim.fork(sliced) for _ in range(n_channels)]
+        # per-channel fault substream: channels draw independent but
+        # reproducible retry sequences (DESIGN.md §9.1)
+        return [self.sim.fork(sliced, fault_stream=c)
+                for c in range(n_channels)]
 
     def window_counts(self, tid: int) -> np.ndarray:
         """Dense access-count array for table ``tid``'s online window."""
@@ -444,29 +547,53 @@ class ShardedEngine:
                  hot_frac: float = 0.05,
                  cache_cfg: CacheConfig | None = None,
                  n_devices: int = 2, shard: str = "table",
-                 plan: ShardPlan | None = None) -> None:
+                 plan: ShardPlan | None = None,
+                 fault: FaultConfig | None = None,
+                 replication: ReplicationConfig | None = None) -> None:
         self.tables = tables
         self.part = part
         self.policy = POLICIES[policy] if isinstance(policy, str) else policy
         self.hot_frac = hot_frac
+        self.fault = fault
         self.stats = sample_stats or [
             AccessStats(np.zeros(t.n_rows, dtype=np.int64)) for t in tables]
-        # the plan depends only on (tables, stats, n_devices, shard), all
-        # policy-independent — a deployment builds it once and passes the
-        # same instance to every policy lane's engine
+        # the plan depends only on (tables, stats, n_devices, shard,
+        # replication), all policy-independent — a deployment builds it once
+        # and passes the same instance to every policy lane's engine
         if plan is not None:
             if plan.n_devices != n_devices or plan.strategy != shard:
                 raise ValueError("provided ShardPlan does not match "
                                  f"n_devices={n_devices}/shard={shard!r}")
+            if plan.replication != replication:
+                raise ValueError("provided ShardPlan was built with a "
+                                 "different ReplicationConfig")
             self.plan = plan
         else:
-            self.plan = ShardPlan(tables, self.stats, n_devices, shard)
+            self.plan = ShardPlan(tables, self.stats, n_devices, shard,
+                                  replication=replication)
+        self.replication = self.plan.replication
         self.devices: list[RecFlashEngine] = [
             RecFlashEngine(self.plan.device_tables[d], part,
                            policy=self.policy,
                            sample_stats=self.plan.device_stats[d],
-                           hot_frac=hot_frac, cache_cfg=cache_cfg)
+                           hot_frac=hot_frac, cache_cfg=cache_cfg,
+                           fault=fault.for_device(d) if fault is not None
+                           else None)
             for d in range(n_devices)]
+        # dedicated hot-set replica devices (DESIGN.md §9.2): each holds
+        # the top-ranked slice of every table, optionally on a faster part
+        self.replicas: list[RecFlashEngine] = []
+        repl = self.replication
+        if repl is not None and repl.n_replicas > 0:
+            rpart = PARTS[repl.part] if repl.part is not None else part
+            self.replicas = [
+                RecFlashEngine(self.plan.replica_tables, rpart,
+                               policy=self.policy,
+                               sample_stats=self.plan.replica_stats,
+                               hot_frac=hot_frac, cache_cfg=cache_cfg,
+                               fault=fault.for_replica(j)
+                               if fault is not None else None)
+                for j in range(repl.n_replicas)]
 
     @property
     def n_devices(self) -> int:

@@ -103,6 +103,181 @@ PARTS = {"SLC": SLC, "TLC": TLC, "QLC": QLC}
 TIMING = FlashTiming()
 
 
+# -- fault injection (DESIGN.md §9) -----------------------------------------
+
+# RBER scale per part: more bits per cell means a higher raw-bit-error rate
+# at equal retention age (SLC << TLC << QLC). Order-of-magnitude shape from
+# public NAND characterisation studies; the exact values are a documented
+# modeling assumption like t_prog / t_erase above.
+PART_FAIL_FACTOR = {"SLC": 1.0, "TLC": 4.0, "QLC": 16.0}
+
+FAULT_EVENT_KINDS = ("device_fail", "channel_stall")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected fleet fault at a simulated timestamp (DESIGN.md §9.2).
+
+    ``device_fail`` — device ``device`` stops answering at ``t_us``
+    (permanent): every read that would complete after ``t_us`` is lost.
+    ``channel_stall`` — channel ``channel`` of the device (``None`` = all
+    its channels) cannot *start* service inside
+    ``[t_us, t_us + duration_us)``.
+    """
+
+    t_us: float
+    kind: str = "device_fail"
+    device: int = 0
+    channel: int | None = None
+    duration_us: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_EVENT_KINDS:
+            raise ValueError(f"unknown fault event kind {self.kind!r}; "
+                             f"have {FAULT_EVENT_KINDS}")
+        if self.t_us < 0:
+            raise ValueError("t_us must be >= 0")
+        if self.kind == "channel_stall" and self.duration_us <= 0:
+            raise ValueError("channel_stall needs a positive duration_us")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Seeded, fully deterministic flash-fault model (DESIGN.md §9.1).
+
+    **Read-retry ladder.** A page read's first attempt fails with
+    probability ``p0 = read_fail_base * PART_FAIL_FACTOR[part] *
+    (1 + retention_rate * retention_age_days)`` (clamped to 0.95) — the
+    post-ECC probability that the raw bit errors exceed the base
+    correction strength. Retry rung ``j`` re-reads with a stepped read
+    voltage and fails with ``p0 * retry_decay**j``; every rung re-pays
+    the part's ``t_r``. After ``max_retries`` rungs ECC declares the read
+    **uncorrectable**: the lookups riding it error out, the time is still
+    paid. A single uniform draw per page read drives the whole ladder
+    (rung ``j`` fails iff ``u < p0 * retry_decay**j``), which makes the
+    retry depth vectorisable and monotone non-decreasing in ``p0`` for a
+    fixed seed.
+
+    **Grown bad blocks.** ``bad_block_frac`` of each device's blocks are
+    marked grown-bad at build time (seeded choice, no per-access RNG);
+    a read landing in one pays a deterministic FTL redirection — one
+    extra ``t_CA + t_R`` to the replacement block.
+
+    **Events.** ``events`` injects channel stalls and whole-device
+    failures at simulated timestamps (:class:`FaultEvent`); they are
+    consumed by the serving replay, not the device simulator.
+
+    All randomness derives from ``seed`` (explicit, RL002-clean);
+    ``stream`` is the substream identity (device index in a fleet) so
+    devices draw independent but reproducible fault sequences. A
+    disabled config (``enabled=False`` or all-zero rates) is bit-identical
+    to the fault-free simulator.
+    """
+
+    enabled: bool = True
+    seed: int = 0
+    read_fail_base: float = 0.0      # P(first attempt fails) on SLC, age 0
+    retention_age_days: float = 0.0
+    retention_rate: float = 0.05     # fail-prob growth per day of retention
+    retry_decay: float = 0.5         # per-rung fail-prob multiplier
+    max_retries: int = 8             # ladder depth before ECC gives up
+    bad_block_frac: float = 0.0      # grown-bad share of blocks
+    events: tuple = ()               # FaultEvent tuple
+    stream: int = 0                  # RNG substream (device identity)
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.read_fail_base < 1.0:
+            raise ValueError("read_fail_base must be in [0, 1)")
+        if self.retention_age_days < 0 or self.retention_rate < 0:
+            raise ValueError("retention age/rate must be >= 0")
+        if not 0.0 < self.retry_decay <= 1.0:
+            raise ValueError("retry_decay must be in (0, 1]")
+        if self.max_retries < 1:
+            raise ValueError("max_retries must be >= 1")
+        if not 0.0 <= self.bad_block_frac < 1.0:
+            raise ValueError("bad_block_frac must be in [0, 1)")
+        if self.stream < 0:
+            raise ValueError("stream must be >= 0")
+        object.__setattr__(self, "events", tuple(self.events))
+
+    @property
+    def active(self) -> bool:
+        """True iff the config can change anything at all."""
+        return self.enabled and (self.read_fail_base > 0.0
+                                 or self.bad_block_frac > 0.0
+                                 or bool(self.events))
+
+    def read_fail_prob(self, part: "FlashPart") -> float:
+        """First-attempt read-failure probability for ``part`` at the
+        configured retention age (the ladder's ``p0``)."""
+        p = (self.read_fail_base * PART_FAIL_FACTOR.get(part.name, 1.0)
+             * (1.0 + self.retention_rate * self.retention_age_days))
+        return min(p, 0.95)
+
+    def bad_page_mask(self, n_page_ids: int,
+                      pages_per_block: int) -> np.ndarray:
+        """Per-page grown-bad flag over a device's page-id namespace.
+
+        Deterministic from ``(seed, stream)`` — the grown-bad-block table
+        is device state built once, not a per-access draw.
+        """
+        n_blocks = max(1, -(-n_page_ids // pages_per_block))
+        bad_blocks = np.zeros(n_blocks, dtype=bool)
+        # ceil: any nonzero frac marks at least one block, even on
+        # tables smaller than 1/frac blocks
+        n_bad = int(np.ceil(self.bad_block_frac * n_blocks))
+        if n_bad:
+            rng = np.random.default_rng((self.seed, self.stream, 1))
+            bad_blocks[rng.choice(n_blocks, size=n_bad, replace=False)] = True
+        pages = np.arange(n_page_ids, dtype=np.int64) // pages_per_block
+        return bad_blocks[pages]
+
+    def retry_seed(self, substream: int) -> tuple:
+        """Seed tuple for one simulator's retry-draw generator.
+
+        ``substream`` separates the channel forks of one device; the
+        device identity itself is ``stream``.
+        """
+        return (self.seed, self.stream, 2, substream)
+
+    def for_device(self, device: int) -> "FaultConfig":
+        """Device-local view: own RNG substream, own events only."""
+        return dataclasses.replace(
+            self, stream=device,
+            events=tuple(e for e in self.events if e.device == device))
+
+    def for_replica(self, replica: int) -> "FaultConfig":
+        """Replica-device view: RBER/bad-block model active on its own
+        substream, injected events stripped (replicas are the recovery
+        path; a scenario that fails them too should model them as
+        primaries)."""
+        return dataclasses.replace(self, stream=10_000 + replica, events=())
+
+    @property
+    def device_fail_at_us(self) -> float:
+        """Earliest whole-device failure time (inf = never fails)."""
+        fails = [e.t_us for e in self.events if e.kind == "device_fail"]
+        return min(fails) if fails else float("inf")
+
+    def stall_windows(self) -> list:
+        """``(channel, t0_us, t1_us)`` no-start windows, sorted by start."""
+        return sorted(((e.channel, e.t_us, e.t_us + e.duration_us)
+                       for e in self.events if e.kind == "channel_stall"),
+                      key=lambda w: (w[1], w[2]))
+
+    # -- serialization (DeploymentConfig round-trip) ------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["events"] = [dataclasses.asdict(e) for e in self.events]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultConfig":
+        d = dict(d)
+        d["events"] = tuple(FaultEvent(**e) for e in d.get("events", ()))
+        return cls(**d)
+
+
 @dataclasses.dataclass(frozen=True)
 class CacheConfig:
     """Page-wise SRAM cache in the SSD controller (paper §III-C2).

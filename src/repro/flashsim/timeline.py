@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.core.page_cache import PageLRU
 from repro.core.remap import Mapping
-from repro.flashsim.device import CacheConfig, FlashPart, FlashTiming, TIMING
+from repro.flashsim.device import (CacheConfig, FaultConfig, FlashPart,
+                                   FlashTiming, TIMING)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,8 +89,23 @@ class SimResult:
     n_buffer_hits: int = 0
     n_cache_hits: int = 0
     bytes_out: int = 0
+    # fault-injection accounting (DESIGN.md §9.1; zero/None with faults off)
+    n_retries: int = 0            # extra t_R re-pays on the retry ladder
+    n_uncorrectable: int = 0      # page reads ECC gave up on
+    n_badblock_reads: int = 0     # grown-bad-block FTL redirections
+    n_failed_lookups: int = 0     # accesses riding an uncorrectable read
+    retry_hist: np.ndarray | None = None   # (max_retries+1,) reads by depth
+    # per-access failed flag in this call's input order (not merged —
+    # callers consume it per batch for request attribution)
+    failed: np.ndarray | None = None
 
     def merge(self, other: "SimResult") -> "SimResult":
+        if self.retry_hist is None:
+            hist = None if other.retry_hist is None else other.retry_hist.copy()
+        elif other.retry_hist is None:
+            hist = self.retry_hist.copy()
+        else:
+            hist = self.retry_hist + other.retry_hist
         return SimResult(
             self.latency_us + other.latency_us,
             self.energy_uj + other.energy_uj,
@@ -99,6 +115,11 @@ class SimResult:
             self.n_buffer_hits + other.n_buffer_hits,
             self.n_cache_hits + other.n_cache_hits,
             self.bytes_out + other.bytes_out,
+            n_retries=self.n_retries + other.n_retries,
+            n_uncorrectable=self.n_uncorrectable + other.n_uncorrectable,
+            n_badblock_reads=self.n_badblock_reads + other.n_badblock_reads,
+            n_failed_lookups=self.n_failed_lookups + other.n_failed_lookups,
+            retry_hist=hist,
         )
 
     @property
@@ -111,7 +132,8 @@ class SLSSimulator:
 
     def __init__(self, part: FlashPart, policy: PolicyConfig,
                  mappings: list[Mapping], timing: FlashTiming = TIMING,
-                 cache_cfg: CacheConfig | None = None):
+                 cache_cfg: CacheConfig | None = None,
+                 fault: FaultConfig | None = None, fault_stream: int = 0):
         self.part = part
         self.policy = policy
         self.timing = timing
@@ -133,14 +155,38 @@ class SLSSimulator:
             self._page_offset[t] = off
             off += m.n_pages + 1
         self._n_page_ids = off   # size of the global page-id namespace
+        # fault-injection state (DESIGN.md §9.1). All derived from the
+        # explicit FaultConfig seed (RL002): the grown-bad-block table is
+        # built once here; the retry-draw generator is (re)seeded by
+        # reset_state so identically-prepared replays draw identically.
+        self.fault = fault if (fault is not None and fault.active) else None
+        self._fault_stream = fault_stream
+        if self.fault is not None:
+            self._fail_p = self.fault.read_fail_prob(part)
+            self._bad_page = (self.fault.bad_page_mask(
+                max(1, self._n_page_ids), part.pages_per_block)
+                if self.fault.bad_block_frac > 0.0 else None)
+            self._buffer_failed = np.zeros(part.n_planes, dtype=bool)
+            self._fault_rng = np.random.default_rng(
+                self.fault.retry_seed(fault_stream))
+        else:
+            self._fail_p = 0.0
+            self._bad_page = None
+            self._buffer_failed = None
+            self._fault_rng = None
 
     def reset_state(self) -> None:
         self._buffer[:] = -1
         self._drain_pos[:] = 0
         if self.cache is not None:
             self.cache.clear()
+        if self.fault is not None:
+            self._buffer_failed[:] = False
+            self._fault_rng = np.random.default_rng(
+                self.fault.retry_seed(self._fault_stream))
 
-    def fork(self, cache_cfg: CacheConfig | None = None) -> "SLSSimulator":
+    def fork(self, cache_cfg: CacheConfig | None = None,
+             fault_stream: int | None = None) -> "SLSSimulator":
         """Independent simulator over the *same* mappings list.
 
         The fork gets private planes/page buffers/cache state (fresh, not
@@ -152,7 +198,11 @@ class SLSSimulator:
         own full-budget simulator instead (DESIGN.md §6).
         """
         return SLSSimulator(self.part, self.policy, self.mappings,
-                            self.timing, cache_cfg or self.cache_cfg)
+                            self.timing, cache_cfg or self.cache_cfg,
+                            fault=self.fault,
+                            fault_stream=(self._fault_stream
+                                          if fault_stream is None
+                                          else fault_stream))
 
     def replace_mapping(self, table: int, mapping: Mapping) -> None:
         """Swap in a new remapped layout (after online remapping)."""
@@ -174,6 +224,10 @@ class SLSSimulator:
         (property-tested, including carried device state);
         ``force_exact`` keeps the exact loop for verification.
         """
+        if force_exact and self.fault is not None:
+            raise ValueError(
+                "fault injection is vectorised-only (DESIGN.md §9.1); "
+                "disable the FaultConfig to use force_exact")
         tables = np.asarray(tables, dtype=np.int64).ravel()
         rows = np.asarray(rows, dtype=np.int64).ravel()
         n = rows.size
@@ -276,6 +330,72 @@ class SLSSimulator:
         res.energy_uj = res.read_energy_uj + bytes_out * part.e_io_per_byte
         return res
 
+    def _sample_retries(self, n_reads: int) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorised retry ladder: (retry depth, uncorrectable) per read.
+
+        One uniform draw ``u`` per page read drives every rung: rung ``j``
+        fails iff ``u < p0 * decay**j`` (DESIGN.md §9.1), so the depth is
+        a closed-form log and — for a fixed generator state — monotone
+        non-decreasing in ``p0``. Depth is clamped to ``max_retries``;
+        deeper demand means ECC gives up (uncorrectable).
+        """
+        f = self.fault
+        k = np.zeros(n_reads, dtype=np.int64)
+        uce = np.zeros(n_reads, dtype=bool)
+        p0 = self._fail_p
+        if p0 <= 0.0 or n_reads == 0:
+            return k, uce
+        u = self._fault_rng.random(n_reads)
+        failing = u < p0
+        if not failing.any():
+            return k, uce
+        if f.retry_decay >= 1.0:
+            # no escalation: a failing read fails every rung
+            k[failing] = f.max_retries
+            uce[failing] = True
+            return k, uce
+        with np.errstate(divide="ignore"):
+            depth = np.ceil(np.log(u[failing] / p0)
+                            / np.log(f.retry_decay))
+        # u == 0 gives infinite depth — clamp before the int cast; a
+        # failing first attempt costs at least one retry either way.
+        depth = np.clip(depth, 1, f.max_retries + 1)
+        kd = depth.astype(np.int64)
+        uce[failing] = kd > f.max_retries
+        k[failing] = np.minimum(kd, f.max_retries)
+        return k, uce
+
+    def _fault_plane(self, p: int, pp, r, plane_tr, res, hist
+                     ) -> tuple[np.ndarray, int, int]:
+        """Fault pass for one plane of a (possibly collapsed) stream.
+
+        Samples the retry ladder for the plane's page reads, adds their
+        extra ``t_R`` to ``plane_tr`` (retries extend the plane's array
+        busy time, so multi-plane overlap still applies), looks up
+        grown-bad-block redirections, and updates the counters/histogram.
+        Returns ``(failed, n_bad, n_extra_reads)``: the per-position
+        failed mask (positions whose page-buffer segment head was
+        uncorrectable — segment 0 rides the previous call's latched
+        page), the redirection count (each owes a ``t_CA`` the caller
+        charges), and the total extra array reads (energy).
+        """
+        part = self.part
+        read_pages = pp[r]
+        k, uce = self._sample_retries(read_pages.size)
+        extra_tr = int(k.sum())
+        n_bad = (int(self._bad_page[read_pages].sum())
+                 if self._bad_page is not None and read_pages.size else 0)
+        plane_tr[p] += float(extra_tr + n_bad) * part.t_r
+        res.n_retries += extra_tr
+        res.n_uncorrectable += int(uce.sum())
+        res.n_badblock_reads += n_bad
+        hist += np.bincount(k, minlength=hist.size)
+        head_failed = np.concatenate(([self._buffer_failed[p]], uce))
+        seg = np.cumsum(r)
+        failed = head_failed[seg]
+        self._buffer_failed[p] = bool(head_failed[seg[-1]])
+        return failed, n_bad, extra_tr + n_bad
+
     def _run_vectorized(self, planes, pages, slots, vec_bytes) -> SimResult:
         """Fast path for no-cache policies — bitwise identical to the loop."""
         n = pages.size
@@ -286,6 +406,11 @@ class SLSSimulator:
             return res
         buffer = self._buffer
         drain_pos = self._drain_pos
+        fault = self.fault
+        if fault is not None:
+            failed = np.zeros(n, dtype=bool)
+            hist = np.zeros(fault.max_retries + 1, dtype=np.int64)
+            f_bad = f_extra = 0
 
         # page-read positions: page differs from the previous access on the
         # same plane (first access per plane compares against buffer state).
@@ -302,6 +427,11 @@ class SLSSimulator:
             r[1:] = pp[1:] != pp[:-1]
             reads[idx] = r
             plane_tr[p] = float(r.sum()) * part.t_r
+            if fault is not None:
+                fl, nb, nx = self._fault_plane(p, pp, r, plane_tr, res, hist)
+                failed[idx] = fl
+                f_bad += nb
+                f_extra += nx
             if self.policy.sequential_drain:
                 # Drained-bytes model: within each buffer-residency segment
                 # (starts at a page read), the stream position is the running
@@ -345,6 +475,19 @@ class SLSSimulator:
         res.latency_us += n_reads * t.t_ca + tr_total
         res.read_energy_uj = n_reads * part.e_page_read
         res.energy_uj = res.read_energy_uj + bytes_out * part.e_io_per_byte
+        if fault is not None:
+            # bad-block redirections are full read commands (extra t_CA);
+            # retries and redirections alike re-pay array read energy.
+            # Uncorrectable reads still stream their (garbage) data out —
+            # the controller answers with an error flag, not silence — so
+            # t_DO/bytes accounting above is unchanged.
+            res.latency_us += f_bad * t.t_ca
+            e_extra = float(f_extra) * part.e_page_read
+            res.read_energy_uj += e_extra
+            res.energy_uj += e_extra
+            res.retry_hist = hist
+            res.failed = failed
+            res.n_failed_lookups = int(failed.sum())
         return res
 
     def _run_coalesced(self, planes, pages, vec_bytes, wid, n) -> SimResult:
@@ -374,6 +517,8 @@ class SLSSimulator:
             k_space = (int(wid[-1]) + 1) * int(npl * pid)
         else:
             k_space = int(npl * pid)
+        fault = self.fault
+        elem_of = None   # per-access element index (fault expansion only)
         if k_space <= max(4 * n, 1 << 16):
             counts = np.bincount(key, minlength=k_space)
             present = np.flatnonzero(counts)
@@ -383,6 +528,10 @@ class SLSSimulator:
             vbg = vbg[present]
             gplane = (present // pid) % npl
             gpage = present % pid
+            if fault is not None:
+                elem_idx = np.zeros(k_space, dtype=np.int64)
+                elem_idx[present] = np.arange(present.size, dtype=np.int64)
+                elem_of = elem_idx[key]
         else:
             order = np.argsort(key, kind="stable")
             ks = key[order]
@@ -393,8 +542,13 @@ class SLSSimulator:
             cnt = np.diff(np.append(starts, n))
             sel = order[head]
             gplane, gpage, vbg = planes[sel], pages[sel], vec_bytes[sel]
+            if fault is not None:
+                elem_of = np.empty(n, dtype=np.int64)
+                elem_of[order] = np.cumsum(head) - 1
         if self.cache is None:
             self._plane_pass(res, gplane, gpage, vbg, cnt)
+            if fault is not None and res.failed is not None:
+                res.failed = res.failed[elem_of]
             return res
         hits = self.cache.bulk_access(gpage)
         # run tails (coalesced repeats of a head) are distance-0 hits the
@@ -404,6 +558,14 @@ class SLSSimulator:
         miss = ~hits
         self._plane_pass(res, gplane[miss], gpage[miss], vbg[miss],
                          np.ones(int(miss.sum()), dtype=np.int64))
+        if fault is not None and res.failed is not None:
+            # an uncorrectable page still enters the P$ (garbage payload,
+            # DESIGN.md §9.1), so the run tails riding a failed head fail
+            # with it — the access-space expansion weights them in.
+            elem_failed = np.zeros(cnt.size, dtype=bool)
+            elem_failed[np.flatnonzero(miss)[res.failed]] = True
+            res.failed = elem_failed[elem_of]
+            res.n_failed_lookups = int(res.failed.sum())
         n_hits = int(n) - int(miss.sum())
         res.n_cache_hits = n_hits
         ccfg = self.cache_cfg
@@ -429,6 +591,11 @@ class SLSSimulator:
         n_acc_total = 0
         plane_tr = np.zeros(part.n_planes, dtype=np.float64)
         bytes_out = 0
+        fault = self.fault
+        if fault is not None:
+            failed = np.zeros(pages.size, dtype=bool)
+            hist = np.zeros(fault.max_retries + 1, dtype=np.int64)
+            f_bad = f_extra = 0
         for p in range(part.n_planes):
             idx = np.flatnonzero(planes == p)
             if idx.size == 0:
@@ -438,6 +605,11 @@ class SLSSimulator:
             r[0] = pp[0] != buffer[p]
             np.not_equal(pp[1:], pp[:-1], out=r[1:])
             plane_tr[p] = float(r.sum()) * part.t_r
+            if fault is not None:
+                fl, nb, nx = self._fault_plane(p, pp, r, plane_tr, res, hist)
+                failed[idx] = fl
+                f_bad += nb
+                f_extra += nx
             n_reads += int(r.sum())
             cj = counts[idx]
             n_acc = int(cj.sum())
@@ -455,6 +627,16 @@ class SLSSimulator:
         res.latency_us += n_reads * t.t_ca + tr_total
         res.read_energy_uj = n_reads * part.e_page_read
         res.energy_uj = res.read_energy_uj + bytes_out * part.e_io_per_byte
+        if fault is not None:
+            res.latency_us += f_bad * t.t_ca
+            e_extra = float(f_extra) * part.e_page_read
+            res.read_energy_uj += e_extra
+            res.energy_uj += e_extra
+            res.retry_hist = hist
+            # element-space mask: the caller (_run_coalesced) expands it
+            # to the per-access stream and recounts failed lookups.
+            res.failed = failed
+            res.n_failed_lookups = int(counts[failed].sum())
 
     def _run_vectorized_cached(self, planes, pages, slots,
                                vec_bytes) -> SimResult:
@@ -471,6 +653,13 @@ class SLSSimulator:
         miss = ~hits
         res = self._run_vectorized(planes[miss], pages[miss], slots[miss],
                                    vec_bytes[miss])
+        if self.fault is not None:
+            # expand the miss-substream failed mask to the full stream;
+            # cache hits never fail here (n_failed_lookups unchanged).
+            full = np.zeros(pages.size, dtype=bool)
+            if res.failed is not None:
+                full[np.flatnonzero(miss)] = res.failed
+            res.failed = full
         n_hits = int(hits.sum())
         res.n_lookups = int(pages.size)
         res.n_cache_hits = n_hits

@@ -2,6 +2,8 @@
 dynamic batcher + multi-channel policy lanes (DESIGN.md §3), with the
 SLO-aware dispatch discipline layered on top (DESIGN.md §7)."""
 
+from repro.core.engine import ReplicationConfig
+from repro.flashsim.device import FaultConfig, FaultEvent
 from repro.flashsim.timeline import SERVING_POLICIES
 from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
 from repro.serving.deployment import (DayResult, Deployment,
@@ -21,6 +23,7 @@ from repro.serving.workload import (SLO_CLASSES, DriftScenario, Request,
                                     make_requests, poisson_arrivals)
 
 __all__ = [
+    "FaultConfig", "FaultEvent", "ReplicationConfig",
     "Batch", "BatcherConfig", "DynamicBatcher",
     "DayResult", "Deployment", "DeploymentConfig", "TriggerConfig",
     "arch_model_config",

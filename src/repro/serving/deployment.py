@@ -33,11 +33,12 @@ from typing import TYPE_CHECKING, Any
 import numpy as np
 
 from repro.core.engine import (SHARD_STRATEGIES, DayLog, RecFlashEngine,
-                               ShardedEngine, ShardPlan, TableSpec)
+                               ReplicationConfig, ShardedEngine, ShardPlan,
+                               TableSpec)
 from repro.core.freq import AccessStats
 from repro.core.triggers import PeriodTrigger, ThresholdTrigger
 from repro.data.tracegen import generate_sls_batch
-from repro.flashsim.device import PARTS, CacheConfig
+from repro.flashsim.device import PARTS, CacheConfig, FaultConfig
 from repro.flashsim.timeline import POLICIES, SERVING_POLICIES, SimResult
 from repro.serving.batcher import BatcherConfig
 from repro.serving.metrics import LatencyReport
@@ -154,6 +155,15 @@ class DeploymentConfig:
     # annotation on streams, replay bit-identical to the pre-SLO lane.
     # Mutually exclusive with live_remap (two mid-stream control loops).
     slo: SLOConfig | None = None
+    # fault injection (DESIGN.md §9): seeded read-retry/bad-block/event
+    # model threaded to every device simulator. None (or a config with
+    # ``active`` False) keeps every lane byte-identical to the
+    # fault-free path — no RNG is even constructed.
+    fault: FaultConfig | None = None
+    # replicated hot set + failover/hedging (DESIGN.md §9.2–§9.3).
+    # Setting it forces the sharded scatter-gather replay even at
+    # ``n_devices=1`` (replicas are extra devices behind the plan).
+    replication: ReplicationConfig | None = None
     arch: str | None = None         # provenance (set by from_arch)
 
     def __post_init__(self) -> None:
@@ -196,6 +206,9 @@ class DeploymentConfig:
         if self.slo is not None and self.live_remap is not None:
             raise ValueError("slo scheduling and live_remap do not "
                              "compose; configure one mid-stream loop")
+        if self.replication is not None and self.live_remap is not None:
+            raise ValueError("replication rides the sharded replay, which "
+                             "does not compose with live_remap")
 
     # -- registry constructors ------------------------------------------------
     @classmethod
@@ -247,6 +260,9 @@ class DeploymentConfig:
             live_remap=dataclasses.asdict(self.live_remap)
             if self.live_remap else None,
             slo=self.slo.to_dict() if self.slo else None,
+            fault=self.fault.to_dict() if self.fault else None,
+            replication=self.replication.to_dict() if self.replication
+            else None,
             arch=self.arch)
 
     @classmethod
@@ -265,6 +281,15 @@ class DeploymentConfig:
             d["live_remap"] = LiveRemapConfig(**d["live_remap"])
         if d.get("slo") is not None:
             d["slo"] = SLOConfig.from_dict(d["slo"])
+        # legacy blobs predate fault/replication — absent keys mean None
+        if d.get("fault") is not None:
+            d["fault"] = FaultConfig.from_dict(d["fault"])
+        else:
+            d.pop("fault", None)
+        if d.get("replication") is not None:
+            d["replication"] = ReplicationConfig.from_dict(d["replication"])
+        else:
+            d.pop("replication", None)
         return cls(**d)
 
 
@@ -305,23 +330,31 @@ class Deployment:
         # simulator/window/hash-table state, sharing one ShardPlan derived
         # from the deployment stats (DESIGN.md §6).
         self.engines: dict[str, RecFlashEngine | ShardedEngine]
-        if cfg.n_devices == 1:
+        fault = cfg.fault if (cfg.fault is not None
+                              and cfg.fault.active) else None
+        # replication rides the shard plan, so it forces the sharded
+        # engine/replay even at n_devices=1 (DESIGN.md §9.2)
+        self.sharded = cfg.n_devices > 1 or cfg.replication is not None
+        if not self.sharded:
             self.engines = {
                 pol: RecFlashEngine(list(cfg.tables), self.part, policy=pol,
                                     sample_stats=self.stats,
                                     hot_frac=cfg.hot_frac,
-                                    cache_cfg=cfg.cache)
+                                    cache_cfg=cfg.cache,
+                                    fault=fault.for_device(0)
+                                    if fault is not None else None)
                 for pol in cfg.policies}
         else:
             plan = ShardPlan(list(cfg.tables), self.stats, cfg.n_devices,
-                             cfg.shard)
+                             cfg.shard, replication=cfg.replication)
             self.engines = {
                 pol: ShardedEngine(list(cfg.tables), self.part, policy=pol,
                                    sample_stats=self.stats,
                                    hot_frac=cfg.hot_frac,
                                    cache_cfg=cfg.cache,
                                    n_devices=cfg.n_devices, shard=cfg.shard,
-                                   plan=plan)
+                                   plan=plan, fault=fault,
+                                   replication=cfg.replication)
                 for pol in cfg.policies}
         self.last_traces: dict[str, LaneTrace] | None = None
 
@@ -430,7 +463,7 @@ class Deployment:
             raise ValueError("slo scheduling and live remap do not "
                              "compose; configure one mid-stream loop")
         trig = self.trigger if live is not None else None
-        run = (replay_sharded if self.cfg.n_devices > 1 else replay)
+        run = (replay_sharded if self.sharded else replay)
         traces = {pol: run(requests, eng, batcher,
                            record_window=record_window, policy_name=pol,
                            n_channels=nc, trigger=trig, live=live, slo=slo)

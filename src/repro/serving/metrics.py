@@ -58,22 +58,53 @@ class LatencyReport:
     n_devices: int = 1
     device_busy_fracs: tuple = ()
     # SLO lane accounting (DESIGN.md §7.4). ``n_shed`` are offered-but-
-    # never-served requests (offered == n_requests + n_shed); ``n_degraded``
-    # were served hot-subset-only. ``per_class`` maps priority class ->
-    # nested LatencyReport (empty for non-SLO lanes).
+    # never-served requests (offered == n_requests + n_shed + n_failed);
+    # ``n_degraded`` were served hot-subset-only. ``per_class`` maps
+    # priority class -> nested LatencyReport (empty for non-SLO lanes).
     n_shed: int = 0
     n_degraded: int = 0
     per_class: dict = dataclasses.field(default_factory=dict)
+    # fault-injection accounting (DESIGN.md §9.4). ``n_failed`` requests
+    # errored out on the device (uncorrectable after the retry ladder, or
+    # a dead device) — a *device* outcome, distinct from the *policy*
+    # outcome ``n_shed`` even though both carry NaN latency.
+    n_failed: int = 0
+    n_retries: int = 0
+    n_uncorrectable: int = 0
+    retry_hist: tuple = ()     # page reads by retry depth (0..max_retries)
+    n_hedged: int = 0
+    hedge_wins: int = 0
+    n_failover: int = 0
 
     @property
     def n_offered(self) -> int:
-        """Requests that entered the lane: served + shed."""
-        return self.n_requests + self.n_shed
+        """Requests that entered the lane: served + shed + failed."""
+        return self.n_requests + self.n_shed + self.n_failed
 
     @property
     def shed_frac(self) -> float:
-        """Shed share of offered traffic (0.0 for an empty lane)."""
+        """Shed share of offered traffic (0.0 for an empty lane).
+
+        Counts only policy sheds — device failures are ``failed_frac``
+        (conflating the two hid fault losses inside the shed rate).
+        """
         return self.n_shed / self.n_offered if self.n_offered else 0.0
+
+    @property
+    def failed_frac(self) -> float:
+        """Device-failure share of offered traffic."""
+        return self.n_failed / self.n_offered if self.n_offered else 0.0
+
+    @property
+    def availability(self) -> float:
+        """Served share of offered traffic (1.0 for an empty lane)."""
+        return (self.n_requests / self.n_offered if self.n_offered
+                else 1.0)
+
+    @property
+    def hedge_win_rate(self) -> float:
+        """Share of hedged sub-requests the replica answered first."""
+        return self.hedge_wins / self.n_hedged if self.n_hedged else 0.0
 
     def row(self) -> str:
         return (f"{self.policy:14s} p50 {self.p50_us / 1e3:9.2f}  "
@@ -140,10 +171,15 @@ def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,
               batch_sizes: list[int], busy_us: float,
               energy_uj: float = 0.0, *, n_devices: int = 1,
               device_busy_fracs: tuple = (), n_shed: int = 0,
-              n_degraded: int = 0, per_class: dict | None = None
-              ) -> LatencyReport:
-    """Build a LatencyReport; NaN latencies (shed requests) are excluded
-    from every served-side statistic and counted via ``n_shed``."""
+              n_degraded: int = 0, per_class: dict | None = None,
+              n_failed: int = 0, n_retries: int = 0,
+              n_uncorrectable: int = 0,
+              retry_hist: np.ndarray | None = None,
+              n_hedged: int = 0, hedge_wins: int = 0,
+              n_failover: int = 0) -> LatencyReport:
+    """Build a LatencyReport; NaN latencies (shed or failed requests) are
+    excluded from every served-side statistic and counted via ``n_shed``/
+    ``n_failed``."""
     lat = np.asarray(latencies_us, dtype=np.float64)
     lat = lat[np.isfinite(lat)]
     p50, p95, p99 = percentiles(lat)
@@ -165,25 +201,45 @@ def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,
         n_shed=int(n_shed),
         n_degraded=int(n_degraded),
         per_class=dict(per_class or {}),
+        n_failed=int(n_failed),
+        n_retries=int(n_retries),
+        n_uncorrectable=int(n_uncorrectable),
+        retry_hist=(tuple(int(x) for x in retry_hist)
+                    if retry_hist is not None else ()),
+        n_hedged=int(n_hedged),
+        hedge_wins=int(hedge_wins),
+        n_failover=int(n_failover),
     )
 
 
 def summarize_classes(policy: str, classes: np.ndarray,
                       latencies_us: np.ndarray, makespan_us: float,
                       shed_mask: np.ndarray, degraded_mask: np.ndarray,
-                      class_names: Sequence[str]) -> dict:
+                      class_names: Sequence[str],
+                      failed_mask: np.ndarray | None = None) -> dict:
     """One nested LatencyReport per priority class (DESIGN.md §7.4).
 
     ``classes`` holds each request's class index into ``class_names``.
     Every class in ``class_names`` gets an entry — absent or all-shed
     classes report NaN quantiles with exact counts, never raising — so
     benchmark tables stay rectangular across load points.
+
+    ``failed_mask`` (DESIGN.md §9.4) marks device failures so they are
+    counted as ``n_failed`` instead of polluting the class's shed count
+    (both carry NaN latency; per-class availability needs them apart).
     """
     out = {}
     for ci, name in enumerate(class_names):
         sel = classes == ci
+        if failed_mask is not None:
+            n_fail = int(failed_mask[sel].sum())
+            n_shed = int((shed_mask[sel] & ~failed_mask[sel]).sum())
+        else:
+            n_fail = 0
+            n_shed = int(shed_mask[sel].sum())
         out[name] = summarize(
             f"{policy}/{name}", latencies_us[sel], makespan_us, [], 0.0,
-            n_shed=int(shed_mask[sel].sum()),
-            n_degraded=int(degraded_mask[sel].sum()))
+            n_shed=n_shed,
+            n_degraded=int(degraded_mask[sel].sum()),
+            n_failed=n_fail)
     return out

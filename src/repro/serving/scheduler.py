@@ -50,6 +50,7 @@ The preferred entry point is ``repro.serving.Deployment``; the module-level
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import warnings
 from collections import deque
 from collections.abc import Sequence
@@ -195,6 +196,23 @@ class LaneTrace:
     degraded_mask: np.ndarray | None = None
     n_preempted: int = 0
     slo_events: list = dataclasses.field(default_factory=list)
+    # fault-injection extras (DESIGN.md §9; None/zero without a FaultConfig):
+    # per-request failed flag (uncorrectable read or device failure, input
+    # order) and the simulated time the host *detected* each failure (the
+    # error return / the device-death instant — failover re-dispatches
+    # from here). Distinct from shed: shed is a policy decision, failed is
+    # the device erroring out (both are NaN latencies).
+    failed_mask: np.ndarray | None = None
+    failed_detect_us: np.ndarray | None = None
+    n_retries: int = 0
+    n_uncorrectable: int = 0
+    n_badblock_reads: int = 0
+    retry_hist: np.ndarray | None = None
+    # replica tier (DESIGN.md §9.2/§9.3): hedge + failover accounting
+    n_hedged: int = 0
+    hedge_wins: int = 0
+    n_failover: int = 0
+    replica_traces: "list[LaneTrace] | None" = None
 
     def latency_of(self, rid: int, requests: list[Request] | None = None
                    ) -> float:
@@ -268,6 +286,16 @@ def replay(requests: list[Request], engine: RecFlashEngine,
     free = np.zeros(n_channels, dtype=np.float64)
     busy = 0.0
     energy = 0.0
+    # fault state (DESIGN.md §9.3) — inert (and the loop bit-identical)
+    # without an active FaultConfig on the engine
+    fault = getattr(engine, "fault", None)
+    fault = fault if (fault is not None and fault.active) else None
+    stalls = fault.stall_windows() if fault is not None else ()
+    t_fail = fault.device_fail_at_us if fault is not None else float("inf")
+    failed_mask = np.zeros(n, dtype=bool) if fault is not None else None
+    failed_detect = (np.full(n, np.nan) if fault is not None else None)
+    n_retries = n_uce = n_bad = 0
+    retry_hist: np.ndarray | None = None
     # precompute the whole stream's index arrays once (DESIGN.md §3.3):
     # arrival-sorted order (the RequestQueue contract: (arrival, rid)),
     # one concatenation of every request's accesses, and per-request
@@ -338,6 +366,12 @@ def replay(requests: list[Request], engine: RecFlashEngine,
         lo, hi = offsets[pos], offsets[end]
         tables, rows = tab_all[lo:hi], row_all[lo:hi]
         start = max(dispatch, float(free[c]))
+        # channel-stall events push the batch start past the window; the
+        # windows are (t0,t1)-sorted, so one forward pass resolves chains
+        # of overlapping stalls (DESIGN.md §9.3).
+        for ch, t0, t1 in stalls:
+            if (ch is None or ch == c) and t0 <= start < t1:
+                start = t1
         if record_window:
             engine.record_window(tables, rows)
         res = sims[c].run(tables, rows)
@@ -349,6 +383,26 @@ def replay(requests: list[Request], engine: RecFlashEngine,
         span = order[pos:end]
         latencies[span] = done - arrivals[pos:end]
         completions[span] = done
+        if fault is not None:
+            n_retries += res.n_retries
+            n_uce += res.n_uncorrectable
+            n_bad += res.n_badblock_reads
+            if res.retry_hist is not None:
+                retry_hist = (res.retry_hist.copy() if retry_hist is None
+                              else retry_hist + res.retry_hist)
+            if res.failed is not None and res.failed.any():
+                # per-request OR over the batch's access slices: a request
+                # fails iff any of its accesses rode an uncorrectable read
+                boffs = (offsets[pos:end + 1] - lo).astype(np.int64)
+                cnts = np.diff(boffs)
+                fsum = np.add.reduceat(res.failed.astype(np.int64),
+                                       np.minimum(boffs[:-1], res.failed.size - 1))
+                req_failed = (fsum > 0) & (cnts > 0)
+                if req_failed.any():
+                    span_f = span[req_failed]
+                    failed_mask[span_f] = True
+                    # the host learns of the error when the batch returns
+                    failed_detect[span_f] = done
         batches.append(Batch(requests=reqs[pos:end], tables=tables,
                              rows=rows, dispatch_us=dispatch))
         batch_channels.append(c)
@@ -360,18 +414,42 @@ def replay(requests: list[Request], engine: RecFlashEngine,
         while pending[c]:
             _run_chunk(c)
     first_arrival = min(r.arrival_us for r in requests) if requests else 0.0
-    makespan = (float(completions.max()) - first_arrival) if n else 0.0
+    if fault is not None:
+        if n and np.isfinite(t_fail):
+            # whole-device failure (DESIGN.md §9.3): every request whose
+            # completion projects past the death instant never returns.
+            # The host detects it at max(arrival, T_fail) — failover
+            # re-dispatches from there. (The device's channel-busy time
+            # past T_fail is still counted; documented over-count.)
+            dead = completions > t_fail
+            failed_mask |= dead
+            failed_detect[dead] = np.maximum(arr_in[dead], t_fail)
+        # failed requests return an error, not data: NaN latency (same
+        # sentinel as shed, told apart by failed_mask)
+        latencies[failed_mask] = np.nan
+        completions[failed_mask] = np.nan
+        fin = completions[np.isfinite(completions)]
+        makespan = (float(fin.max()) - first_arrival) if fin.size else 0.0
+    else:
+        makespan = (float(completions.max()) - first_arrival) if n else 0.0
     # device_busy_frac = mean per-channel utilisation (== total busy /
     # makespan for a single-channel lane, unchanged from the old report).
     report = summarize(name, latencies, makespan,
-                       [b.size for b in batches], busy / n_channels, energy)
+                       [b.size for b in batches], busy / n_channels, energy,
+                       n_failed=(int(failed_mask.sum())
+                                 if failed_mask is not None else 0),
+                       n_retries=n_retries, n_uncorrectable=n_uce,
+                       retry_hist=retry_hist)
     return LaneTrace(report=report, batches=batches, latencies_us=latencies,
                      completions_us=completions, index_of=index_of,
                      n_channels=n_channels,
                      batch_channels=np.asarray(batch_channels, dtype=np.int64),
                      batch_starts_us=np.asarray(batch_starts,
                                                 dtype=np.float64),
-                     remap_events=remap_events, busy_us=busy)
+                     remap_events=remap_events, busy_us=busy,
+                     failed_mask=failed_mask, failed_detect_us=failed_detect,
+                     n_retries=n_retries, n_uncorrectable=n_uce,
+                     n_badblock_reads=n_bad, retry_hist=retry_hist)
 
 
 def replay_sharded(requests: list[Request], engine: ShardedEngine,
@@ -430,8 +508,14 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
     row_all = (np.concatenate([r.rows for r in requests]) if n
                else np.empty(0, dtype=np.int64))
     dev, ltab, lrow = engine.plan.route(tab_all, row_all)
+    repl = getattr(engine, "replication", None)
+    n_repl = repl.n_replicas if repl is not None else 0
     sub: list[list[Request]] = [[] for _ in range(nd)]
     members: list[list[int]] = [[] for _ in range(nd)]  # input positions
+    # global (table, row) slice per sub-request — the replica tier routes
+    # failures/hedges through plan.replica_route on global ids (§9.2)
+    sub_tabs: list[list[np.ndarray]] = [[] for _ in range(nd)]
+    sub_rows: list[list[np.ndarray]] = [[] for _ in range(nd)]
     for i, r in enumerate(requests):
         lo, hi = int(offsets[i]), int(offsets[i + 1])
         dslice = dev[lo:hi]
@@ -439,6 +523,9 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
             sel = dslice == d
             sub[d].append(r.subset(ltab[lo:hi][sel], lrow[lo:hi][sel]))
             members[d].append(i)
+            if n_repl:
+                sub_tabs[d].append(tab_all[lo:hi][sel])
+                sub_rows[d].append(row_all[lo:hi][sel])
     # per-device single-device replay (independent simulated clocks)
     arrivals = np.fromiter((r.arrival_us for r in requests),
                            dtype=np.float64, count=n)
@@ -450,12 +537,117 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
                     n_channels=n_channels, trigger=trigger, live=live,
                     slo=slo)
         device_traces.append(tr)
+    # replica tier (DESIGN.md §9.2/§9.3): failed sub-requests re-dispatch
+    # their replicated rows to the least-loaded hot-set replica; with
+    # hedging on, slow-but-healthy fully-covered sub-requests get a
+    # duplicate and take the min completion. ``eff[d][i]`` is device d's
+    # effective completion for its i-th sub-request after both.
+    failed_final = (np.zeros(n, dtype=bool)
+                    if (n_repl or any(tr.failed_mask is not None
+                                      for tr in device_traces)) else None)
+    degraded_fail = np.zeros(n, dtype=bool) if n_repl else None
+    replica_traces: list[LaneTrace] | None = None
+    n_hedged = hedge_wins = n_failover = 0
+    if n_repl:
+        eff = [tr.completions_us.copy() for tr in device_traces]
+        repl_reqs: list[list[Request]] = [[] for _ in range(n_repl)]
+        repl_targets: list[list[tuple[int, int, str]]] = [
+            [] for _ in range(n_repl)]
+        repl_load = [0] * n_repl    # accumulated lookups (greedy)
+
+        def _least_loaded() -> int:
+            return min(range(n_repl), key=lambda j: repl_load[j])
+
+        for d, tr in enumerate(device_traces):
+            if not members[d]:
+                continue
+            arr_d = np.fromiter((r.arrival_us for r in sub[d]),
+                                dtype=np.float64, count=len(sub[d]))
+            if tr.failed_mask is not None and tr.failed_mask.any():
+                for i in np.flatnonzero(tr.failed_mask).tolist():
+                    gt, gr = sub_tabs[d][i], sub_rows[d][i]
+                    cov, lr = engine.plan.replica_route(gt, gr)
+                    if not cov.any():
+                        # nothing replicated: the failure stands
+                        failed_final[members[d][i]] = True
+                        continue
+                    j = _least_loaded()
+                    repl_load[j] += int(cov.sum())
+                    repl_reqs[j].append(Request(
+                        rid=len(repl_reqs[j]),
+                        arrival_us=float(tr.failed_detect_us[i]),
+                        tables=gt[cov], rows=lr[cov], slo=sub[d][i].slo))
+                    repl_targets[j].append((d, i, "failover"))
+                    n_failover += 1
+                    if not cov.all():
+                        # cold rows dropped — the degrade rung (§9.2)
+                        degraded_fail[members[d][i]] = True
+            if repl.hedge:
+                # asymmetric-EWMA tail estimator (~p95 chase), warmed
+                # causally: only completions <= this arrival feed it.
+                comp_d = tr.completions_us
+                lat_d = comp_d - arr_d
+                up = min(1.0, repl.hedge_alpha * repl.hedge_boost)
+                dn = repl.hedge_alpha
+                heap: list[tuple[float, float]] = []
+                est = None
+                for i in np.argsort(arr_d, kind="stable").tolist():
+                    ai = float(arr_d[i])
+                    while heap and heap[0][0] <= ai:
+                        _, x = heapq.heappop(heap)
+                        est = (x if est is None else
+                               est + (up if x > est else dn) * (x - est))
+                    li = float(lat_d[i])
+                    if (est is not None and np.isfinite(li) and li > est):
+                        gt, gr = sub_tabs[d][i], sub_rows[d][i]
+                        cov, lr = engine.plan.replica_route(gt, gr)
+                        if cov.all():   # hedge only fully-hot sub-requests
+                            j = _least_loaded()
+                            repl_load[j] += int(lr.size)
+                            repl_reqs[j].append(Request(
+                                rid=len(repl_reqs[j]), arrival_us=ai,
+                                tables=gt, rows=lr, slo=sub[d][i].slo))
+                            repl_targets[j].append((d, i, "hedge"))
+                            n_hedged += 1
+                    if np.isfinite(comp_d[i]):
+                        heapq.heappush(heap, (float(comp_d[i]), li))
+        replica_traces = []
+        for j in range(n_repl):
+            rtr = replay(repl_reqs[j], engine.replicas[j], batcher_cfg,
+                         policy_name=f"{name}/replica{j}",
+                         n_channels=n_channels)
+            replica_traces.append(rtr)
+            for k, (d, i, kind) in enumerate(repl_targets[j]):
+                rc = float(rtr.completions_us[k])
+                r_ok = np.isfinite(rc) and not (
+                    rtr.failed_mask is not None and rtr.failed_mask[k])
+                if kind == "failover":
+                    if r_ok:
+                        eff[d][i] = rc
+                    else:
+                        failed_final[members[d][i]] = True
+                elif r_ok and rc < eff[d][i]:
+                    eff[d][i] = rc
+                    hedge_wins += 1
+    else:
+        eff = [tr.completions_us for tr in device_traces]
+        if failed_final is not None:
+            for d, tr in enumerate(device_traces):
+                if tr.failed_mask is not None and members[d]:
+                    pos = np.asarray(members[d], dtype=np.int64)
+                    failed_final[pos] |= tr.failed_mask
+    for d, tr in enumerate(device_traces):
         if members[d]:
             pos = np.asarray(members[d], dtype=np.int64)
             # gather barrier: completion = max over owning devices. A NaN
-            # sub-completion (shed on that device) survives np.maximum,
-            # so a partially-shed request is shed overall (DESIGN.md §7.5).
-            np.maximum.at(completions, pos, tr.completions_us)
+            # sub-completion (shed or failed on that device) survives
+            # np.maximum, so a partially-shed request is shed overall
+            # (DESIGN.md §7.5) and an unrecovered failure fails it (§9.2).
+            with np.errstate(invalid="ignore"):
+                np.maximum.at(completions, pos, eff[d])
+    if failed_final is not None and failed_final.any():
+        # a failure no replica recovered fails the whole request
+        completions[failed_final] = np.nan
     latencies = completions - arrivals
     # SLO gather extras: class from the parent requests; shed overall iff
     # any owning device shed (the NaN already encodes it); degraded
@@ -469,22 +661,43 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
             (SLO_CLASSES.index(r.slo) for r in requests),
             dtype=np.int64, count=n)
         shed_mask = ~np.isfinite(completions) if n else np.zeros(0, bool)
+        if failed_final is not None:
+            # shed is a policy decision; device failures are n_failed
+            shed_mask &= ~failed_final
         degraded_mask = np.zeros(n, dtype=bool)
         for d, tr in enumerate(device_traces):
-            if members[d]:
+            if members[d] and tr.degraded_mask is not None:
                 pos = np.asarray(members[d], dtype=np.int64)
                 degraded_mask[pos] |= tr.degraded_mask
             n_preempted += tr.n_preempted
         slo_events = sorted((ev for tr in device_traces
                              for ev in tr.slo_events),
                             key=lambda ev: ev.t_us)
-    # lane-level aggregation
-    busy = sum(tr.busy_us for tr in device_traces)
-    energy = sum(tr.report.energy_uj for tr in device_traces)
+    if degraded_fail is not None and degraded_fail.any():
+        # failover served these hot-only (cold rows dropped, §9.2) — the
+        # same degrade rung the SLO ladder uses
+        if degraded_mask is None:
+            degraded_mask = degraded_fail
+        else:
+            degraded_mask = degraded_mask | degraded_fail
+    # lane-level aggregation (replica lanes fold into busy/energy/batches
+    # with channel ids after the primaries: replica j's channels are
+    # [(nd + j) * n_channels, (nd + j + 1) * n_channels))
+    all_traces = device_traces + (replica_traces or [])
+    busy = sum(tr.busy_us for tr in all_traces)
+    energy = sum(tr.report.energy_uj for tr in all_traces)
+    n_retries = sum(tr.n_retries for tr in all_traces)
+    n_uce = sum(tr.n_uncorrectable for tr in all_traces)
+    n_bad = sum(tr.n_badblock_reads for tr in all_traces)
+    retry_hist = None
+    for tr in all_traces:
+        if tr.retry_hist is not None:
+            retry_hist = (tr.retry_hist.copy() if retry_hist is None
+                          else retry_hist + tr.retry_hist)
     batches: list[Batch] = []
     batch_channels: list[int] = []
     batch_starts: list[float] = []
-    for d, tr in enumerate(device_traces):
+    for d, tr in enumerate(all_traces):
         batches.extend(tr.batches)
         batch_channels.extend((d * n_channels + c)
                               for c in tr.batch_channels.tolist())
@@ -502,16 +715,22 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
         from repro.serving.slo_scheduler import SLO_CLASSES
         per_class = summarize_classes(name, slo_classes, latencies,
                                       makespan, shed_mask, degraded_mask,
-                                      SLO_CLASSES)
+                                      SLO_CLASSES,
+                                      failed_mask=failed_final)
     report = summarize(
         name, latencies, makespan, [b.size for b in batches],
-        busy / (nd * n_channels), energy, n_devices=nd,
+        busy / (len(all_traces) * n_channels), energy, n_devices=nd,
         device_busy_fracs=tuple(tr.busy_us / n_channels / span
                                 for tr in device_traces),
         n_shed=int(shed_mask.sum()) if shed_mask is not None else 0,
         n_degraded=(int(degraded_mask.sum())
                     if degraded_mask is not None else 0),
-        per_class=per_class)
+        per_class=per_class,
+        n_failed=(int(failed_final.sum())
+                  if failed_final is not None else 0),
+        n_retries=n_retries, n_uncorrectable=n_uce,
+        retry_hist=retry_hist, n_hedged=n_hedged,
+        hedge_wins=hedge_wins, n_failover=n_failover)
     return LaneTrace(report=report, batches=batches, latencies_us=latencies,
                      completions_us=completions, index_of=index_of,
                      n_channels=n_channels,
@@ -523,7 +742,12 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
                      n_devices=nd, device_traces=device_traces,
                      slo_classes=slo_classes, shed_mask=shed_mask,
                      degraded_mask=degraded_mask, n_preempted=n_preempted,
-                     slo_events=slo_events)
+                     slo_events=slo_events,
+                     failed_mask=failed_final,
+                     n_retries=n_retries, n_uncorrectable=n_uce,
+                     n_badblock_reads=n_bad, retry_hist=retry_hist,
+                     n_hedged=n_hedged, hedge_wins=hedge_wins,
+                     n_failover=n_failover, replica_traces=replica_traces)
 
 
 class ServingScheduler:

@@ -239,6 +239,15 @@ def slo_replay(requests: list[Request], engine: RecFlashEngine,
     busy = 0.0
     energy = 0.0
     est = [0.0] * _NC                   # EWMA per-request service time
+    # fault state (DESIGN.md §9.3) — inert without an active FaultConfig
+    fault = getattr(engine, "fault", None)
+    fault = fault if (fault is not None and fault.active) else None
+    stalls = fault.stall_windows() if fault is not None else ()
+    t_fail = fault.device_fail_at_us if fault is not None else float("inf")
+    failed_mask = np.zeros(n, dtype=bool) if fault is not None else None
+    failed_detect = np.full(n, np.nan) if fault is not None else None
+    n_retries = n_uce = n_bad = 0
+    retry_hist: np.ndarray | None = None
 
     def _remaining() -> list[int]:
         return [c for c in range(_NC) if hp[c] < q[c].size]
@@ -311,8 +320,14 @@ def slo_replay(requests: list[Request], engine: RecFlashEngine,
         lo, hi = offs_c[cls][hp[cls]], offs_c[cls][end]
         tables, rows = tab_c[cls][lo:hi], row_c[cls][lo:hi]
         start = max(dispatch, float(free[ch]))
+        # channel-stall events push the batch start past the window
+        # ((t0,t1)-sorted: one forward pass resolves chains, §9.3)
+        for sch, t0, t1 in stalls:
+            if (sch is None or sch == ch) and t0 <= start < t1:
+                start = t1
         span = q[cls][hp[cls]:end]      # sorted-stream indices
         size = end - hp[cls]
+        keep = None                     # degrade filter (fault attribution)
         if record_window:
             # the window records demand (what was asked), so a later
             # remap sees true popularity even when service was degraded
@@ -336,6 +351,7 @@ def slo_replay(requests: list[Request], engine: RecFlashEngine,
             svc = res.latency_us
             energy += res.energy_uj
         else:
+            res = None
             svc = 0.0                   # fully degraded: P$ answers all
         free[ch] = start + svc
         busy += svc
@@ -343,6 +359,34 @@ def slo_replay(requests: list[Request], engine: RecFlashEngine,
         oi = order[span]
         latencies[oi] = done - arrivals[span]
         completions[oi] = done
+        if fault is not None and res is not None:
+            n_retries += res.n_retries
+            n_uce += res.n_uncorrectable
+            n_bad += res.n_badblock_reads
+            if res.retry_hist is not None:
+                retry_hist = (res.retry_hist.copy() if retry_hist is None
+                              else retry_hist + res.retry_hist)
+            if res.failed is not None and res.failed.any():
+                # per-request OR over the batch's access slices; a
+                # degraded batch dropped cold accesses, so rebuild the
+                # per-request offsets from the keep mask first (§9.3)
+                boffs = (offs_c[cls][hp[cls]:end + 1] - lo).astype(np.int64)
+                if keep is not None:
+                    kc = np.add.reduceat(
+                        keep.astype(np.int64),
+                        np.minimum(boffs[:-1], keep.size - 1))
+                    kc[np.diff(boffs) == 0] = 0
+                    boffs = np.zeros(size + 1, dtype=np.int64)
+                    np.cumsum(kc, out=boffs[1:])
+                cnts = np.diff(boffs)
+                fsum = np.add.reduceat(
+                    res.failed.astype(np.int64),
+                    np.minimum(boffs[:-1], res.failed.size - 1))
+                req_failed = (fsum > 0) & (cnts > 0)
+                if req_failed.any():
+                    oi_f = order[span[req_failed]]
+                    failed_mask[oi_f] = True
+                    failed_detect[oi_f] = done
         batches.append(Batch(requests=[reqs[i] for i in span.tolist()],
                              tables=tables, rows=rows,
                              dispatch_us=dispatch))
@@ -355,16 +399,31 @@ def slo_replay(requests: list[Request], engine: RecFlashEngine,
 
     cls_in = np.zeros(n, dtype=np.int64)
     cls_in[order] = cls_sorted
+    if fault is not None:
+        if n and np.isfinite(t_fail):
+            # whole-device failure: anything completing past the death
+            # instant never returns (DESIGN.md §9.3); detection at
+            # max(arrival, T_fail). Shed requests are already NaN.
+            dead = completions > t_fail
+            failed_mask |= dead
+            failed_detect[dead] = np.maximum(arr_in[dead], t_fail)
+        latencies[failed_mask] = np.nan
+        completions[failed_mask] = np.nan
     fin = completions[np.isfinite(completions)]
     first_arrival = float(arr_in.min()) if n else 0.0
     makespan = (float(fin.max()) - first_arrival) if fin.size else 0.0
     per_class = summarize_classes(name, cls_in, latencies, makespan,
-                                  shed_mask, degraded_mask, SLO_CLASSES)
+                                  shed_mask, degraded_mask, SLO_CLASSES,
+                                  failed_mask=failed_mask)
     report = summarize(name, latencies, makespan,
                        [b.size for b in batches], busy / n_channels,
                        energy, n_shed=int(shed_mask.sum()),
                        n_degraded=int(degraded_mask.sum()),
-                       per_class=per_class)
+                       per_class=per_class,
+                       n_failed=(int(failed_mask.sum())
+                                 if failed_mask is not None else 0),
+                       n_retries=n_retries, n_uncorrectable=n_uce,
+                       retry_hist=retry_hist)
     return LaneTrace(report=report, batches=batches,
                      latencies_us=latencies, completions_us=completions,
                      index_of=index_of, n_channels=n_channels,
@@ -374,4 +433,8 @@ def slo_replay(requests: list[Request], engine: RecFlashEngine,
                                                 dtype=np.float64),
                      busy_us=busy, slo_classes=cls_in,
                      shed_mask=shed_mask, degraded_mask=degraded_mask,
-                     n_preempted=n_preempted, slo_events=events)
+                     n_preempted=n_preempted, slo_events=events,
+                     failed_mask=failed_mask,
+                     failed_detect_us=failed_detect,
+                     n_retries=n_retries, n_uncorrectable=n_uce,
+                     n_badblock_reads=n_bad, retry_hist=retry_hist)

@@ -1,0 +1,239 @@
+"""Fault-injection layer end to end (DESIGN.md §9): FaultConfig
+semantics, injected events through the replay, replica-group routing,
+failover, hedged reads, and DeploymentConfig round-trip."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (RecFlashEngine, ReplicationConfig,
+                               ShardedEngine, ShardPlan, TableSpec)
+from repro.core.freq import AccessStats
+from repro.data.tracegen import generate_sls_batch
+from repro.flashsim.device import PARTS, SLC, TLC, FaultConfig, FaultEvent
+from repro.serving import (BatcherConfig, Deployment, DeploymentConfig,
+                           make_requests, poisson_arrivals, replay,
+                           replay_sharded)
+
+N_TABLES, N_ROWS, LOOKUPS = 4, 20_000, 8
+
+
+@pytest.fixture(scope="module")
+def stats():
+    tb, rows = generate_sls_batch(N_TABLES, N_ROWS, LOOKUPS, 256, k=0.0,
+                                  seed=51)
+    return [AccessStats.from_trace(rows[tb == t], N_ROWS)
+            for t in range(N_TABLES)]
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return [TableSpec(N_ROWS, 128)] * N_TABLES
+
+
+@pytest.fixture(scope="module")
+def stream():
+    ts = poisson_arrivals(200, 2000.0, seed=2)
+    return make_requests(200, N_TABLES, N_ROWS, LOOKUPS, ts, k=0.0, seed=0)
+
+
+BC = BatcherConfig(max_batch=16, max_wait_us=200.0)
+
+
+class TestFaultConfig:
+    def test_active_semantics(self):
+        assert not FaultConfig().active                  # nothing armed
+        assert not FaultConfig(enabled=False, read_fail_base=0.5).active
+        assert FaultConfig(read_fail_base=1e-4).active
+        assert FaultConfig(bad_block_frac=0.1).active
+        assert FaultConfig(events=(
+            FaultEvent(t_us=1.0, kind="device_fail", device=0),)).active
+
+    def test_read_fail_prob_part_and_retention(self):
+        fc = FaultConfig(read_fail_base=1e-3, retention_age_days=100.0,
+                         retention_rate=0.05)
+        assert fc.read_fail_prob(TLC) == pytest.approx(1e-3 * 4 * 6.0)
+        assert fc.read_fail_prob(SLC) < fc.read_fail_prob(TLC)
+
+    def test_for_device_filters_events(self):
+        fc = FaultConfig(read_fail_base=1e-4, events=(
+            FaultEvent(t_us=1.0, kind="device_fail", device=0),
+            FaultEvent(t_us=2.0, kind="device_fail", device=1)))
+        d0 = fc.for_device(0)
+        assert [e.device for e in d0.events] == [0]
+        assert d0.stream == 0
+        d1 = fc.for_device(1)
+        assert d1.device_fail_at_us == 2.0
+        # replicas strip events and live on their own seed stream
+        r0 = fc.for_replica(0)
+        assert r0.events == () and r0.stream == 10_000
+
+    def test_bad_page_mask_nonzero_frac_marks_blocks(self):
+        fc = FaultConfig(seed=3, bad_block_frac=0.01)
+        mask = fc.bad_page_mask(1024, pages_per_block=256)
+        # ceil(0.01 * 4 blocks) = 1 block = 256 pages
+        assert int(mask.sum()) == 256
+
+    def test_json_round_trip(self):
+        fc = FaultConfig(seed=5, read_fail_base=1e-3, bad_block_frac=0.02,
+                         retention_age_days=30.0, events=(
+                             FaultEvent(t_us=9.0, kind="channel_stall",
+                                        device=0, channel=1,
+                                        duration_us=100.0),))
+        assert FaultConfig.from_dict(fc.to_dict()) == fc
+
+
+class TestReplicaPlan:
+    def test_replica_route_covers_hot_rows(self, tables, stats):
+        repl = ReplicationConfig(k=2, hot_frac=0.1)
+        plan = ShardPlan(tables, stats, 2, "row", replication=repl)
+        t0 = np.zeros(4, dtype=np.int64)
+        hot = plan.hot_rows[0][:4]            # hottest rows of table 0
+        cov, lrow = plan.replica_route(t0, hot)
+        assert cov.all()
+        assert (lrow >= 0).all()
+        # a replica table holds only the hot slice
+        assert plan.replica_tables[0].n_rows < N_ROWS
+
+    def test_replication_validation(self):
+        with pytest.raises(ValueError):
+            ReplicationConfig(k=0)
+        assert ReplicationConfig(k=1).n_replicas == 0   # k=1 = no replicas
+        with pytest.raises(ValueError):
+            ReplicationConfig(k=2, hot_frac=0.0)
+        with pytest.raises(ValueError):
+            ReplicationConfig(k=2, part="NOPE")
+
+    def test_round_trip(self):
+        r = ReplicationConfig(k=3, hot_frac=0.2, part="SLC", hedge=True)
+        assert ReplicationConfig.from_dict(r.to_dict()) == r
+
+
+class TestReplayFaults:
+    def test_uncorrectable_reads_fail_requests(self, tables, stats, stream):
+        fc = FaultConfig(seed=7, read_fail_base=5e-3, retry_decay=1.0,
+                         max_retries=3)
+        eng = RecFlashEngine(tables, TLC, policy="recflash_af",
+                             sample_stats=stats, fault=fc)
+        tr = replay(stream, eng, BC, n_channels=2)
+        assert tr.failed_mask is not None and tr.failed_mask.any()
+        assert np.isnan(tr.latencies_us[tr.failed_mask]).all()
+        assert np.isfinite(tr.failed_detect_us[tr.failed_mask]).all()
+        assert tr.report.n_failed == int(tr.failed_mask.sum())
+        assert tr.report.availability < 1.0
+
+    def test_device_fail_event_kills_tail(self, tables, stats, stream):
+        t_fail = 40_000.0
+        fc = FaultConfig(seed=7, events=(
+            FaultEvent(t_us=t_fail, kind="device_fail", device=0),))
+        eng = RecFlashEngine(tables, TLC, policy="recflash_af",
+                             sample_stats=stats, fault=fc)
+        tr = replay(stream, eng, BC, n_channels=2)
+        arr = np.array([r.arrival_us for r in stream])
+        # every request completing after the death is failed, and its
+        # detection time is no earlier than the death itself
+        assert tr.failed_mask[arr > t_fail].all()
+        assert (tr.failed_detect_us[tr.failed_mask] >= t_fail).all()
+
+    def test_failover_recovers_with_replica(self, tables, stats, stream):
+        fc = FaultConfig(seed=7, events=(
+            FaultEvent(t_us=30_000.0, kind="device_fail", device=1),))
+        repl = ReplicationConfig(k=2, hot_frac=0.3)
+        se = ShardedEngine(tables, TLC, policy="recflash_af",
+                           sample_stats=stats, n_devices=2, shard="row",
+                           fault=fc, replication=repl)
+        tr = replay_sharded(stream, se, BC, n_channels=2)
+        se_nr = ShardedEngine(tables, TLC, policy="recflash_af",
+                              sample_stats=stats, n_devices=2, shard="row",
+                              fault=fc)
+        tr_nr = replay_sharded(stream, se_nr, BC, n_channels=2)
+        assert tr.report.n_failover > 0
+        assert tr.report.n_failed < tr_nr.report.n_failed
+        assert tr.report.availability > tr_nr.report.availability
+        # replica lane is reported for audit
+        assert tr.replica_traces is not None and len(tr.replica_traces) == 1
+
+    def test_hedged_reads_fire_and_win(self, tables, stats, stream):
+        repl = ReplicationConfig(k=2, hot_frac=0.3, hedge=True)
+        se = ShardedEngine(tables, TLC, policy="recflash_af",
+                           sample_stats=stats, n_devices=2, shard="row",
+                           replication=repl)
+        tr = replay_sharded(stream, se, BC, n_channels=2)
+        assert tr.report.n_hedged > 0
+        assert tr.report.hedge_wins <= tr.report.n_hedged
+        # hedging only ever improves completions vs the unhedged lane
+        se0 = ShardedEngine(tables, TLC, policy="recflash_af",
+                            sample_stats=stats, n_devices=2, shard="row",
+                            replication=ReplicationConfig(k=2,
+                                                          hot_frac=0.3))
+        tr0 = replay_sharded(stream, se0, BC, n_channels=2)
+        assert (tr.completions_us <= tr0.completions_us + 1e-9).all()
+
+    def test_channel_stall_inflates_tail_only(self, tables, stats, stream):
+        fc = FaultConfig(seed=7, events=(
+            FaultEvent(t_us=5_000.0, kind="channel_stall", device=0,
+                       channel=None, duration_us=20_000.0),))
+        eng = RecFlashEngine(tables, TLC, policy="recflash_af",
+                             sample_stats=stats, fault=fc)
+        eng0 = RecFlashEngine(tables, TLC, policy="recflash_af",
+                              sample_stats=stats)
+        tr = replay(stream, eng, BC, n_channels=2)
+        tr0 = replay(stream, eng0, BC, n_channels=2)
+        assert tr.report.n_failed == 0
+        assert tr.report.p99_us > tr0.report.p99_us
+        # a batch can only *start* after the stall lifts, so anything
+        # arriving inside the window completes after it
+        arr = np.array([r.arrival_us for r in stream])
+        inside = (arr > 5_000.0) & (arr < 25_000.0)
+        assert inside.any()
+        assert (tr.completions_us[inside] >= 25_000.0).all()
+
+    def test_disabled_fault_sharded_bit_identity(self, tables, stats,
+                                                 stream):
+        se_a = ShardedEngine(tables, TLC, policy="recflash_af",
+                             sample_stats=stats, n_devices=2, shard="row")
+        se_b = ShardedEngine(tables, TLC, policy="recflash_af",
+                             sample_stats=stats, n_devices=2, shard="row",
+                             fault=FaultConfig(enabled=False,
+                                               read_fail_base=0.5))
+        ta = replay_sharded(stream, se_a, BC, n_channels=2)
+        tb = replay_sharded(stream, se_b, BC, n_channels=2)
+        np.testing.assert_array_equal(ta.latencies_us, tb.latencies_us)
+        assert ta.report.energy_uj == tb.report.energy_uj
+
+
+class TestDeploymentFaults:
+    def test_config_round_trip_with_fault_and_replication(self):
+        cfg = DeploymentConfig(
+            tables=[TableSpec(N_ROWS, 128)] * 2, n_devices=2, shard="row",
+            fault=FaultConfig(seed=3, read_fail_base=1e-4, events=(
+                FaultEvent(t_us=10.0, kind="device_fail", device=1),)),
+            replication=ReplicationConfig(k=2, hot_frac=0.2, hedge=True))
+        back = DeploymentConfig.from_dict(cfg.to_dict())
+        assert back.fault == cfg.fault
+        assert back.replication == cfg.replication
+
+    def test_legacy_blob_without_fault_keys_loads(self):
+        cfg = DeploymentConfig(tables=[TableSpec(N_ROWS, 128)] * 2)
+        d = cfg.to_dict()
+        del d["fault"], d["replication"]      # pre-§9 blob
+        back = DeploymentConfig.from_dict(d)
+        assert back.fault is None and back.replication is None
+
+    def test_replication_forces_sharded_replay(self):
+        dep = Deployment(DeploymentConfig(
+            tables=[TableSpec(N_ROWS, 128)] * 2, policies=("recflash",),
+            lookups=LOOKUPS, n_devices=1,
+            replication=ReplicationConfig(k=2, hot_frac=0.2)))
+        assert dep.sharded
+        assert isinstance(dep.engines["recflash"], ShardedEngine)
+        reqs = dep.stream(50, 2000.0)
+        tr = dep.run_stream(reqs)["recflash"]
+        assert tr.report.n_requests == 50
+
+    def test_replica_part_override(self, tables, stats):
+        repl = ReplicationConfig(k=2, hot_frac=0.2, part="SLC")
+        se = ShardedEngine(tables, TLC, policy="recflash_af",
+                           sample_stats=stats, n_devices=2, shard="row",
+                           replication=repl)
+        assert se.replicas[0].part is PARTS["SLC"]
+        assert se.devices[0].part is TLC

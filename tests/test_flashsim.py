@@ -263,3 +263,151 @@ class TestEnergyAndParts:
             gaps[name] = (base.run(tb, rows).latency_us
                           / rf.run(tb, rows).latency_us)
         assert gaps["QLC"] >= gaps["TLC"] >= gaps["SLC"] * 0.9
+
+
+# ---------------------------------------------------------- fault model
+# Retry-ladder acceptance tests (DESIGN.md §9.1): deterministic sweep +
+# a minimizing hypothesis property where available.
+
+from repro.flashsim.device import FaultConfig, FaultEvent  # noqa: E402
+
+
+def make_fault_sim(policy, fault, n_rows=4096, part=SLC, stats=None):
+    pol = POLICIES[policy]
+    m = build_mapping(n_rows, 128, part.page_bytes, part.n_planes,
+                      mode=pol.mapping_mode, stats=stats)
+    return SLSSimulator(part, pol, [m], TIMING, None, fault=fault)
+
+
+def fault_stream(n=2000, n_rows=4096, seed=5):
+    rng = np.random.default_rng(seed)
+    rows = rng.zipf(1.3, size=n) % n_rows
+    return np.zeros(n, dtype=np.int64), rows
+
+
+def check_latency_monotone_in_error_rate(policy, seed):
+    """For a fixed seed, raising RBER never makes the run faster, and
+    the retry depth never exceeds the cap."""
+    tb, rows = fault_stream(seed=seed)
+    prev = None
+    for p0 in (0.0, 1e-4, 1e-3, 1e-2, 0.1):
+        fault = (FaultConfig(seed=seed, read_fail_base=p0, max_retries=4)
+                 if p0 > 0 else None)
+        sim = make_fault_sim("rmssd", fault)
+        res = sim.run(tb, rows)
+        if fault is not None:
+            assert len(res.retry_hist) == fault.max_retries + 1
+            # depth 0 rung holds first-try successes; total pages conserved
+            assert int(res.retry_hist.sum()) == res.n_page_reads
+            assert res.n_retries <= fault.max_retries * res.n_page_reads
+        if prev is not None:
+            assert res.latency_us >= prev - 1e-9, (policy, p0)
+        prev = res.latency_us
+
+
+def check_disabled_fault_bit_identity(policy, part_name, seed):
+    """FaultConfig(enabled=False) must be invisible on every policy x
+    part cell — identical counters, latency, energy and carried state."""
+    part = PARTS[part_name]
+    n_rows = 4096
+    tb, rows = fault_stream(seed=seed, n_rows=n_rows)
+    stats = (AccessStats.from_trace(rows, n_rows)
+             if POLICIES[policy].mapping_mode != "baseline" else None)
+    clean = make_fault_sim(policy, None, part=part, stats=stats)
+    off = make_fault_sim(
+        policy, FaultConfig(enabled=False, seed=seed, read_fail_base=0.5,
+                            bad_block_frac=0.5, retention_age_days=365),
+        part=part, stats=stats)
+    r1, r2 = clean.run(tb, rows), off.run(tb, rows)
+    assert_results_equal(r1, r2, (policy, part_name))
+    assert_states_equal(clean, off, (policy, part_name))
+    assert r2.n_retries == 0 and r2.n_uncorrectable == 0
+    assert r2.failed is None or not r2.failed.any()
+
+
+class TestRetryLadder:
+    def test_latency_monotone_in_error_rate_sweep(self):
+        for seed in range(8):
+            check_latency_monotone_in_error_rate("rmssd", seed)
+
+    @pytest.mark.parametrize("policy", sorted(POLICIES))
+    @pytest.mark.parametrize("part_name", sorted(PARTS))
+    def test_disabled_fault_bit_identity(self, policy, part_name):
+        check_disabled_fault_bit_identity(policy, part_name, seed=3)
+
+    def test_retry_determinism(self):
+        tb, rows = fault_stream()
+        fc = FaultConfig(seed=11, read_fail_base=5e-3)
+        a = make_fault_sim("rmssd", fc).run(tb, rows)
+        b = make_fault_sim("rmssd", fc).run(tb, rows)
+        assert a.latency_us == b.latency_us
+        assert a.n_retries == b.n_retries
+        np.testing.assert_array_equal(a.retry_hist, b.retry_hist)
+
+    def test_uncorrectable_marks_failed_lookups(self):
+        tb, rows = fault_stream()
+        # decay >= 1: a failing read never improves with retries, so it
+        # burns the whole ladder and comes out uncorrectable
+        fc = FaultConfig(seed=11, read_fail_base=0.05, retry_decay=1.0,
+                         max_retries=3)
+        res = make_fault_sim("rmssd", fc).run(tb, rows)
+        assert res.n_uncorrectable > 0
+        assert res.failed is not None and res.failed.any()
+        assert res.n_failed_lookups == int(res.failed.sum())
+
+    def test_part_scaling_orders_retry_rates(self):
+        """QLC > TLC > SLC raw-bit-error scaling (DESIGN.md §9.1).
+
+        Compared as retries *per page read* — parts have different page
+        sizes, so absolute retry counts also track page-count geometry.
+        """
+        tb, rows = fault_stream(n=20_000, seed=9)
+        rate = {}
+        for part_name in ("SLC", "TLC", "QLC"):
+            fc = FaultConfig(seed=11, read_fail_base=5e-3)
+            res = make_fault_sim("rmssd", fc, part=PARTS[part_name]).run(
+                tb, rows)
+            rate[part_name] = res.n_retries / res.n_page_reads
+        assert rate["QLC"] > rate["TLC"] > rate["SLC"]
+
+    def test_bad_blocks_charge_extra_reads(self):
+        tb, rows = fault_stream(seed=9)
+        fc = FaultConfig(seed=11, bad_block_frac=0.25)
+        sim = make_fault_sim("rmssd", fc)
+        clean = make_fault_sim("rmssd", None)
+        rf, rc = sim.run(tb, rows), clean.run(tb, rows)
+        assert rf.n_badblock_reads > 0
+        extra = rf.n_badblock_reads * (SLC.t_r + TIMING.t_ca)
+        assert rf.latency_us == pytest.approx(rc.latency_us + extra)
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError):
+            FaultEvent(t_us=0.0, kind="meteor_strike", device=0)
+        with pytest.raises(ValueError):
+            FaultConfig(read_fail_base=2.0)
+        with pytest.raises(ValueError):
+            FaultConfig(max_retries=-1)
+
+
+# plain import guard, not importorskip: that would skip the whole module
+# and take the deterministic sweeps above down with it
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    class TestRetryLadderProperties:
+        @given(st.integers(0, 2 ** 24))
+        @settings(max_examples=25, deadline=None)
+        def test_latency_monotone_in_error_rate(self, seed):
+            check_latency_monotone_in_error_rate("rmssd", seed)
+
+        @given(st.integers(0, 2 ** 24),
+               st.sampled_from(sorted(POLICIES)),
+               st.sampled_from(sorted(PARTS)))
+        @settings(max_examples=25, deadline=None)
+        def test_disabled_fault_bit_identity(self, seed, policy, part_name):
+            check_disabled_fault_bit_identity(policy, part_name, seed)

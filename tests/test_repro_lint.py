@@ -108,6 +108,54 @@ def test_rl002_quiet_on_seeded_generator():
     assert ids(CORE, src) == []
 
 
+FLASHSIM = "src/repro/flashsim/snippet.py"
+
+
+def test_rl002_flags_module_level_generator_in_flashsim():
+    src = """
+        import numpy as np
+
+        _RNG = np.random.default_rng(0)
+
+        def draw(n):
+            return _RNG.random(n)
+    """
+    assert "RL002" in ids(FLASHSIM, src)
+
+
+def test_rl002_flags_unseeded_default_rng_in_flashsim():
+    src = """
+        import numpy as np
+
+        def draw(n):
+            rng = np.random.default_rng()
+            return rng.random(n)
+    """
+    assert "RL002" in ids(FLASHSIM, src)
+
+
+def test_rl002_quiet_on_seeded_function_level_generator_in_flashsim():
+    src = """
+        import numpy as np
+
+        def draw(n, seed):
+            rng = np.random.default_rng((seed, 2))
+            return rng.random(n)
+    """
+    assert ids(FLASHSIM, src) == []
+
+
+def test_rl002_flashsim_rules_scoped_to_flashsim():
+    # a seeded module-level generator outside flashsim is not this
+    # rule's concern (RL002's global-state rules still apply there)
+    src = """
+        import numpy as np
+
+        _RNG = np.random.default_rng(0)
+    """
+    assert ids(CORE, src) == []
+
+
 # ---------------------------------------------------------------- RL003
 
 

@@ -236,6 +236,47 @@ class TestMetrics:
         assert bulk.shed_frac == pytest.approx(1.0)
         assert np.isnan(bulk.p99_us)
 
+    def test_shed_vs_failed_distinct(self):
+        """Regression (DESIGN.md §9.4): *shed* (NaN by policy) and
+        *failed* (uncorrectable after retries / dead device) both carry
+        NaN latency but must be counted apart — conflating them hid
+        fault losses inside the shed rate."""
+        rep = summarize("p", np.array([10.0, np.nan, np.nan, np.nan]),
+                        makespan_us=1_000.0, batch_sizes=[], busy_us=0.0,
+                        n_shed=2, n_failed=1)
+        assert rep.n_requests == 1
+        assert rep.n_shed == 2 and rep.n_failed == 1
+        assert rep.n_offered == 4
+        assert rep.shed_frac == pytest.approx(0.5)
+        assert rep.failed_frac == pytest.approx(0.25)
+        assert rep.availability == pytest.approx(0.25)
+
+    def test_summarize_classes_splits_failed_out_of_shed(self):
+        """Per-class accounting: a failed request must not inflate its
+        class's shed count even though the shed mask (NaN-derived)
+        covers it too."""
+        names = ("latency_critical", "standard", "bulk")
+        classes = np.array([0, 0, 1, 1, 2])
+        lat = np.array([10.0, np.nan, np.nan, np.nan, 30.0])
+        shed = ~np.isfinite(lat)            # covers failed too
+        failed = np.array([False, True, False, True, False])
+        degraded = np.zeros(5, dtype=bool)
+        per = summarize_classes("p", classes, lat, 1_000.0, shed,
+                                degraded, names, failed_mask=failed)
+        lc = per["latency_critical"]
+        assert (lc.n_requests, lc.n_shed, lc.n_failed) == (1, 0, 1)
+        assert lc.availability == pytest.approx(0.5)
+        std = per["standard"]
+        assert (std.n_requests, std.n_shed, std.n_failed) == (0, 1, 1)
+        assert std.availability == 0.0
+        bulk = per["bulk"]
+        assert (bulk.n_requests, bulk.n_shed, bulk.n_failed) == (1, 0, 0)
+        assert bulk.availability == 1.0
+        # without the mask, legacy accounting folds failures into shed
+        legacy = summarize_classes("p", classes, lat, 1_000.0, shed,
+                                   degraded, names)
+        assert legacy["standard"].n_shed == 2
+
 
 class TestScheduler:
     def test_latency_decomposition_serial_lane(self):

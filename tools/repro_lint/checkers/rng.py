@@ -25,6 +25,11 @@ ALLOWED_NP_RANDOM = frozenset({
     "default_rng", "Generator", "SeedSequence", "BitGenerator",
     "PCG64", "PCG64DXSM", "Philox", "SFC64", "MT19937",
 })
+# calls that construct Generator state (for the flashsim tightening)
+GENERATOR_CTORS = frozenset({
+    "default_rng", "Generator", "PCG64", "PCG64DXSM", "Philox", "SFC64",
+    "MT19937",
+})
 # stdlib random: only the seeded-instance class is allowed
 ALLOWED_STDLIB_RANDOM = frozenset({"Random", "SystemRandom"})
 
@@ -88,4 +93,49 @@ class RngDisciplineChecker(Checker):
                     path, node,
                     f"module-global `{name}`; use random.Random(seed) "
                     f"or np.random.default_rng(seed)"))
+        if path_in_scope(path, config.RNG_FLASHSIM_INCLUDE, ()):
+            out.extend(self._check_flashsim(path, tree))
+        return out
+
+    # -- flashsim tightening (DESIGN.md §9.1) ---------------------------------
+    def _is_generator_ctor(self, node: ast.AST) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        fn = node.func
+        name = (fn.id if isinstance(fn, ast.Name)
+                else dotted_name(fn) if isinstance(fn, ast.Attribute)
+                else None)
+        return (name is not None
+                and name.split(".")[-1] in GENERATOR_CTORS)
+
+    def _check_flashsim(self, path: str, tree: ast.AST) -> list[Finding]:
+        """Flashsim-only rules: every Generator derives from an explicit
+        seed (no module-level generator state, no unseeded draws)."""
+        out: list[Finding] = []
+        # module-level Generator assignments: shared mutable draw state
+        # across every simulator instance in the process
+        body = tree.body if isinstance(tree, ast.Module) else []
+        for stmt in body:
+            if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                continue
+            value = stmt.value
+            if value is None:
+                continue
+            for sub in ast.walk(value):
+                if self._is_generator_ctor(sub):
+                    out.append(self.finding(
+                        path, stmt,
+                        "module-level Generator in flashsim; construct "
+                        "per-simulator from an explicit seed parameter "
+                        "(FaultConfig.retry_seed / reset_state)"))
+                    break
+        # unseeded default_rng(): fresh OS entropy on every call — the
+        # draw stream can never be replayed
+        for node in ast.walk(tree):
+            if (self._is_generator_ctor(node)
+                    and not node.args and not node.keywords):
+                out.append(self.finding(
+                    path, node,
+                    "unseeded Generator in flashsim; derive the seed "
+                    "from an explicit parameter"))
         return out

@@ -30,6 +30,12 @@ CLOCK_EXCLUDE: tuple = ()
 # every caller sharing the process.
 RNG_INCLUDE = ("src/repro",)
 RNG_EXCLUDE: tuple = ()
+# RL002 flashsim tightening (DESIGN.md §9.1): the fault model's replay
+# determinism rests on every Generator in the device simulator deriving
+# from an explicit seed parameter. Module-level generators (shared
+# mutable draw state across simulators) and unseeded ``default_rng()``
+# (fresh OS entropy per call) are banned outright in this subtree.
+RNG_FLASHSIM_INCLUDE = ("src/repro/flashsim",)
 
 # RL003 — ordering hazards. Python sets and dict views have no guaranteed
 # cross-run order (sets hash-order by insertion history; PYTHONHASHSEED
