@@ -18,13 +18,17 @@ test:
 # DESIGN.md §7), and the fault-injection gate (fig_fault_tail --smoke
 # asserts the disabled fault layer is byte-identical to fig_serving_tail
 # and that replicated+hedged failover contains a mid-stream device loss
-# within 3x the fault-free p99, DESIGN.md §9)
+# within 3x the fault-free p99, DESIGN.md §9), and the host-DRAM cache
+# tier gate (fig_cache_tier --smoke asserts a legacy config without the
+# tier replays byte-identically and that freq-informed admission beats
+# plain LRU p99 under a hot-set-shift drift, DESIGN.md §10)
 bench-smoke:
 	$(PY) benchmarks/fig_serving_tail.py --smoke
 	$(PY) benchmarks/fig_drift_tail.py --smoke
 	$(PY) benchmarks/fig_scaleout.py --smoke
 	$(PY) benchmarks/fig_slo_tail.py --smoke
 	$(PY) benchmarks/fig_fault_tail.py --smoke
+	$(PY) benchmarks/fig_cache_tier.py --smoke
 
 # simulator fast-path microbenchmark (DESIGN.md §2.3): smoke sweep into
 # BENCH_sim_smoke.json (the committed root BENCH_sim.json is the tracked

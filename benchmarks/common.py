@@ -16,12 +16,14 @@ trillions); cache behaviour converges within ~100 inferences.
 from __future__ import annotations
 
 import dataclasses
+import json
 
 from repro.core.engine import TableSpec
 from repro.data.tracegen import generate_sls_batch
 from repro.flashsim.timeline import SERVING_POLICIES
 from repro.models.dlrm import RMC1, RMC2, RMC3, DLRMConfig
-from repro.serving import Deployment, DeploymentConfig
+from repro.serving import (Deployment, DeploymentConfig, replay,
+                           replay_sharded)
 
 K_VALUES = (0.0, 0.3, 0.8, 1.0, 2.0)
 MODELS = {"rmc1": RMC1, "rmc2": RMC2, "rmc3": RMC3}
@@ -142,6 +144,41 @@ def sweep(models=("rmc1", "rmc2", "rmc3"), parts=("TLC",),
                     out.append(run_point(m, p, k, pol, seed))
     _SWEEP_CACHE[key] = out
     return out
+
+
+# measured saturation rates, keyed on the *full* deployment config (JSON
+# form) + probe parameters: every figure probing the same configuration
+# sees one measured number, computed once (regression-tested in
+# tests/test_saturation_probe.py). Unlike the single-entry caches above
+# this one keeps every key — a probe result is a few floats, and the tail
+# figures interleave configs.
+_SATURATION_CACHE: dict = {}
+
+
+def saturation_rate(dep: Deployment, policy: str, n_probe: int = 300,
+                    seed: int = 0) -> float:
+    """Measured service capacity (req/s) of one policy lane, memoised.
+
+    A fully-backlogged probe (open-loop stream at an absurd rate, so
+    every request has arrived before the first batch leaves) through the
+    *plain* replay — no SLO discipline, no host-DRAM tier — keeps the
+    channels busy end to end; capacity is then requests per
+    channel-second of busy time, times the lane's total channel count.
+    This is the device-tier capacity every load-multiple sweep
+    (``fig_slo_tail``, ``fig_fault_tail``, ``fig_cache_tier``) calibrates
+    against, so it deliberately excludes any cache-tier relief.
+    """
+    key = (json.dumps(dep.cfg.to_dict(), sort_keys=True), policy,
+           n_probe, seed)
+    if key not in _SATURATION_CACHE:
+        reqs = dep.stream(n_probe, rate_rps=1e9, seed=seed,
+                          arrival_seed=seed + 7)
+        run = replay_sharded if dep.sharded else replay
+        tr = run(reqs, dep.engines[policy], dep.cfg.batcher,
+                 n_channels=dep.cfg.n_channels)
+        lanes = dep.cfg.n_devices * dep.cfg.n_channels
+        _SATURATION_CACHE[key] = n_probe * lanes / tr.busy_us * 1e6
+    return _SATURATION_CACHE[key]
 
 
 def reduction(points, metric, policy="recflash", baseline="rmssd") -> dict:

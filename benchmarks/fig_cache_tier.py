@@ -1,0 +1,188 @@
+"""Host-DRAM cache tier — size x admission policy x drift sweep.
+
+The device-tier figures (``fig_serving_tail``, ``fig_slo_tail``) serve
+every embedding row from flash. This figure adds the host-DRAM tier
+(DESIGN.md §10) above the same lane and asks the RecNMP question: how
+much tail latency does a DRAM hit-layer buy, and does the
+**frequency-informed** admission rule (sampled-rank prior + observed
+count duel + aged-count eviction, §10.1) beat plain LRU when the cache
+is small and the hot set drifts? Each point replays the *same* request stream through the same
+``recflash`` lane with the tier disabled (``none``), an LRU tier, and a
+freq-informed tier, at a load calibrated against the shared measured
+saturation probe (``benchmarks/common.py``) — so hit-rate relief shows
+up where it matters, in the near-saturation tail.
+
+Emits CSV rows:
+
+    fig_cache,scenario,policy,dram_kib,rate_rps,p50_ms,p99_ms,
+    throughput_rps,dram_hit_rate,n_fills,evict_kib
+
+``--smoke`` runs the CI gate (ISSUE 9 acceptance criteria): (1) a lane
+with ``host_cache=None`` — built ``from_dict`` on a legacy config blob
+without the key — reproduces today's ``fig_serving_tail --smoke`` rows
+byte-identically, and (2) under a gradual hot-set-shift drift the
+freq-informed tier's p99 beats the same-size plain-LRU tier's.
+"""
+
+from __future__ import annotations
+
+from repro.core.engine import TableSpec
+from repro.serving import (BatcherConfig, Deployment, DeploymentConfig,
+                           DriftScenario, HostCache, HostCacheConfig,
+                           replay)
+
+# same serving-scale table set as fig_serving_tail
+N_TABLES = 8
+N_ROWS = 100_000
+LOOKUPS = 20
+VEC_BYTES = 128
+
+DRAM_KIB = (64, 256, 1024, 4096)
+TIERS = ("none", "lru", "freq")
+SCENARIOS = ("none", "gradual")
+ADMIT_FRAC = 0.02       # freq gate: top 2% of sampled ranks per table
+LOAD_MULT = 1.1         # offered load vs measured device-tier saturation
+BATCHER = BatcherConfig(max_batch=16, max_wait_us=200.0)
+DRIFT = DriftScenario(kind="gradual", shift_frac=0.02, ramp_end=0.5)
+
+
+def build_deployment(part: str = "TLC", k: float = 0.0, seed: int = 0,
+                     n_channels: int = 1) -> Deployment:
+    """One shared tier-free deployment — the offline phase runs once and
+    every (size, tier, scenario) point reuses its engine + stats."""
+    return Deployment(DeploymentConfig(
+        tables=[TableSpec(N_ROWS, VEC_BYTES)] * N_TABLES, part=part,
+        policies=("recflash",), lookups=LOOKUPS, k=k, seed=seed + 100,
+        n_channels=n_channels, batcher=BATCHER))
+
+
+def tier_config(tier: str, dram_kib: int) -> HostCacheConfig | None:
+    """The swept tier variants: None / plain LRU / freq-informed."""
+    if tier == "none":
+        return None
+    return HostCacheConfig(
+        dram_bytes=dram_kib << 10, policy=tier,
+        admit_frac=ADMIT_FRAC if tier == "freq" else 1.0)
+
+
+def replay_with_tier(dep: Deployment, reqs, tier: str, dram_kib: int):
+    """One point: bind a fresh tier of this size/policy to the shared
+    deployment's stats and replay — the engine, stream, and batcher are
+    identical across tiers, so rows differ only by the tier."""
+    hc = tier_config(tier, dram_kib)
+    binding = None
+    if hc is not None:
+        binding = HostCache(hc.dram_bytes).register(
+            hc, list(dep.cfg.tables), dep.stats)
+    return replay(reqs, dep.engines["recflash"], dep.cfg.batcher,
+                  policy_name="recflash", n_channels=dep.cfg.n_channels,
+                  host_cache=binding)
+
+
+def run(n_requests: int = 1500, sizes=DRAM_KIB, tiers=TIERS,
+        scenarios=SCENARIOS, part: str = "TLC", k: float = 0.0,
+        seed: int = 0, n_channels: int = 1):
+    import common
+    dep = build_deployment(part, k, seed, n_channels)
+    rate = LOAD_MULT * common.saturation_rate(dep, "recflash", seed=seed)
+    rows = []
+    for scen_kind in scenarios:
+        scen = None if scen_kind == "none" else DRIFT
+        reqs = dep.stream(n_requests, rate, seed=seed,
+                          arrival_seed=seed + 7, scenario=scen)
+        for dram_kib in sizes:
+            for tier in tiers:
+                if tier == "none" and dram_kib != sizes[0]:
+                    continue    # the tier-free lane has no size axis
+                tr = replay_with_tier(dep, reqs, tier, dram_kib)
+                r = tr.report
+                rows.append(dict(
+                    scenario=scen_kind, tier=tier, dram_kib=dram_kib,
+                    rate=rate, p50_ms=r.p50_us / 1e3,
+                    p99_ms=r.p99_us / 1e3,
+                    throughput_rps=r.throughput_rps,
+                    dram_hit_rate=r.dram_hit_rate,
+                    n_fills=r.n_dram_fills,
+                    evict_kib=tr.dram_evict_bytes / 1024.0))
+    return rows
+
+
+def identity_rows(n_requests: int = 300, n_channels: int = 1):
+    """fig_serving_tail's smoke sweep, replayed through a deployment whose
+    config round-tripped a *legacy* blob (no ``host_cache`` key). Must be
+    byte-identical to ``fig_serving_tail.run`` (ISSUE 9 gate)."""
+    import fig_serving_tail as fst
+    cfg = DeploymentConfig(
+        tables=[TableSpec(fst.N_ROWS, fst.VEC_BYTES)] * fst.N_TABLES,
+        part="TLC", lookups=fst.LOOKUPS, k=0.0, seed=100,
+        n_channels=n_channels)
+    blob = cfg.to_dict()
+    del blob["host_cache"]          # legacy blob predates the tier
+    dep = Deployment(DeploymentConfig.from_dict(blob))
+    rows = []
+    reqs = dep.stream(n_requests, 500.0, arrival="poisson", seed=0,
+                      arrival_seed=7)
+    for max_batch, max_wait in ((1, 0.0), (64, 1000.0)):
+        traces = dep.run_stream(reqs, batcher=BatcherConfig(
+            max_batch=max_batch, max_wait_us=max_wait))
+        for pol, tr in traces.items():
+            r = tr.report
+            rows.append(dict(
+                arrival="poisson", rate=500.0, max_batch=max_batch,
+                max_wait_us=max_wait, policy=pol,
+                p50_ms=r.p50_us / 1e3, p95_ms=r.p95_us / 1e3,
+                p99_ms=r.p99_us / 1e3, throughput_rps=r.throughput_rps,
+                mean_batch=r.mean_batch_size, util=r.device_busy_frac))
+    return rows
+
+
+def smoke(n_requests: int = 400, seed: int = 0) -> None:
+    """CI gates: legacy-blob identity + freq-beats-LRU under drift."""
+    import fig_serving_tail as fst
+    ref = fst.run(n_requests=300, rates=(500.0,),
+                  points=((1, 0.0), (64, 1000.0)), arrivals=("poisson",))
+    off = identity_rows(n_requests=300)
+    assert ref == off, (
+        "a legacy config blob (no host_cache key) no longer reproduces "
+        "fig_serving_tail --smoke byte-identically — the disabled tier "
+        "is not inert")
+    print("identity_gate,ok")
+    rows = run(n_requests=n_requests, sizes=(64,), tiers=("lru", "freq"),
+               scenarios=("gradual",), seed=seed)
+    by_tier = {r["tier"]: r for r in rows}
+    freq, lru = by_tier["freq"], by_tier["lru"]
+    print(f"freq_p99_ms,{freq['p99_ms']:.3f},hit_rate,"
+          f"{freq['dram_hit_rate']:.3f}")
+    print(f"lru_p99_ms,{lru['p99_ms']:.3f},hit_rate,"
+          f"{lru['dram_hit_rate']:.3f}")
+    assert freq["p99_ms"] < lru["p99_ms"], (
+        f"freq-informed admission p99 {freq['p99_ms']:.3f}ms does not "
+        f"beat plain LRU {lru['p99_ms']:.3f}ms under hot-set-shift "
+        "drift — the admission gate is not pinning the hot set")
+    print("freq_vs_lru_gate,ok")
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=1500)
+    ap.add_argument("--channels", type=int, default=1,
+                    help="concurrent SLS servers per policy lane")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gates: legacy identity + freq-vs-LRU p99")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    rows = run(n_requests=args.requests, n_channels=args.channels)
+    print("figure,scenario,policy,dram_kib,rate_rps,p50_ms,p99_ms,"
+          "throughput_rps,dram_hit_rate,n_fills,evict_kib")
+    for r in rows:
+        print(f"fig_cache,{r['scenario']},{r['tier']},{r['dram_kib']},"
+              f"{r['rate']:.0f},{r['p50_ms']:.3f},{r['p99_ms']:.3f},"
+              f"{r['throughput_rps']:.1f},{r['dram_hit_rate']:.3f},"
+              f"{r['n_fills']},{r['evict_kib']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

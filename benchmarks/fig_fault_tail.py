@@ -68,6 +68,21 @@ def build_deployment(fault: FaultConfig | None = None,
         batcher=BATCHER, fault=fault, replication=replication))
 
 
+def saturation_rate(dep: Deployment, policy: str,
+                    n_probe: int = 300, seed: int = 0) -> float:
+    """Measured service capacity (req/s) of one fault-lane deployment.
+
+    Delegates to the shared memoised probe in ``benchmarks/common.py`` —
+    the same accessor ``fig_slo_tail`` uses, so identical configs see
+    the identical measured rate (regression-tested). The fault sweeps
+    themselves run at the fixed ``RATE_RPS`` (fault containment, not
+    overload, is their subject); this is the calibration hook for
+    load-relative fault studies.
+    """
+    import common
+    return common.saturation_rate(dep, policy, n_probe=n_probe, seed=seed)
+
+
 def p99_eff_us(tr) -> float:
     """p99 with failed requests charged +inf latency (DESIGN.md §9.4).
 

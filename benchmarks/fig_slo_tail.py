@@ -29,8 +29,7 @@ from __future__ import annotations
 
 from repro.core.engine import TableSpec
 from repro.serving import (SLO_CLASSES, BatcherConfig, Deployment,
-                           DeploymentConfig, DriftScenario, SLOConfig,
-                           replay)
+                           DeploymentConfig, DriftScenario, SLOConfig)
 
 # same serving-scale table set as fig_serving_tail
 N_TABLES = 8
@@ -64,16 +63,13 @@ def saturation_rate(dep: Deployment, policy: str,
                     n_probe: int = 300, seed: int = 0) -> float:
     """Measured service capacity (req/s) of one policy lane.
 
-    A fully-backlogged probe (open-loop stream at an absurd rate, so
-    every request has arrived before the first batch leaves) through the
-    *plain* replay keeps the channels busy end to end; capacity is then
-    requests per channel-second of busy time, times the channel count.
+    Delegates to the shared memoised probe in ``benchmarks/common.py``
+    (hoisted so every tail figure calibrating against the same config
+    sees one measured rate, probed once); kept as an entry point so
+    existing callers and the smoke gate are unchanged.
     """
-    reqs = dep.stream(n_probe, rate_rps=1e9, seed=seed,
-                      arrival_seed=seed + 7)
-    tr = replay(reqs, dep.engines[policy], dep.cfg.batcher,
-                n_channels=dep.cfg.n_channels)
-    return n_probe * dep.cfg.n_channels / tr.busy_us * 1e6
+    import common
+    return common.saturation_rate(dep, policy, n_probe=n_probe, seed=seed)
 
 
 def run(n_requests: int = 600, mults=LOAD_MULTS, scenarios=SCENARIOS,

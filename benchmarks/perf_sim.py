@@ -21,10 +21,13 @@ import time
 
 import numpy as np
 
+from repro.core.engine import TableSpec
 from repro.core.freq import AccessStats
 from repro.core.remap import build_mapping
 from repro.flashsim.device import PARTS, TIMING, CacheConfig, FaultConfig
 from repro.flashsim.timeline import POLICIES, SLSSimulator
+from repro.serving import (BatcherConfig, Deployment, DeploymentConfig,
+                           HostCache, HostCacheConfig, replay)
 
 N_ROWS = 100_000
 VEC_BYTES = 128
@@ -128,6 +131,57 @@ def run_faults(sizes, parts, policies=tuple(POLICIES), seed: int = 0,
     return results
 
 
+def run_cache_tier(sizes, parts, seed: int = 0, repeats: int = 3
+                   ) -> list[dict]:
+    """Host-DRAM tier overhead lane (DESIGN.md §10.2).
+
+    Times the replay with a freq-informed tier bound against the
+    identical tier-free replay. Lane keys are ``policy@cache_tier`` so
+    they gate independently; ``speedup`` is ``t_plain / t_cached`` (host
+    speed cancels), so the 2x check fires when the tier's short-circuit
+    walk gets slower *relative to* the plain replay it decorates.
+    """
+    results = []
+    lookups = 20
+    batcher = BatcherConfig(max_batch=16, max_wait_us=200.0)
+    hc = HostCacheConfig(dram_bytes=1 << 20, policy="freq",
+                         admit_frac=0.05)
+    for n in sizes:
+        n_req = max(100, n // (2 * lookups))
+        for part in parts:
+            dep = Deployment(DeploymentConfig(
+                tables=[TableSpec(N_ROWS, VEC_BYTES)] * 2, part=part,
+                policies=("recflash",), lookups=lookups, k=0.0,
+                seed=seed + 100, sample_inferences=128))
+            reqs = dep.stream(n_req, 2000.0, seed=seed,
+                              arrival_seed=seed + 7)
+            binding = HostCache(hc.dram_bytes).register(
+                hc, list(dep.cfg.tables), dep.stats)
+            eng = dep.engines["recflash"]
+            # equivalence guard: the tier must actually serve traffic
+            # before its overhead number means anything.
+            tr = replay(reqs, eng, batcher, host_cache=binding)
+            assert tr.n_dram_hits > 0, part
+            times = {}
+            for label, cache in (("plain", None), ("cached", binding)):
+                best = float("inf")
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    replay(reqs, eng, batcher, host_cache=cache)
+                    best = min(best, time.perf_counter() - t0)
+                times[label] = best
+            results.append(dict(
+                policy="recflash@cache_tier", part=part, n=int(n),
+                t_vec_s=round(times["cached"], 6),
+                t_exact_s=round(times["plain"], 6),
+                speedup=round(times["plain"] / max(times["cached"], 1e-9),
+                              2)))
+            print(f"perf_sim,recflash@cache_tier,{part},{n},"
+                  f"{times['cached']:.6f},{times['plain']:.6f},"
+                  f"{results[-1]['speedup']:.1f}x")
+    return results
+
+
 def check(results: list[dict], baseline_path: str) -> int:
     with open(baseline_path) as f:
         base = json.load(f)
@@ -164,6 +218,7 @@ def main() -> int:
     print("figure,policy,part,n_accesses,t_vectorized_s,t_exact_s,speedup")
     results = run(sizes, parts, seed=args.seed)
     results += run_faults(sizes, parts, seed=args.seed)
+    results += run_cache_tier(sizes, parts, seed=args.seed)
     payload = dict(
         meta=dict(n_rows=N_ROWS, vec_bytes=VEC_BYTES, zipf_a=ZIPF_A,
                   smoke=bool(args.smoke), seed=args.seed),

@@ -9,6 +9,8 @@ from repro.serving.batcher import Batch, BatcherConfig, DynamicBatcher
 from repro.serving.deployment import (DayResult, Deployment,
                                       DeploymentConfig, TriggerConfig,
                                       arch_model_config)
+from repro.serving.host_cache import (HostCache, HostCacheBinding,
+                                      HostCacheConfig)
 from repro.serving.metrics import (LatencyReport, percentiles, summarize,
                                    summarize_classes, tail_timeseries)
 from repro.serving.queueing import RequestQueue
@@ -27,6 +29,7 @@ __all__ = [
     "Batch", "BatcherConfig", "DynamicBatcher",
     "DayResult", "Deployment", "DeploymentConfig", "TriggerConfig",
     "arch_model_config",
+    "HostCache", "HostCacheBinding", "HostCacheConfig",
     "LatencyReport", "percentiles", "summarize", "summarize_classes",
     "tail_timeseries",
     "RequestQueue", "SERVING_POLICIES",

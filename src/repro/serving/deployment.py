@@ -41,6 +41,8 @@ from repro.data.tracegen import generate_sls_batch
 from repro.flashsim.device import PARTS, CacheConfig, FaultConfig
 from repro.flashsim.timeline import POLICIES, SERVING_POLICIES, SimResult
 from repro.serving.batcher import BatcherConfig
+from repro.serving.host_cache import (HostCache, HostCacheBinding,
+                                      HostCacheConfig)
 from repro.serving.metrics import LatencyReport
 from repro.serving.scheduler import (LaneTrace, LiveRemapConfig, replay,
                                      replay_sharded)
@@ -164,6 +166,12 @@ class DeploymentConfig:
     # Setting it forces the sharded scatter-gather replay even at
     # ``n_devices=1`` (replicas are extra devices behind the plan).
     replication: ReplicationConfig | None = None
+    # host-DRAM cache tier above the device lanes (DESIGN.md §10):
+    # frequency-informed admission, DRAM-latency hits, miss residues to
+    # the devices. None keeps every replay path byte-identical to the
+    # tier-free lane. Composes with everything (the tier sits above the
+    # scatter, the SLO discipline, and the fault layer).
+    host_cache: HostCacheConfig | None = None
     arch: str | None = None         # provenance (set by from_arch)
 
     def __post_init__(self) -> None:
@@ -263,6 +271,8 @@ class DeploymentConfig:
             fault=self.fault.to_dict() if self.fault else None,
             replication=self.replication.to_dict() if self.replication
             else None,
+            host_cache=self.host_cache.to_dict() if self.host_cache
+            else None,
             arch=self.arch)
 
     @classmethod
@@ -290,6 +300,10 @@ class DeploymentConfig:
             d["replication"] = ReplicationConfig.from_dict(d["replication"])
         else:
             d.pop("replication", None)
+        if d.get("host_cache") is not None:
+            d["host_cache"] = HostCacheConfig.from_dict(d["host_cache"])
+        else:
+            d.pop("host_cache", None)
         return cls(**d)
 
 
@@ -306,7 +320,13 @@ class Deployment:
     """One serving deployment: offline phase + per-policy engine lanes."""
 
     def __init__(self, cfg: DeploymentConfig,
-                 sample_stats: list[AccessStats] | None = None) -> None:
+                 sample_stats: list[AccessStats] | None = None,
+                 host_cache: HostCache | None = None) -> None:
+        """``host_cache`` shares an existing host-DRAM tier between
+        deployments (DESIGN.md §10.3): pass the same ``HostCache`` to
+        each and give every config's ``host_cache`` block its own
+        ``quota``. With it None and a config block set, the deployment
+        builds a private tier of ``cfg.host_cache.dram_bytes``."""
         self.cfg = cfg
         self.part = PARTS[cfg.part]
         n_tables = len(cfg.tables)
@@ -323,6 +343,20 @@ class Deployment:
             sample_stats = [AccessStats.from_trace(rows[tb == t], n_rows)
                             for t in range(n_tables)]
         self.stats = sample_stats
+        # host-DRAM tier (DESIGN.md §10): bind this model to the shared
+        # tier (or a private one), frequency-informed admission derived
+        # from the same sampled offline stats the mapping uses.
+        self._cache_binding: HostCacheBinding | None = None
+        self.host_cache: HostCache | None = None
+        if cfg.host_cache is not None:
+            tier = (host_cache if host_cache is not None
+                    else HostCache(cfg.host_cache.dram_bytes))
+            self.host_cache = tier
+            self._cache_binding = tier.register(
+                cfg.host_cache, list(cfg.tables), self.stats)
+        elif host_cache is not None:
+            raise ValueError("a shared HostCache was passed but the "
+                             "config has no host_cache block")
         self.trigger = cfg.trigger.build() if cfg.trigger else None
         # n_devices == 1 keeps the plain single-device engine (and replay
         # path) so the pre-scale-out lane stays bit-identical; n > 1 builds
@@ -466,7 +500,8 @@ class Deployment:
         run = (replay_sharded if self.sharded else replay)
         traces = {pol: run(requests, eng, batcher,
                            record_window=record_window, policy_name=pol,
-                           n_channels=nc, trigger=trig, live=live, slo=slo)
+                           n_channels=nc, trigger=trig, live=live, slo=slo,
+                           host_cache=self._cache_binding)
                   for pol, eng in self.engines.items()}
         self.last_traces = traces
         return traces

@@ -75,6 +75,15 @@ class LatencyReport:
     n_hedged: int = 0
     hedge_wins: int = 0
     n_failover: int = 0
+    # host-DRAM tier accounting (DESIGN.md §10.4). Access-level counters:
+    # ``n_dram_hits`` embedding-row lookups served from host DRAM,
+    # ``n_dram_misses`` lookups that went to the device tier (hits +
+    # misses == every lookup the stream offered), ``n_dram_fills`` rows
+    # admitted (each charged as part of a miss-residue device read).
+    # All zero when the lane ran without a cache tier.
+    n_dram_hits: int = 0
+    n_dram_misses: int = 0
+    n_dram_fills: int = 0
 
     @property
     def n_offered(self) -> int:
@@ -105,6 +114,13 @@ class LatencyReport:
     def hedge_win_rate(self) -> float:
         """Share of hedged sub-requests the replica answered first."""
         return self.hedge_wins / self.n_hedged if self.n_hedged else 0.0
+
+    @property
+    def dram_hit_rate(self) -> float:
+        """Share of embedding-row lookups served from the host-DRAM tier
+        (0.0 for a lane without one, DESIGN.md §10.4)."""
+        n = self.n_dram_hits + self.n_dram_misses
+        return self.n_dram_hits / n if n else 0.0
 
     def row(self) -> str:
         return (f"{self.policy:14s} p50 {self.p50_us / 1e3:9.2f}  "
@@ -176,7 +192,9 @@ def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,
               n_uncorrectable: int = 0,
               retry_hist: np.ndarray | None = None,
               n_hedged: int = 0, hedge_wins: int = 0,
-              n_failover: int = 0) -> LatencyReport:
+              n_failover: int = 0, n_dram_hits: int = 0,
+              n_dram_misses: int = 0,
+              n_dram_fills: int = 0) -> LatencyReport:
     """Build a LatencyReport; NaN latencies (shed or failed requests) are
     excluded from every served-side statistic and counted via ``n_shed``/
     ``n_failed``."""
@@ -209,6 +227,9 @@ def summarize(policy: str, latencies_us: np.ndarray, makespan_us: float,
         n_hedged=int(n_hedged),
         hedge_wins=int(hedge_wins),
         n_failover=int(n_failover),
+        n_dram_hits=int(n_dram_hits),
+        n_dram_misses=int(n_dram_misses),
+        n_dram_fills=int(n_dram_fills),
     )
 
 

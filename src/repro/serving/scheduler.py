@@ -53,7 +53,7 @@ import dataclasses
 import heapq
 import warnings
 from collections import deque
-from collections.abc import Sequence
+from collections.abc import Callable, Sequence
 from typing import TYPE_CHECKING
 
 import numpy as np
@@ -68,6 +68,7 @@ from repro.serving.metrics import LatencyReport, summarize
 from repro.serving.workload import Request
 
 if TYPE_CHECKING:  # lazy at runtime (slo_scheduler imports our LaneTrace)
+    from repro.serving.host_cache import HostCacheBinding
     from repro.serving.slo_scheduler import SLOConfig
 
 
@@ -213,6 +214,18 @@ class LaneTrace:
     hedge_wins: int = 0
     n_failover: int = 0
     replica_traces: "list[LaneTrace] | None" = None
+    # host-DRAM tier extras (DESIGN.md §10; None/zero without a cache
+    # tier): per-request fully-served-from-DRAM flag and DRAM-hit access
+    # count (input order), plus the tier's access/fill/evict counters for
+    # the whole stream. ``batches``/``device_traces`` cover only the
+    # miss residue the devices actually saw.
+    dram_served_mask: np.ndarray | None = None
+    dram_hits_per_req: np.ndarray | None = None
+    n_dram_hits: int = 0
+    n_dram_misses: int = 0
+    n_dram_fills: int = 0
+    dram_fill_bytes: int = 0
+    dram_evict_bytes: int = 0
 
     def latency_of(self, rid: int, requests: list[Request] | None = None
                    ) -> float:
@@ -222,6 +235,125 @@ class LaneTrace:
         return float(self.latencies_us[self.index_of[rid]])
 
 
+def _host_cache_replay(requests: list[Request],
+                       host_cache: "HostCacheBinding",
+                       run_residue: "Callable[[list[Request]], LaneTrace]",
+                       *, name: str, n_channels: int,
+                       slo: "SLOConfig | None") -> LaneTrace:
+    """Short-circuit the host-DRAM tier, then merge (DESIGN.md §10.2).
+
+    The stream is split once by :func:`~repro.serving.host_cache.
+    short_circuit` — fully-hit requests complete at DRAM latency and
+    never reach a device; partial hits dispatch only their miss residue —
+    and ``run_residue`` (the plain / sharded / SLO replay with the tier
+    stripped) serves the residue stream on the simulated channel
+    timeline, which is where admitted fills get charged. The merged
+    trace covers the *full* stream: a partial-hit request completes at
+    ``max(device residue completion, DRAM-side completion)`` (the same
+    barrier rule as the multi-SSD gather — NaN from a shed or failed
+    residue survives it), counters/masks are scattered back to input
+    positions, and the report is re-summarised over full-stream
+    latencies with the residue trace's device-side accounting.
+    """
+    n = len(requests)
+    index_of = {r.rid: i for i, r in enumerate(requests)}
+    if len(index_of) != n:
+        raise ValueError("duplicate request rids in stream")
+    from repro.serving.host_cache import short_circuit
+    sc = short_circuit(host_cache, requests)
+    tr = run_residue(sc.device_requests)
+    arr_in = np.fromiter((r.arrival_us for r in requests),
+                         dtype=np.float64, count=n)
+    completions = np.full(n, np.nan, dtype=np.float64)
+    completions[sc.dram_served] = sc.dram_done_us[sc.dram_served]
+    dev_pos = sc.device_pos
+    if dev_pos.size:
+        # DRAM-side barrier: the host assembles hit and residue vectors,
+        # so a partial hit is done when the slower side is.
+        with np.errstate(invalid="ignore"):
+            completions[dev_pos] = np.maximum(tr.completions_us,
+                                              sc.dram_done_us[dev_pos])
+    latencies = completions - arr_in
+    first_arrival = float(arr_in.min()) if n else 0.0
+    fin = completions[np.isfinite(completions)]
+    makespan = (float(fin.max()) - first_arrival) if fin.size else 0.0
+    span = max(makespan, 1e-9)
+
+    def _scatter_bool(sub: np.ndarray | None) -> np.ndarray | None:
+        if sub is None:
+            return None
+        out = np.zeros(n, dtype=bool)
+        if dev_pos.size:
+            out[dev_pos] = sub
+        return out
+
+    def _scatter_f64(sub: np.ndarray | None) -> np.ndarray | None:
+        if sub is None:
+            return None
+        out = np.full(n, np.nan, dtype=np.float64)
+        if dev_pos.size:
+            out[dev_pos] = sub
+        return out
+
+    failed_mask = _scatter_bool(tr.failed_mask)
+    failed_detect = _scatter_f64(tr.failed_detect_us)
+    slo_classes = shed_mask = degraded_mask = None
+    per_class: dict = {}
+    if slo is not None:
+        from repro.serving.metrics import summarize_classes
+        from repro.serving.slo_scheduler import SLO_CLASSES
+        slo_classes = np.fromiter(
+            (SLO_CLASSES.index(r.slo) for r in requests),
+            dtype=np.int64, count=n)
+        shed_mask = _scatter_bool(tr.shed_mask)
+        shed_mask = (shed_mask if shed_mask is not None
+                     else np.zeros(n, dtype=bool))
+        degraded_mask = _scatter_bool(tr.degraded_mask)
+        degraded_mask = (degraded_mask if degraded_mask is not None
+                         else np.zeros(n, dtype=bool))
+        per_class = summarize_classes(name, slo_classes, latencies,
+                                      makespan, shed_mask, degraded_mask,
+                                      SLO_CLASSES, failed_mask=failed_mask)
+    n_lanes = tr.n_devices + (len(tr.replica_traces)
+                              if tr.replica_traces else 0)
+    report = summarize(
+        name, latencies, makespan, [b.size for b in tr.batches],
+        tr.busy_us / (n_lanes * n_channels), tr.report.energy_uj,
+        n_devices=tr.n_devices,
+        device_busy_fracs=(tuple(d.busy_us / n_channels / span
+                                 for d in tr.device_traces)
+                           if tr.device_traces else ()),
+        n_shed=int(shed_mask.sum()) if shed_mask is not None else 0,
+        n_degraded=(int(degraded_mask.sum())
+                    if degraded_mask is not None else 0),
+        per_class=per_class,
+        n_failed=int(failed_mask.sum()) if failed_mask is not None else 0,
+        n_retries=tr.n_retries, n_uncorrectable=tr.n_uncorrectable,
+        retry_hist=tr.retry_hist, n_hedged=tr.n_hedged,
+        hedge_wins=tr.hedge_wins, n_failover=tr.n_failover,
+        n_dram_hits=sc.n_hits, n_dram_misses=sc.n_misses,
+        n_dram_fills=sc.n_fills)
+    return LaneTrace(
+        report=report, batches=tr.batches, latencies_us=latencies,
+        completions_us=completions, index_of=index_of,
+        n_channels=n_channels, batch_channels=tr.batch_channels,
+        batch_starts_us=tr.batch_starts_us,
+        remap_events=tr.remap_events, busy_us=tr.busy_us,
+        n_devices=tr.n_devices, device_traces=tr.device_traces,
+        slo_classes=slo_classes, shed_mask=shed_mask,
+        degraded_mask=degraded_mask, n_preempted=tr.n_preempted,
+        slo_events=tr.slo_events, failed_mask=failed_mask,
+        failed_detect_us=failed_detect, n_retries=tr.n_retries,
+        n_uncorrectable=tr.n_uncorrectable,
+        n_badblock_reads=tr.n_badblock_reads, retry_hist=tr.retry_hist,
+        n_hedged=tr.n_hedged, hedge_wins=tr.hedge_wins,
+        n_failover=tr.n_failover, replica_traces=tr.replica_traces,
+        dram_served_mask=sc.dram_served, dram_hits_per_req=sc.hit_counts,
+        n_dram_hits=sc.n_hits, n_dram_misses=sc.n_misses,
+        n_dram_fills=sc.n_fills, dram_fill_bytes=sc.fill_bytes,
+        dram_evict_bytes=sc.evict_bytes)
+
+
 def replay(requests: list[Request], engine: RecFlashEngine,
            batcher_cfg: BatcherConfig | None = None,
            record_window: bool = False,
@@ -229,7 +361,8 @@ def replay(requests: list[Request], engine: RecFlashEngine,
            n_channels: int = 1,
            trigger: ThresholdTrigger | PeriodTrigger | None = None,
            live: LiveRemapConfig | None = None,
-           slo: SLOConfig | None = None) -> LaneTrace:
+           slo: SLOConfig | None = None,
+           host_cache: "HostCacheBinding | None" = None) -> LaneTrace:
     """Run one policy lane over the whole request stream.
 
     ``n_channels`` is the lane's concurrent-server count (see module
@@ -253,6 +386,14 @@ def replay(requests: list[Request], engine: RecFlashEngine,
     classes, admission, preemption boundaries, shed/degrade ladder
     (DESIGN.md §7). SLO and live remap are separate mid-stream control
     loops and do not compose. With ``slo=None`` this path is untouched.
+
+    With ``host_cache`` (a bound :class:`~repro.serving.host_cache.
+    HostCacheBinding`, DESIGN.md §10) the stream is short-circuited
+    through the host-DRAM tier first: fully-hit requests complete at
+    DRAM latency, only the miss residue enters this lane, and admitted
+    fills are charged as part of those residue batches. With
+    ``host_cache=None`` every path below is bit-identical to before the
+    tier existed (regression-tested in ``tests/test_host_cache.py``).
     """
     if slo is not None:
         if trigger is not None or live is not None:
@@ -261,7 +402,18 @@ def replay(requests: list[Request], engine: RecFlashEngine,
         from repro.serving.slo_scheduler import slo_replay
         return slo_replay(requests, engine, slo, batcher_cfg,
                           record_window=record_window,
-                          policy_name=policy_name, n_channels=n_channels)
+                          policy_name=policy_name, n_channels=n_channels,
+                          host_cache=host_cache)
+    if host_cache is not None:
+        return _host_cache_replay(
+            requests, host_cache,
+            lambda sub: replay(sub, engine, batcher_cfg,
+                               record_window=record_window,
+                               policy_name=policy_name,
+                               n_channels=n_channels, trigger=trigger,
+                               live=live),
+            name=policy_name or engine.policy.name,
+            n_channels=n_channels, slo=None)
     batcher = DynamicBatcher(batcher_cfg)
     name = policy_name or engine.policy.name
     n = len(requests)
@@ -459,7 +611,9 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
                    n_channels: int = 1,
                    trigger: ThresholdTrigger | PeriodTrigger | None = None,
                    live: LiveRemapConfig | None = None,
-                   slo: SLOConfig | None = None) -> LaneTrace:
+                   slo: SLOConfig | None = None,
+                   host_cache: "HostCacheBinding | None" = None
+                   ) -> LaneTrace:
     """Scatter-gather replay over N simulated SSDs (DESIGN.md §6.2).
 
     **Scatter** — the stream is routed once through the engine's
@@ -490,10 +644,25 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
     owning device is shed overall — its NaN sub-completion survives the
     max-gather, so the barrier rule needs no special case — and degraded
     on any device means degraded overall (DESIGN.md §7.5).
+
+    With ``host_cache`` the host-DRAM tier short-circuits the stream
+    *before* the scatter (DESIGN.md §10.2) — a fully-hit request never
+    fans out to any device — and only the miss residue is sharded.
     """
     if slo is not None and (trigger is not None or live is not None):
         raise ValueError("slo scheduling and live remap do not "
                          "compose; configure one mid-stream loop")
+    if host_cache is not None:
+        return _host_cache_replay(
+            requests, host_cache,
+            lambda sub: replay_sharded(sub, engine, batcher_cfg,
+                                       record_window=record_window,
+                                       policy_name=policy_name,
+                                       n_channels=n_channels,
+                                       trigger=trigger, live=live,
+                                       slo=slo),
+            name=policy_name or engine.policy.name,
+            n_channels=n_channels, slo=slo)
     nd = engine.plan.n_devices
     name = policy_name or engine.policy.name
     n = len(requests)

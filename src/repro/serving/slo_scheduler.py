@@ -60,6 +60,7 @@ from repro.serving.metrics import summarize, summarize_classes
 from repro.serving.workload import SLO_CLASSES, Request
 
 if TYPE_CHECKING:  # lazy at runtime (scheduler imports our slo_replay)
+    from repro.serving.host_cache import HostCacheBinding
     from repro.serving.scheduler import LaneTrace
 
 # class indices into SLO_CLASSES (priority order, highest first)
@@ -169,7 +170,8 @@ def slo_replay(requests: list[Request], engine: RecFlashEngine,
                batcher_cfg: BatcherConfig | None = None,
                record_window: bool = False,
                policy_name: str | None = None,
-               n_channels: int = 1) -> LaneTrace:
+               n_channels: int = 1,
+               host_cache: "HostCacheBinding | None" = None) -> LaneTrace:
     """Run one policy lane under the SLO discipline (module docstring).
 
     Same contract as :func:`repro.serving.scheduler.replay` — returns a
@@ -180,9 +182,24 @@ def slo_replay(requests: list[Request], engine: RecFlashEngine,
     latency/completion. Live remap is the other mid-stream control loop
     and is not composed with this one (``DeploymentConfig`` rejects the
     combination).
+
+    With ``host_cache`` (DESIGN.md §10.2) the host-DRAM tier
+    short-circuits the stream first — fully-hit requests complete at
+    DRAM latency regardless of class (the tier sits above the dispatch
+    discipline), and only the miss residue competes for channels here.
     """
     from repro.serving.scheduler import LaneTrace
 
+    if host_cache is not None:
+        from repro.serving.scheduler import _host_cache_replay
+        return _host_cache_replay(
+            requests, host_cache,
+            lambda sub: slo_replay(sub, engine, slo, batcher_cfg,
+                                   record_window=record_window,
+                                   policy_name=policy_name,
+                                   n_channels=n_channels),
+            name=policy_name or engine.policy.name,
+            n_channels=n_channels, slo=slo)
     batcher = DynamicBatcher(batcher_cfg)
     name = policy_name or engine.policy.name
     n = len(requests)

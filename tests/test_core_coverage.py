@@ -1,0 +1,141 @@
+"""Branch-level tests for the core tier (CI coverage floor, ISSUE 9).
+
+The CI coverage gate spans ``repro.serving`` *and* ``repro.core``; these
+tests pin the core branches the wider floor exposed: the degenerate and
+carried-state paths of the vectorised LRU evaluator (``page_cache.py``),
+the zero-traffic / merge / threshold paths of ``AccessStats``
+(``freq.py``), and the comparison-sort fallback of the coalescing fast
+path (``timeline._run_coalesced``) against the exact per-access loop.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import TableSpec
+from repro.core.freq import AccessStats
+from repro.core.page_cache import PageLRU, _count_earlier_leq, lru_hit_mask
+from repro.serving import Deployment, DeploymentConfig
+
+
+class TestLruHitMask:
+    def test_empty_stream_keeps_carried_state(self):
+        hits, state = lru_hit_mask(np.array([], dtype=np.int64), 4,
+                                   state=(7, 3))
+        assert hits.size == 0
+        assert state == [7, 3]          # untouched, LRU -> MRU
+
+    def test_empty_stream_empty_state(self):
+        hits, state = lru_hit_mask(np.array([], dtype=np.int64), 4)
+        assert hits.size == 0 and state == []
+
+    def test_single_access(self):
+        hits, state = lru_hit_mask(np.array([5]), 2)
+        assert hits.tolist() == [False] and state == [5]
+
+    def test_prefix_priming_hits_carried_residents(self):
+        # 3 resident, slot for all: first re-touches are hits
+        hits, state = lru_hit_mask(np.array([1, 2, 9]), 4, state=(0, 1, 2))
+        assert hits.tolist() == [True, True, False]
+        assert state == [0, 1, 2, 9]
+
+    def test_run_tails_always_hit(self):
+        hits, state = lru_hit_mask(np.array([4, 4, 4, 8, 8]), 1)
+        assert hits.tolist() == [False, True, True, False, True]
+        assert state == [8]
+
+    def test_matches_per_access_replay(self):
+        rng = np.random.default_rng(0)
+        for n_slots in (1, 3, 8):
+            pages = rng.integers(0, 12, size=200)
+            ref = PageLRU(n_slots)
+            ref_hits = [ref.access(int(p)) for p in pages]
+            vec = PageLRU(n_slots)
+            hits = vec.bulk_access(pages)
+            assert hits.tolist() == ref_hits
+            assert vec.residents() == ref.residents()
+            assert (vec.hits, vec.misses) == (ref.hits, ref.misses)
+
+
+class TestCountEarlierLeq:
+    def test_degenerate_sizes(self):
+        assert _count_earlier_leq(np.array([], dtype=np.int64)).size == 0
+        assert _count_earlier_leq(np.array([5])).tolist() == [0]
+
+    def test_matches_quadratic_reference(self):
+        rng = np.random.default_rng(1)
+        for _ in range(20):
+            vals = rng.integers(-3, 9, size=int(rng.integers(2, 60)))
+            ref = [int(np.sum(vals[:i] <= vals[i]))
+                   for i in range(vals.size)]
+            assert _count_earlier_leq(vals).tolist() == ref
+
+
+class TestPageLRU:
+    def test_needs_a_slot(self):
+        with pytest.raises(ValueError, match="at least one slot"):
+            PageLRU(0)
+
+    def test_invalidate_and_clear(self):
+        c = PageLRU(2)
+        c.access(1)
+        c.access(2)
+        assert 1 in c and len(c) == 2
+        c.invalidate(1)
+        assert 1 not in c and len(c) == 1
+        c.invalidate(99)                # absent: no-op
+        c.clear()
+        assert len(c) == 0
+        assert not c.access(2)          # cold again after clear
+
+    def test_hit_rate_zero_traffic(self):
+        assert PageLRU(2).hit_rate == 0.0
+
+
+class TestAccessStats:
+    def test_unique_access_rate_zero_traffic(self):
+        st = AccessStats(counts=np.zeros(8, dtype=np.int64))
+        assert st.unique_access_rate() == 0.0
+
+    def test_unique_access_rate(self):
+        st = AccessStats.from_trace(np.array([0, 0, 3, 3, 3, 5]), 8)
+        assert st.unique_access_rate() == pytest.approx(3 / 6)
+
+    def test_merge(self):
+        a = AccessStats.from_trace(np.array([0, 1]), 4)
+        b = AccessStats.from_trace(np.array([1, 2]), 4)
+        assert a.merge(b).counts.tolist() == [1, 2, 1, 0]
+
+    def test_hot_threshold(self):
+        st = AccessStats(counts=np.array([5, 1, 9, 0]))
+        assert st.hot_threshold(0.25) == 9      # top-1 boundary
+        assert st.hot_threshold(0.5) == 5
+        assert st.hot_threshold(1.0) == 0
+
+
+class TestCoalescedSortFallback:
+    def test_argsort_fallback_matches_exact(self):
+        """window=1 inflates the grouping-key space past the counting-sort
+        bound (``k_space > max(4n, 1<<16)``), forcing the stable-argsort
+        fallback of ``_run_coalesced``; the result must match the exact
+        per-access loop on the same stream and starting state."""
+        dep = Deployment(DeploymentConfig(
+            tables=[TableSpec(512, 64)] * 2, policies=("recflash",),
+            lookups=4, sample_inferences=32, seed=5))
+        sim = dep.engines["recflash"].sim
+        rng = np.random.default_rng(2)
+        n = 6000
+        tables = rng.integers(0, 2, size=n)
+        rows = rng.integers(0, 512, size=n)
+        npl = int(sim.part.n_planes)
+        assert n * npl * sim._n_page_ids > max(4 * n, 1 << 16), \
+            "case no longer reaches the argsort fallback"
+        sim.reset_state()
+        fast = sim.run(tables, rows, window=1)
+        sim.reset_state()
+        exact = sim.run(tables, rows, window=1, force_exact=True)
+        assert fast.latency_us == pytest.approx(exact.latency_us)
+        assert fast.read_energy_uj == pytest.approx(exact.read_energy_uj)
+        assert fast.n_page_reads == exact.n_page_reads
+        assert fast.n_buffer_hits == exact.n_buffer_hits
+        assert fast.n_cache_hits == exact.n_cache_hits
+        assert fast.bytes_out == exact.bytes_out

@@ -1,0 +1,461 @@
+"""Invariants of the host-DRAM cache tier (DESIGN.md §10).
+
+Two layers over the same invariant checkers, mirroring
+``test_slo_scheduler.py``:
+
+* a deterministic seeded sweep (``TestInvariantSweep``) — 200+ generated
+  cases per invariant, runs everywhere, no third-party dependency;
+* hypothesis property tests (``TestInvariantProperties``) — the same
+  checkers driven by minimizing search, skipped where hypothesis is not
+  installed (CI installs it).
+
+Invariants:
+
+1. **Count conservation** — requests served from DRAM plus requests that
+   reached a device equal the offered count, and access-level
+   ``n_dram_hits + n_dram_misses`` equals the stream's total lookups.
+2. **No hit before a charged fill** — a row never hits the tier before
+   an earlier request (in replay order) missed on it and dispatched it
+   to the device (§10.2: no free warmup).
+3. **Byte conservation vs an independent model** — fills, evictions,
+   residency, and hit counters match a pure-python re-simulation of the
+   admission/eviction semantics, and
+   ``fill_bytes - evict_bytes == resident_bytes`` always.
+4. **Disabled-tier bit-identity** — a deployment built from a *legacy*
+   config blob (no ``host_cache`` key) replays bit-identically to the
+   plain ``replay``.
+5. **Admission monotonicity** (freq, property layer) — an eviction never
+   removes a row whose observed window count strictly dominates every
+   remaining resident's.
+6. **Rid-relabeling invariance** (property layer) — with strictly
+   distinct arrivals, relabeling request ids changes nothing about tier
+   state or who hits.
+
+Plus deterministic multi-model sharing tests (§10.3): quota isolation,
+quota/capacity validation, config round-trip.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import TableSpec
+from repro.serving import (BatcherConfig, Deployment, DeploymentConfig,
+                           HostCache, HostCacheConfig, Request, replay)
+from repro.serving.host_cache import short_circuit
+
+TABLES = [TableSpec(512, 64), TableSpec(512, 64)]
+
+
+@pytest.fixture(scope="module")
+def dep():
+    """Small shared deployment: its sampled stats feed every binding and
+    its lane replays the integration cases (engine state is reset at the
+    top of every replay, so reuse across cases is exact)."""
+    return Deployment(DeploymentConfig(
+        tables=TABLES, policies=("recflash",), lookups=4,
+        sample_inferences=32, seed=5))
+
+
+@pytest.fixture(scope="module")
+def legacy_dep():
+    """Deployment round-tripped through a config blob that predates the
+    tier (no ``host_cache`` key) — must be inert (invariant 4)."""
+    cfg = DeploymentConfig(tables=TABLES, policies=("recflash",),
+                           lookups=4, sample_inferences=32, seed=5)
+    blob = cfg.to_dict()
+    del blob["host_cache"]
+    return Deployment(DeploymentConfig.from_dict(blob))
+
+
+def Req(rid, arrival, tables, rows):
+    return Request(rid=rid, arrival_us=float(arrival),
+                   tables=np.asarray(tables, dtype=np.int64),
+                   rows=np.asarray(rows, dtype=np.int64))
+
+
+def make_case(seed: int):
+    """One generated tier case: stream + cache knobs + batcher shape."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 40))
+    gaps = rng.exponential(float(rng.choice([20.0, 500.0])), n)
+    arrivals = np.cumsum(gaps)
+    lookups = int(rng.integers(1, 7))
+    row_space = int(rng.choice([24, 512]))      # hit-heavy or sparse
+    reqs = [Req(i, arrivals[i], rng.integers(0, 2, size=lookups),
+                rng.integers(0, row_space, size=lookups))
+            for i in range(n)]
+    cfg = HostCacheConfig(
+        dram_bytes=int(rng.choice([2048, 8192, 65536])),
+        policy=str(rng.choice(["freq", "lru"])),
+        admit_frac=float(rng.choice([0.1, 0.5, 1.0])),
+        age_every=int(rng.choice([0, 16, 4096])),
+        quota=float(rng.choice([0.5, 1.0])))
+    batcher = BatcherConfig(max_batch=int(rng.integers(1, 9)),
+                            max_wait_us=float(rng.choice([0.0, 200.0])))
+    nc = int(rng.integers(1, 3))
+    return reqs, cfg, batcher, nc
+
+
+def bind(dep, cfg):
+    return HostCache(cfg.dram_bytes).register(
+        cfg, list(dep.cfg.tables), dep.stats)
+
+
+def replay_order(reqs):
+    rids = np.array([r.rid for r in reqs])
+    arr = np.array([r.arrival_us for r in reqs])
+    return np.lexsort((rids, arr))
+
+
+# ---------------------------------------------------------------- checkers
+
+def check_count_conservation(dep, seed):
+    reqs, cfg, batcher, nc = make_case(seed)
+    binding = bind(dep, cfg)
+    tr = replay(reqs, dep.engines["recflash"], batcher, n_channels=nc,
+                host_cache=binding)
+    n = len(reqs)
+    served = np.isfinite(tr.completions_us)
+    assert served.all()                     # plain replay never sheds
+    assert tr.dram_served_mask is not None
+    assert tr.dram_served_mask.shape == (n,)
+    # request-level: DRAM-served and device-served partition the stream
+    n_dram = int(tr.dram_served_mask.sum())
+    assert n_dram + (n - n_dram) == n
+    # access-level: hits + misses recount the stream's lookups exactly
+    total_lookups = sum(r.n_lookups for r in reqs)
+    assert tr.n_dram_hits + tr.n_dram_misses == total_lookups
+    assert tr.dram_hits_per_req is not None
+    assert int(tr.dram_hits_per_req.sum()) == tr.n_dram_hits
+    # a fully-DRAM-served request hit on every access, and vice versa
+    per_req_lookups = np.array([r.n_lookups for r in reqs])
+    assert np.array_equal(tr.dram_served_mask,
+                          tr.dram_hits_per_req == per_req_lookups)
+    rep = tr.report
+    assert rep.n_dram_hits == tr.n_dram_hits
+    assert rep.n_dram_misses == tr.n_dram_misses
+    assert rep.n_dram_fills == tr.n_dram_fills
+    assert 0.0 <= rep.dram_hit_rate <= 1.0
+
+
+def check_no_hit_before_fill(dep, seed):
+    reqs, cfg, _, _ = make_case(seed)
+    binding = bind(dep, cfg)
+    binding.begin_stream()
+    offs = np.zeros(len(TABLES) + 1, dtype=np.int64)
+    np.cumsum([t.n_rows for t in TABLES], out=offs[1:])
+    dispatched: set[int] = set()
+    for i in replay_order(reqs):
+        r = reqs[i]
+        hits = binding.lookup(r.tables, r.rows)
+        flat = offs[r.tables] + r.rows
+        for f, h in zip(flat.tolist(), hits.tolist(), strict=True):
+            if h:
+                assert f in dispatched, (
+                    f"row {f} hit before any device dispatch (seed {seed})")
+        # the miss residue is what reaches the device — fills ride it
+        dispatched.update(flat[~hits].tolist())
+
+
+class RefCache:
+    """Independent pure-python model of the binding semantics (§10.1-2).
+
+    Dict-based where the binding is array/heap-based; victim selection by
+    ``min()`` over the resident set where the binding uses a lazy heap —
+    agreement is evidence both implement the documented rule.
+    """
+
+    def __init__(self, cfg, tables, stats):
+        self.cfg = cfg
+        self.quota_bytes = int(cfg.quota * cfg.dram_bytes)
+        self.offs = np.zeros(len(tables) + 1, dtype=np.int64)
+        np.cumsum([t.n_rows for t in tables], out=self.offs[1:])
+        self.vec = {}
+        self.admissible = set()
+        for t, (spec, st) in enumerate(zip(tables, stats, strict=True)):
+            for row in range(spec.n_rows):
+                self.vec[int(self.offs[t]) + row] = spec.vec_bytes
+            if cfg.policy == "freq":
+                n_adm = max(1, int(cfg.admit_frac * spec.n_rows))
+                for row in st.rank_order()[:n_adm].tolist():
+                    self.admissible.add(int(self.offs[t]) + row)
+        self.resident: set[int] = set()
+        self.counts: dict[int, int] = {}
+        self.last: dict[int, int] = {}
+        self.tick = 0
+        self.resident_bytes = 0
+        self.n_hits = self.n_misses = self.n_fills = 0
+        self.fill_bytes = self.evict_bytes = 0
+
+    def _admits(self, f):
+        return self.cfg.policy == "lru" or f in self.admissible
+
+    def _k(self, f):
+        if self.cfg.policy == "freq":
+            return (self.counts.get(f, 0), self.last[f], f)
+        return (self.last[f], f)
+
+    def _victim(self):
+        return min(self.resident, key=self._k) if self.resident else None
+
+    def _evict_one(self):
+        v = self._victim()
+        if v is None:
+            return False
+        self.resident.discard(v)
+        del self.last[v]
+        self.resident_bytes -= self.vec[v]
+        self.evict_bytes += self.vec[v]
+        return True
+
+    def _insert(self, f):
+        self.resident.add(f)
+        self.last[f] = self.tick
+        self.resident_bytes += self.vec[f]
+        self.n_fills += 1
+        self.fill_bytes += self.vec[f]
+
+    def access(self, f):
+        self.tick += 1
+        age = self.cfg.age_every if self.cfg.policy == "freq" else 0
+        if age and self.tick % age == 0:
+            self.counts = {g: c // 2 for g, c in self.counts.items()}
+        self.counts[f] = self.counts.get(f, 0) + 1
+        if f in self.resident:
+            self.last[f] = self.tick
+            return
+        vec = self.vec[f]
+        if vec > self.quota_bytes:
+            return
+        if self.resident_bytes + vec <= self.quota_bytes:
+            self._insert(f)
+            return
+        if not self._admits(f):
+            v = self._victim()
+            if v is None or self.counts.get(f, 0) <= self.counts.get(v, 0):
+                return
+        while self.resident_bytes + vec > self.quota_bytes:
+            if not self._evict_one():
+                return
+        self._insert(f)
+
+    def lookup(self, tables, rows):
+        flat = (self.offs[np.asarray(tables)]
+                + np.asarray(rows)).tolist()
+        hits = [f in self.resident for f in flat]
+        self.n_hits += sum(hits)
+        self.n_misses += len(hits) - sum(hits)
+        for f in flat:
+            self.access(int(f))
+        return hits
+
+
+def check_reference_model(dep, seed):
+    reqs, cfg, _, _ = make_case(seed)
+    binding = bind(dep, cfg)
+    res = short_circuit(binding, reqs)
+    ref = RefCache(cfg, list(dep.cfg.tables), dep.stats)
+    ref_hits = np.zeros(len(reqs), dtype=np.int64)
+    for i in replay_order(reqs):
+        r = reqs[i]
+        ref_hits[i] = sum(ref.lookup(r.tables, r.rows))
+    assert np.array_equal(res.hit_counts, ref_hits), f"seed {seed}"
+    assert res.n_hits == ref.n_hits and res.n_misses == ref.n_misses
+    assert res.n_fills == ref.n_fills
+    assert res.fill_bytes == ref.fill_bytes
+    assert res.evict_bytes == ref.evict_bytes
+    assert binding.resident_bytes == ref.resident_bytes
+    assert set(binding.residents().tolist()) == ref.resident
+    # bytes conservation: what went in minus what went out is resident
+    assert res.fill_bytes - res.evict_bytes == binding.resident_bytes
+    assert binding.resident_bytes <= binding.quota_bytes
+
+
+def check_disabled_bit_identity(legacy_dep, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 30))
+    rate = float(rng.choice([200.0, 2000.0]))
+    reqs = legacy_dep.stream(n, rate, seed=seed, arrival_seed=seed + 7)
+    t_dep = legacy_dep.run_stream(reqs)["recflash"]
+    t_plain = replay(reqs, legacy_dep.engines["recflash"],
+                     legacy_dep.cfg.batcher, policy_name="recflash",
+                     n_channels=legacy_dep.cfg.n_channels)
+    assert np.array_equal(t_dep.latencies_us, t_plain.latencies_us)
+    assert np.array_equal(t_dep.completions_us, t_plain.completions_us)
+    assert np.array_equal(t_dep.batch_channels, t_plain.batch_channels)
+    assert np.array_equal(t_dep.batch_starts_us, t_plain.batch_starts_us)
+    assert t_dep.busy_us == t_plain.busy_us
+    assert t_dep.dram_served_mask is None
+    assert t_dep.n_dram_hits == 0 and t_dep.n_dram_fills == 0
+
+
+def check_admission_monotonicity(dep, seed):
+    reqs, cfg, _, _ = make_case(seed)
+    if cfg.policy != "freq":
+        cfg = HostCacheConfig(**{**cfg.to_dict(), "policy": "freq"})
+    binding = bind(dep, cfg)
+    binding.track_evictions = True
+    short_circuit(binding, reqs)
+    for victim, v_count, max_other in binding.eviction_log:
+        if max_other >= 0:
+            assert v_count <= max_other, (
+                f"evicted row {victim} (count {v_count}) dominated every "
+                f"resident (max other count {max_other}) (seed {seed})")
+
+
+def check_rid_relabel_invariance(dep, seed):
+    reqs, cfg, _, _ = make_case(seed)
+    rng = np.random.default_rng(seed + 1)
+    # strictly distinct arrivals: replay order is arrival order alone
+    for i, r in enumerate(reqs):
+        r.arrival_us = float(i) * 10.0 + float(rng.random())
+    perm = rng.permutation(len(reqs))
+    relabeled = [Req(int(perm[i]), r.arrival_us, r.tables, r.rows)
+                 for i, r in enumerate(reqs)]
+    b0, b1 = bind(dep, cfg), bind(dep, cfg)
+    r0 = short_circuit(b0, reqs)
+    r1 = short_circuit(b1, relabeled)
+    assert np.array_equal(r0.hit_counts, r1.hit_counts)
+    assert np.array_equal(r0.dram_served, r1.dram_served)
+    assert np.array_equal(r0.dram_done_us, r1.dram_done_us)
+    assert (r0.n_fills, r0.fill_bytes, r0.evict_bytes) \
+        == (r1.n_fills, r1.fill_bytes, r1.evict_bytes)
+    assert np.array_equal(b0.residents(), b1.residents())
+
+
+# ------------------------------------------------------- deterministic sweep
+
+N_SWEEP = 220                       # > 200 examples per invariant
+
+
+class TestInvariantSweep:
+    def test_count_conservation(self, dep):
+        for seed in range(N_SWEEP):
+            check_count_conservation(dep, seed)
+
+    def test_no_hit_before_fill(self, dep):
+        for seed in range(N_SWEEP):
+            check_no_hit_before_fill(dep, seed)
+
+    def test_reference_model(self, dep):
+        for seed in range(N_SWEEP):
+            check_reference_model(dep, seed)
+
+    def test_disabled_bit_identity(self, legacy_dep):
+        for seed in range(N_SWEEP):
+            check_disabled_bit_identity(legacy_dep, seed)
+
+    def test_admission_monotonicity(self, dep):
+        for seed in range(N_SWEEP):
+            check_admission_monotonicity(dep, seed)
+
+    def test_rid_relabel_invariance(self, dep):
+        for seed in range(N_SWEEP):
+            check_rid_relabel_invariance(dep, seed)
+
+
+# ------------------------------------------------------- sharing & config
+
+class TestMultiModelSharing:
+    def test_quota_isolation(self, dep):
+        """Two models on one tier: B's traffic never moves A's residents
+        and the shared budget is respected (DESIGN.md §10.3)."""
+        tier = HostCache(8192)
+        cfg_a = HostCacheConfig(dram_bytes=8192, policy="freq",
+                                admit_frac=0.5, quota=0.5)
+        cfg_b = HostCacheConfig(dram_bytes=8192, policy="lru", quota=0.5)
+        ba = tier.register(cfg_a, list(dep.cfg.tables), dep.stats)
+        bb = tier.register(cfg_b, list(dep.cfg.tables), dep.stats)
+        reqs_a, _, _, _ = make_case(3)
+        reqs_b, _, _, _ = make_case(4)
+        short_circuit(ba, reqs_a)
+        before = ba.residents().copy()
+        bytes_before = ba.resident_bytes
+        short_circuit(bb, reqs_b)
+        assert np.array_equal(ba.residents(), before)
+        assert ba.resident_bytes == bytes_before
+        assert tier.resident_bytes() \
+            == ba.resident_bytes + bb.resident_bytes
+        assert tier.resident_bytes() <= tier.dram_bytes
+        assert ba.quota_bytes + bb.quota_bytes <= tier.dram_bytes
+
+    def test_quota_overcommit_rejected(self, dep):
+        tier = HostCache(8192)
+        tier.register(HostCacheConfig(dram_bytes=8192, quota=0.7),
+                      list(dep.cfg.tables), dep.stats)
+        with pytest.raises(ValueError, match="quotas exceed"):
+            tier.register(HostCacheConfig(dram_bytes=8192, quota=0.4),
+                          list(dep.cfg.tables), dep.stats)
+
+    def test_capacity_mismatch_rejected(self, dep):
+        tier = HostCache(8192)
+        with pytest.raises(ValueError, match="agree on dram_bytes"):
+            tier.register(HostCacheConfig(dram_bytes=4096),
+                          list(dep.cfg.tables), dep.stats)
+
+
+class TestConfig:
+    def test_round_trip(self):
+        cfg = HostCacheConfig(dram_bytes=1 << 16, policy="lru",
+                              admit_frac=0.1, age_every=64, quota=0.25)
+        assert HostCacheConfig.from_dict(cfg.to_dict()) == cfg
+
+    def test_deployment_round_trip_and_legacy(self):
+        cfg = DeploymentConfig(tables=TABLES, policies=("recflash",),
+                               host_cache=HostCacheConfig(dram_bytes=4096))
+        blob = cfg.to_dict()
+        assert DeploymentConfig.from_dict(blob) == cfg
+        del blob["host_cache"]
+        assert DeploymentConfig.from_dict(blob).host_cache is None
+
+    @pytest.mark.parametrize("kw", [
+        dict(dram_bytes=0), dict(policy="arc"), dict(admit_frac=0.0),
+        dict(admit_frac=1.5), dict(t_dram_us=-1.0), dict(age_every=-1),
+        dict(quota=0.0), dict(quota=1.5)])
+    def test_validation(self, kw):
+        with pytest.raises(ValueError):
+            HostCacheConfig(**kw)
+
+    def test_shared_tier_without_config_rejected(self, dep):
+        with pytest.raises(ValueError, match="no host_cache"):
+            Deployment(dep.cfg, host_cache=HostCache(4096))
+
+
+# ------------------------------------------------------------ hypothesis
+# A plain import guard, not importorskip: that would skip the whole
+# module and take the deterministic sweep above down with it.
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SEEDS = st.integers(0, 2 ** 24)
+
+    class TestInvariantProperties:
+        @given(SEEDS)
+        @settings(max_examples=200, deadline=None)
+        def test_count_conservation(self, dep, seed):
+            check_count_conservation(dep, seed)
+
+        @given(SEEDS)
+        @settings(max_examples=200, deadline=None)
+        def test_no_hit_before_fill(self, dep, seed):
+            check_no_hit_before_fill(dep, seed)
+
+        @given(SEEDS)
+        @settings(max_examples=200, deadline=None)
+        def test_reference_model(self, dep, seed):
+            check_reference_model(dep, seed)
+
+        @given(SEEDS)
+        @settings(max_examples=200, deadline=None)
+        def test_admission_monotonicity(self, dep, seed):
+            check_admission_monotonicity(dep, seed)
+
+        @given(SEEDS)
+        @settings(max_examples=200, deadline=None)
+        def test_rid_relabel_invariance(self, dep, seed):
+            check_rid_relabel_invariance(dep, seed)

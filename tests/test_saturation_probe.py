@@ -1,0 +1,57 @@
+"""Regression test for the shared saturation probe (ISSUE 9 satellite).
+
+``fig_slo_tail`` and ``fig_fault_tail`` used to carry private copies of
+the backlogged saturation probe; both now delegate to the memoised
+``benchmarks.common.saturation_rate``. Pin the contract: identical
+configs see the identical measured rate through either figure's
+accessor, and the probe replays a given config exactly once.
+"""
+
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "benchmarks"))
+
+import common                                        # noqa: E402
+import fig_fault_tail                                # noqa: E402
+import fig_slo_tail                                  # noqa: E402
+from repro.core.engine import TableSpec              # noqa: E402
+from repro.serving import Deployment, DeploymentConfig  # noqa: E402
+
+
+@pytest.fixture()
+def dep():
+    return Deployment(DeploymentConfig(
+        tables=[TableSpec(512, 64)] * 2, policies=("recflash",),
+        lookups=4, sample_inferences=32, seed=5, n_channels=2))
+
+
+def test_figures_share_one_measured_rate(dep, monkeypatch):
+    common._SATURATION_CACHE.clear()
+    n_probes = 0
+    real_replay = common.replay
+
+    def counting_replay(*args, **kwargs):
+        nonlocal n_probes
+        n_probes += 1
+        return real_replay(*args, **kwargs)
+
+    monkeypatch.setattr(common, "replay", counting_replay)
+    r_slo = fig_slo_tail.saturation_rate(dep, "recflash", n_probe=50)
+    r_fault = fig_fault_tail.saturation_rate(dep, "recflash", n_probe=50)
+    r_common = common.saturation_rate(dep, "recflash", n_probe=50)
+    assert r_slo == r_fault == r_common
+    assert r_slo > 0.0
+    assert n_probes == 1, "identical configs must probe exactly once"
+
+
+def test_distinct_configs_probe_separately(dep):
+    common._SATURATION_CACHE.clear()
+    r50 = common.saturation_rate(dep, "recflash", n_probe=50)
+    r80 = common.saturation_rate(dep, "recflash", n_probe=80)
+    assert len(common._SATURATION_CACHE) == 2
+    # both are estimates of the same lane's capacity
+    assert r50 == pytest.approx(r80, rel=0.5)
