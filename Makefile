@@ -57,9 +57,14 @@ lint:
 	ruff check src tests benchmarks examples tools
 
 # repo-specific determinism static analysis (tools/repro_lint, DESIGN.md §8):
-# simulated-clock purity, RNG discipline, ordering hazards, units
-# discipline, API discipline. Fails on new findings or stale baseline
-# entries; regenerate the baseline with
+# RL001-RL005 per-file rules (simulated-clock purity, RNG discipline,
+# ordering hazards, units discipline, API discipline) plus the RL006-RL010
+# cross-module dataflow rules (NaN contract, trace-counter conservation,
+# config round-trip completeness, Pallas DMA discipline, alias-resolved
+# API discipline) running on a one-pass project symbol graph cached at
+# tools/repro_lint/.graph_cache.json (sha256-keyed, safe to delete).
+# Fails on new findings or stale baseline entries; regenerate the
+# baseline with
 #   $(PY) -m tools.repro_lint --update-baseline
 lint-deep:
 	$(PY) -m tools.repro_lint

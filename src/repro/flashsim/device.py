@@ -60,12 +60,12 @@ class FlashPart:
     e_io_per_byte: float = 0.001     # uJ/byte on the IO bus (NVSim-scale)
     e_page_prog: float | None = None  # uJ; default = 2x read energy
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.e_page_prog is None:
             object.__setattr__(self, "e_page_prog", 2.0 * self.e_page_read)
 
     def rewrite_latency_us(self, n_pages: int, n_blocks: int, t_ca: float,
-                           plane_counts=None) -> float:
+                           plane_counts: np.ndarray | None = None) -> float:
         """Latency to read-modify-program ``n_pages`` + erase ``n_blocks``.
 
         Per page: C/A + array read (``t_r``, the old page is read back to

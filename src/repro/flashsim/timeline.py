@@ -133,7 +133,8 @@ class SLSSimulator:
     def __init__(self, part: FlashPart, policy: PolicyConfig,
                  mappings: list[Mapping], timing: FlashTiming = TIMING,
                  cache_cfg: CacheConfig | None = None,
-                 fault: FaultConfig | None = None, fault_stream: int = 0):
+                 fault: FaultConfig | None = None,
+                 fault_stream: int = 0) -> None:
         self.part = part
         self.policy = policy
         self.timing = timing
@@ -180,7 +181,7 @@ class SLSSimulator:
         self._drain_pos[:] = 0
         if self.cache is not None:
             self.cache.clear()
-        if self.fault is not None:
+        if self.fault is not None and self._buffer_failed is not None:
             self._buffer_failed[:] = False
             self._fault_rng = np.random.default_rng(
                 self.fault.retry_seed(self._fault_stream))
@@ -340,12 +341,13 @@ class SLSSimulator:
         deeper demand means ECC gives up (uncorrectable).
         """
         f = self.fault
+        rng = self._fault_rng
         k = np.zeros(n_reads, dtype=np.int64)
         uce = np.zeros(n_reads, dtype=bool)
         p0 = self._fail_p
-        if p0 <= 0.0 or n_reads == 0:
+        if f is None or rng is None or p0 <= 0.0 or n_reads == 0:
             return k, uce
-        u = self._fault_rng.random(n_reads)
+        u = rng.random(n_reads)
         failing = u < p0
         if not failing.any():
             return k, uce
@@ -365,8 +367,9 @@ class SLSSimulator:
         k[failing] = np.minimum(kd, f.max_retries)
         return k, uce
 
-    def _fault_plane(self, p: int, pp, r, plane_tr, res, hist
-                     ) -> tuple[np.ndarray, int, int]:
+    def _fault_plane(self, p: int, pp: np.ndarray, r: np.ndarray,
+                     plane_tr: np.ndarray, res: SimResult,
+                     hist: np.ndarray) -> tuple[np.ndarray, int, int]:
         """Fault pass for one plane of a (possibly collapsed) stream.
 
         Samples the retry ladder for the plane's page reads, adds their
@@ -380,6 +383,8 @@ class SLSSimulator:
         charges), and the total extra array reads (energy).
         """
         part = self.part
+        buffer_failed = self._buffer_failed
+        assert buffer_failed is not None   # only called with faults active
         read_pages = pp[r]
         k, uce = self._sample_retries(read_pages.size)
         extra_tr = int(k.sum())
@@ -390,13 +395,15 @@ class SLSSimulator:
         res.n_uncorrectable += int(uce.sum())
         res.n_badblock_reads += n_bad
         hist += np.bincount(k, minlength=hist.size)
-        head_failed = np.concatenate(([self._buffer_failed[p]], uce))
+        head_failed = np.concatenate(([buffer_failed[p]], uce))
         seg = np.cumsum(r)
         failed = head_failed[seg]
-        self._buffer_failed[p] = bool(head_failed[seg[-1]])
+        buffer_failed[p] = bool(head_failed[seg[-1]])
         return failed, n_bad, extra_tr + n_bad
 
-    def _run_vectorized(self, planes, pages, slots, vec_bytes) -> SimResult:
+    def _run_vectorized(self, planes: np.ndarray, pages: np.ndarray,
+                        slots: np.ndarray,
+                        vec_bytes: np.ndarray) -> SimResult:
         """Fast path for no-cache policies — bitwise identical to the loop."""
         n = pages.size
         part = self.part
@@ -490,7 +497,9 @@ class SLSSimulator:
             res.n_failed_lookups = int(failed.sum())
         return res
 
-    def _run_coalesced(self, planes, pages, vec_bytes, wid, n) -> SimResult:
+    def _run_coalesced(self, planes: np.ndarray, pages: np.ndarray,
+                       vec_bytes: np.ndarray, wid: np.ndarray | None,
+                       n: int) -> SimResult:
         """Fast path for coalescing, non-drain policies (DESIGN.md §2.3).
 
         Coalescing sorts each window's accesses by (plane, page), so equal
@@ -576,7 +585,9 @@ class SLSSimulator:
         res.energy_uj += e_sram
         return res
 
-    def _plane_pass(self, res, planes, pages, vb, counts) -> None:
+    def _plane_pass(self, res: SimResult, planes: np.ndarray,
+                    pages: np.ndarray, vb: np.ndarray,
+                    counts: np.ndarray) -> None:
         """Weighted page-buffer pass over a collapsed access stream.
 
         ``counts[i]`` raw accesses coalesce onto collapsed element ``i``
@@ -638,8 +649,9 @@ class SLSSimulator:
             res.failed = failed
             res.n_failed_lookups = int(counts[failed].sum())
 
-    def _run_vectorized_cached(self, planes, pages, slots,
-                               vec_bytes) -> SimResult:
+    def _run_vectorized_cached(self, planes: np.ndarray,
+                               pages: np.ndarray, slots: np.ndarray,
+                               vec_bytes: np.ndarray) -> SimResult:
         """Fast path for the P$ policy (DESIGN.md §2.3).
 
         The whole-stream LRU hit mask comes from the reuse-distance bulk
@@ -649,7 +661,9 @@ class SLSSimulator:
         goes through the same no-cache vectorised path. Identical results
         to the exact loop, including carried cache and buffer state.
         """
-        hits = self.cache.bulk_access(pages)
+        cache = self.cache
+        assert cache is not None           # P$ policies always build one
+        hits = cache.bulk_access(pages)
         miss = ~hits
         res = self._run_vectorized(planes[miss], pages[miss], slots[miss],
                                    vec_bytes[miss])
@@ -684,7 +698,9 @@ class SLSSimulator:
         n_pages = -(-n_rows // vpp)
         n_blocks = -(-n_pages // part.pages_per_block)
         lat = part.rewrite_latency_us(n_pages, n_blocks, self.timing.t_ca)
-        energy = n_pages * (part.e_page_read + part.e_page_prog)
+        e_prog = part.e_page_prog
+        assert e_prog is not None          # set by FlashPart.__post_init__
+        energy = n_pages * (part.e_page_read + e_prog)
         return lat, energy
 
     def program_pass(self, plane_counts: np.ndarray,
@@ -710,7 +726,9 @@ class SLSSimulator:
             n_pages, n_blocks, self.timing.t_ca,
             plane_counts=plane_counts if self.policy.plane_parallel
             else None)
-        energy = n_pages * (part.e_page_read + part.e_page_prog)
+        e_prog = part.e_page_prog
+        assert e_prog is not None          # set by FlashPart.__post_init__
+        energy = n_pages * (part.e_page_read + e_prog)
         self.reset_state()
         return ProgramResult(latency_us=lat, energy_uj=energy,
                              n_pages=n_pages, n_blocks=n_blocks,

@@ -580,10 +580,10 @@ def replay(requests: list[Request], engine: RecFlashEngine,
         # sentinel as shed, told apart by failed_mask)
         latencies[failed_mask] = np.nan
         completions[failed_mask] = np.nan
-        fin = completions[np.isfinite(completions)]
-        makespan = (float(fin.max()) - first_arrival) if fin.size else 0.0
-    else:
-        makespan = (float(completions.max()) - first_arrival) if n else 0.0
+    # makespan spans the served subset only; NaN completions (failed
+    # requests) must never leak into it regardless of the fault lane
+    fin = completions[np.isfinite(completions)]
+    makespan = (float(fin.max()) - first_arrival) if fin.size else 0.0
     # device_busy_frac = mean per-channel utilisation (== total busy /
     # makespan for a single-channel lane, unchanged from the old report).
     report = summarize(name, latencies, makespan,
@@ -817,6 +817,18 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
     if failed_final is not None and failed_final.any():
         # a failure no replica recovered fails the whole request
         completions[failed_final] = np.nan
+    # detect-time gather: the host notices a request failed when the
+    # *first* owning device's failure is detected (fmin ignores the NaN
+    # sentinel on healthy devices); requests a replica recovered carry
+    # no detect time, like in the single-device lane.
+    failed_detect = None
+    if failed_final is not None:
+        failed_detect = np.full(n, np.nan)
+        for d, tr in enumerate(device_traces):
+            if members[d] and tr.failed_detect_us is not None:
+                pos = np.asarray(members[d], dtype=np.int64)
+                np.fmin.at(failed_detect, pos, tr.failed_detect_us)
+        failed_detect[~failed_final] = np.nan
     latencies = completions - arrivals
     # SLO gather extras: class from the parent requests; shed overall iff
     # any owning device shed (the NaN already encodes it); degraded
@@ -912,7 +924,7 @@ def replay_sharded(requests: list[Request], engine: ShardedEngine,
                      slo_classes=slo_classes, shed_mask=shed_mask,
                      degraded_mask=degraded_mask, n_preempted=n_preempted,
                      slo_events=slo_events,
-                     failed_mask=failed_final,
+                     failed_mask=failed_final, failed_detect_us=failed_detect,
                      n_retries=n_retries, n_uncorrectable=n_uce,
                      n_badblock_reads=n_bad, retry_hist=retry_hist,
                      n_hedged=n_hedged, hedge_wins=hedge_wins,

@@ -90,6 +90,13 @@ class Checker:
 
     CHECKER_ID = "RL000"
     INVARIANT = ""
+    # Cross-module checkers (RL006+) set this; the runner then builds the
+    # project symbol graph once per run and injects it via set_graph
+    # before any check() call. Fixture runs get a single-file graph.
+    NEEDS_GRAPH = False
+
+    def set_graph(self, graph) -> None:
+        self.graph = graph
 
     def applies_to(self, path: str) -> bool:
         """Whether ``path`` (repo-relative posix) is in this checker's

@@ -2,9 +2,12 @@
 
 ``CHECKERS`` is the ordered registry the CLI, the docs and the fixture
 tests all iterate; adding a checker means adding it here and nothing
-else. ``run_checkers`` parses each file once and applies every in-scope
-checker to the shared AST, then strips pragma-suppressed findings
-(``base.apply_pragmas``).
+else. ``run_checkers`` builds the project symbol graph once (with the
+hash-keyed disk cache), injects it into every ``NEEDS_GRAPH`` checker,
+parses each file once and applies every in-scope checker to the shared
+AST, then strips pragma-suppressed findings (``base.apply_pragmas``).
+``check_source`` builds a single-file graph on demand, so fixture tests
+can define a dataclass and its aggregator in one snippet.
 """
 
 from __future__ import annotations
@@ -15,9 +18,15 @@ import pathlib
 from tools.repro_lint.base import Checker, Finding, apply_pragmas
 from tools.repro_lint.checkers.api import ApiDisciplineChecker
 from tools.repro_lint.checkers.clock import ClockPurityChecker
+from tools.repro_lint.checkers.conservation import ConservationChecker
+from tools.repro_lint.checkers.crossmod import CrossModuleChecker
+from tools.repro_lint.checkers.dma import DMAChecker
+from tools.repro_lint.checkers.nan_contract import NanContractChecker
 from tools.repro_lint.checkers.ordering import OrderingHazardChecker
 from tools.repro_lint.checkers.rng import RngDisciplineChecker
+from tools.repro_lint.checkers.roundtrip import RoundTripChecker
 from tools.repro_lint.checkers.units import UnitsDisciplineChecker
+from tools.repro_lint.symbols import ProjectGraph, build_graph
 
 CHECKERS: tuple[Checker, ...] = (
     ClockPurityChecker(),
@@ -25,24 +34,44 @@ CHECKERS: tuple[Checker, ...] = (
     OrderingHazardChecker(),
     UnitsDisciplineChecker(),
     ApiDisciplineChecker(),
+    NanContractChecker(),
+    ConservationChecker(),
+    RoundTripChecker(),
+    DMAChecker(),
+    CrossModuleChecker(),
 )
+
+# Relative to the repo root; derived state, gitignored (symbols.py).
+GRAPH_CACHE = "tools/repro_lint/.graph_cache.json"
+
+
+def _inject_graph(checkers: tuple[Checker, ...],
+                  graph: ProjectGraph) -> None:
+    for c in checkers:
+        if getattr(c, "NEEDS_GRAPH", False):
+            c.set_graph(graph)
 
 
 def check_source(path: str, source: str,
-                 checkers: tuple[Checker, ...] = CHECKERS) -> list[Finding]:
+                 checkers: tuple[Checker, ...] = CHECKERS,
+                 graph: ProjectGraph | None = None) -> list[Finding]:
     """Lint one file's source text (``path`` is repo-relative posix).
 
     Scope rules still apply — a checker whose ``applies_to`` rejects
     ``path`` is skipped — so fixture tests exercise exactly the
-    production scoping. Syntax errors are reported as an ``RL000``
-    finding rather than crashing the run (the file is broken either way;
-    ``make lint`` / ruff owns the real syntax gate).
+    production scoping. Without an explicit ``graph``, a single-file
+    graph is built from the snippet itself. Syntax errors are reported
+    as an ``RL000`` finding rather than crashing the run (the file is
+    broken either way; ``make lint`` / ruff owns the real syntax gate).
     """
     try:
         tree = ast.parse(source)
     except SyntaxError as e:
         return [Finding(path=path, line=e.lineno or 1, checker_id="RL000",
                         message=f"syntax error: {e.msg}")]
+    if graph is None:
+        graph = ProjectGraph.from_sources({path: source})
+    _inject_graph(checkers, graph)
     findings: list[Finding] = []
     for checker in checkers:
         if checker.applies_to(path):
@@ -54,7 +83,7 @@ def run_checkers(root: pathlib.Path,
                  checkers: tuple[Checker, ...] = CHECKERS) -> list[Finding]:
     """Lint every in-scope .py file under ``root`` (the repo)."""
     from tools.repro_lint import config
-    findings: list[Finding] = []
+    sources: dict[str, str] = {}
     for scan in config.SCAN_ROOTS:
         base = root / scan
         if not base.is_dir():
@@ -63,8 +92,13 @@ def run_checkers(root: pathlib.Path,
             if "__pycache__" in p.parts:
                 continue
             rel = p.relative_to(root).as_posix()
-            if not any(c.applies_to(rel) for c in checkers):
-                continue
-            findings.extend(check_source(rel, p.read_text(), checkers))
+            sources[rel] = p.read_text()
+    graph = build_graph(sources, root / GRAPH_CACHE)
+    findings: list[Finding] = []
+    for rel in sorted(sources):
+        if not any(c.applies_to(rel) for c in checkers):
+            continue
+        findings.extend(
+            check_source(rel, sources[rel], checkers, graph=graph))
     findings.sort(key=lambda f: (f.path, f.line, f.checker_id))
     return findings

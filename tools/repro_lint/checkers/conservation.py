@@ -1,0 +1,137 @@
+"""RL007 — trace-counter conservation (DESIGN.md §8.8).
+
+Gather/merge/summarize functions hand-thread dataclass counters from
+per-device (or per-replica, per-class) pieces into one aggregate. The
+failure mode is silent: add a field to ``LaneTrace``, forget one of the
+three places that rebuild a ``LaneTrace``, and the counter quietly
+reads zero in sharded runs while single-device runs look fine.
+
+The contract map (``config.RL007_CONTRACTS``) names each aggregating
+function and its dataclass; the dataclass's conserved fields come from
+the project symbol graph (numeric/array annotations — see
+``symbols.is_numeric_annotation``), so the rule holds across modules:
+``summarize`` in ``metrics.py`` is checked against ``LatencyReport``'s
+definition wherever it lives.
+
+What counts as *threading* a field depends on the aggregator's shape:
+
+* **constructor-style** (the body calls the dataclass constructor —
+  ``replay_sharded`` building its gathered ``LaneTrace``): every
+  conserved field must appear as a keyword argument of a constructor
+  call (``**``-splat accepts everything). Merely *reading* the field
+  from the per-device pieces does not count — that is exactly the bug
+  shape this rule exists for: consumed upstream, dropped from the
+  gathered trace.
+* **mutator-style** (no constructor call — ``SimResult.merge``'s
+  ``self.x += r.x``): the field must be read or written as an
+  attribute, or passed as a kwarg, anywhere in the body.
+
+Structural skips (fields a given aggregator legitimately cannot carry)
+are part of the reviewed contract in config, not inline pragmas.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import config
+from tools.repro_lint.base import Checker, Finding, dotted_name, path_in_scope
+
+
+class ConservationChecker(Checker):
+    """Aggregators must mention every conserved dataclass field (§8.8)."""
+
+    CHECKER_ID = "RL007"
+    INVARIANT = ("gather/merge/summarize functions must thread every "
+                 "numeric field of their trace dataclass")
+    NEEDS_GRAPH = True
+
+    def applies_to(self, path: str) -> bool:
+        return path_in_scope(path, config.RL007_INCLUDE,
+                             config.RL007_EXCLUDE)
+
+    def _mentioned(self, node: ast.AST) -> set[str]:
+        names: set[str] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute):
+                names.add(sub.attr)
+            elif isinstance(sub, ast.Call):
+                for kw in sub.keywords:
+                    if kw.arg is not None:
+                        names.add(kw.arg)
+        return names
+
+    def _constructed(self, node: ast.AST, cls_name: str,
+                     field_order: list[str]
+                     ) -> tuple[bool, bool, set[str]]:
+        """(constructor-called, splatted, supplied-fields) for
+        ``cls_name(...)`` calls; positional args map to declaration
+        order, so half-positional constructors still count."""
+        found = False
+        splat = False
+        supplied: set[str] = set()
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = dotted_name(sub.func)
+            if name is None or name.split(".")[-1] != cls_name:
+                continue
+            found = True
+            for i, arg in enumerate(sub.args):
+                if isinstance(arg, ast.Starred):
+                    splat = True
+                elif i < len(field_order):
+                    supplied.add(field_order[i])
+            for kw in sub.keywords:
+                if kw.arg is None:
+                    splat = True
+                else:
+                    supplied.add(kw.arg)
+        return found, splat, supplied
+
+    def _check_func(self, path: str, qual: str,
+                    node: ast.FunctionDef | ast.AsyncFunctionDef,
+                    out: list[Finding]) -> None:
+        contract = config.RL007_CONTRACTS.get(qual)
+        if contract is None:
+            return
+        cls_name, skips = contract
+        fields = self.graph.numeric_fields(cls_name)
+        if not fields:
+            # dataclass not visible in this graph (fixture snippets that
+            # define only the function) — nothing checkable.
+            return
+        field_order = list(self.graph.dataclass_fields(cls_name))
+        constructs, splat, supplied = self._constructed(
+            node, cls_name, field_order)
+        if constructs:
+            if splat:
+                return
+            missing = sorted(set(fields) - supplied - skips)
+            how = (f"builds the gathered `{cls_name}` without field(s) "
+                   f"{{}}; the aggregate silently drops them")
+        else:
+            missing = sorted(set(fields) - self._mentioned(node) - skips)
+            how = (f"aggregates `{cls_name}` but never touches "
+                   f"conserved field(s) {{}}")
+        if missing:
+            out.append(self.finding(
+                path, node,
+                f"`{qual}` " + how.format(", ".join(missing))
+                + "; thread them through or add a reviewed skip in "
+                  "config.RL007_CONTRACTS"))
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        out: list[Finding] = []
+        assert isinstance(tree, ast.Module)
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_func(path, node.name, node, out)
+            elif isinstance(node, ast.ClassDef):
+                for stmt in node.body:
+                    if isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        self._check_func(
+                            path, f"{node.name}.{stmt.name}", stmt, out)
+        return out

@@ -1,0 +1,144 @@
+"""RL010 — cross-module API discipline (DESIGN.md §8.11).
+
+RL005 enforces the compat.py and single-construction-path contracts by
+per-file name matching, which an alias defeats trivially::
+
+    from jax import experimental                 # not "jax.experimental"
+    from repro.core.engine import RecFlashEngine as Eng
+    E = RecFlashEngine                           # module- or function-local
+
+RL010 re-checks the same contracts through the project symbol graph's
+alias resolution (`ProjectGraph.resolve`), so the rule follows the
+*binding*, not the spelling. It only reports sites RL005 is blind to —
+a raw ``jax.experimental`` chain or a call whose literal leaf is the
+engine name stays RL005's finding, never a duplicate here. Scopes and
+exemptions are shared with RL005 via the ``CROSS_*`` config aliases.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import config
+from tools.repro_lint.base import Checker, Finding, dotted_name, path_in_scope
+
+_EXP = "jax.experimental"
+
+
+def _leaf(name: str) -> str:
+    return name.split(".")[-1]
+
+
+class CrossModuleChecker(Checker):
+    """RL005's contracts, followed through aliases and rebinds (§8.11)."""
+
+    CHECKER_ID = "RL010"
+    INVARIANT = ("compat.py and single-construction contracts hold under "
+                 "import-as and assignment aliasing")
+    NEEDS_GRAPH = True
+
+    def applies_to(self, path: str) -> bool:
+        return (path_in_scope(path, config.CROSS_EXPERIMENTAL_INCLUDE,
+                              config.CROSS_EXPERIMENTAL_EXCLUDE)
+                or path_in_scope(path, config.CROSS_CONSTRUCT_INCLUDE,
+                                 config.CROSS_CONSTRUCT_EXCLUDE))
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        out: list[Finding] = []
+        seen: set[tuple[int, str]] = set()
+
+        def emit(node: ast.AST, message: str, tag: str) -> None:
+            key = (getattr(node, "lineno", 1), tag)
+            if key not in seen:
+                seen.add(key)
+                out.append(self.finding(path, node, message))
+
+        if path_in_scope(path, config.CROSS_EXPERIMENTAL_INCLUDE,
+                         config.CROSS_EXPERIMENTAL_EXCLUDE):
+            self._experimental(path, tree, emit)
+        if path_in_scope(path, config.CROSS_CONSTRUCT_INCLUDE,
+                         config.CROSS_CONSTRUCT_EXCLUDE):
+            self._construction(path, tree, emit)
+        return out
+
+    # -- jax.experimental through aliases ---------------------------------
+    def _experimental(self, path: str, tree: ast.AST, emit) -> None:
+        blind_aliases: set[str] = set()
+        for node in ast.walk(tree):
+            # `from jax import experimental [as ex]` — module is "jax",
+            # so RL005's ImportFrom test never sees "jax.experimental"
+            if isinstance(node, ast.ImportFrom) and \
+                    (node.module or "") == "jax":
+                for alias in node.names:
+                    if alias.name == "experimental":
+                        local = alias.asname or alias.name
+                        blind_aliases.add(local)
+                        emit(node,
+                             f"`from jax import experimental` binds "
+                             f"`{local}` to a drifting API surface; "
+                             f"route through repro.compat", "exp")
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.Name, ast.Attribute)):
+                continue
+            raw = dotted_name(node)
+            if raw is None or raw == _EXP or raw.startswith(_EXP + "."):
+                continue                       # RL005's finding, not ours
+            head = raw.split(".")[0]
+            if head in blind_aliases:
+                continue                       # already reported at import
+            resolved = self.graph.resolve(path, raw)
+            if resolved == _EXP or resolved.startswith(_EXP + "."):
+                emit(node,
+                     f"`{raw}` resolves to `{resolved}` through an "
+                     f"alias; route drifting jax APIs through "
+                     f"repro.compat", "exp")
+
+    # -- engine construction through aliases ------------------------------
+    def _construction(self, path: str, tree: ast.AST, emit) -> None:
+        targets = set(config.API_SINGLE_CONSTRUCTION)
+
+        def resolves_to_engine(name: str) -> str | None:
+            if _leaf(name) in targets:
+                return None                    # literal spelling → RL005
+            resolved = self.graph.resolve(path, name)
+            return _leaf(resolved) if _leaf(resolved) in targets else None
+
+        def scan(body: list[ast.stmt],
+                 local_aliases: dict[str, str]) -> None:
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    scan(stmt.body, dict(local_aliases))
+                    continue
+                # function-local rebind: E = RecFlashEngine (or an alias)
+                if isinstance(stmt, ast.Assign) and \
+                        len(stmt.targets) == 1 and \
+                        isinstance(stmt.targets[0], ast.Name):
+                    rhs = dotted_name(stmt.value)
+                    if rhs is not None:
+                        eng = (resolves_to_engine(rhs)
+                               or (_leaf(rhs) if _leaf(rhs) in targets
+                                   else None)
+                               or local_aliases.get(rhs))
+                        if eng is not None:
+                            local_aliases[stmt.targets[0].id] = eng
+                        else:
+                            local_aliases.pop(stmt.targets[0].id, None)
+                for sub in ast.walk(stmt):
+                    if not isinstance(sub, ast.Call):
+                        continue
+                    name = dotted_name(sub.func)
+                    if name is None or _leaf(name) in targets:
+                        continue               # RL005's finding
+                    eng = (local_aliases.get(name)
+                           or resolves_to_engine(name))
+                    if eng is not None:
+                        emit(sub,
+                             f"`{name}(...)` constructs `{eng}` through "
+                             f"an alias; build engines through "
+                             f"repro.serving.Deployment (the single "
+                             f"construction path)", "ctor")
+
+        assert isinstance(tree, ast.Module)
+        scan(tree.body, {})

@@ -1,0 +1,220 @@
+"""RL009 — Pallas DMA discipline (DESIGN.md §8.10).
+
+Kernel bugs of this family pass every interpret-mode test (interpret
+mode completes copies synchronously) and only corrupt data on real
+hardware, so the static check is the only tier that can see them.
+Three sub-rules over ``kernels/``:
+
+* **start/wait pairing** — every ``.start()`` on an async-copy
+  descriptor must have a matching ``.wait()`` reachable in the same
+  module for the *same descriptor source*. A descriptor source is the
+  producer expression: an inline ``make_async_copy(...)`` call, a
+  local helper that returns one (the re-derive idiom — build the same
+  descriptor twice, ``.start()`` one, ``.wait()`` the other), or a
+  variable bound to one. A started-but-never-awaited copy races the
+  compute that reads its destination.
+* **kernel arity** — a ``pallas_call(kernel, ...)`` kernel must take
+  exactly ``len(in_specs) + n_outputs + len(scratch_shapes)``
+  positional refs (kw-only params are compile-time constants bound via
+  ``functools.partial`` and don't count). Mismatches surface as
+  off-by-one ref shifts where every downstream read is garbage.
+* **no late-bound loop vars** — a ``lambda`` used inside a ``for``
+  body (BlockSpec ``index_map`` being the canonical case) must not
+  reference the loop variable free: Python closes over the *variable*,
+  so every lambda sees the final iteration. Binding via a default
+  argument (``lambda i, _j=j: ...``) is the sanctioned form.
+
+Scratch-dtype agreement with BlockSpec dtypes is a runtime property of
+the operands and is deliberately *not* checked here (DESIGN.md §8.10
+records the limitation); the arity rule is its static shadow.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import config
+from tools.repro_lint.base import Checker, Finding, dotted_name, path_in_scope
+
+_PRODUCERS = ("make_async_copy", "make_async_remote_copy")
+
+
+def _leaf(name: str | None) -> str:
+    return name.split(".")[-1] if name else ""
+
+
+def _is_producer_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and _leaf(dotted_name(node.func)) in _PRODUCERS)
+
+
+class DMAChecker(Checker):
+    """Every DMA start must be awaited; kernel arity must match (§8.10)."""
+
+    CHECKER_ID = "RL009"
+    INVARIANT = ("every async-copy .start() has a matching .wait(); "
+                 "pallas_call kernel arity matches its specs; no "
+                 "late-bound loop vars in index_map lambdas")
+
+    def applies_to(self, path: str) -> bool:
+        return path_in_scope(path, config.DMA_INCLUDE, config.DMA_EXCLUDE)
+
+    # -- descriptor-source keys -------------------------------------------
+    def _helpers(self, tree: ast.Module) -> set[str]:
+        """Names of local functions that return an async-copy descriptor."""
+        out: set[str] = set()
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Return) and sub.value is not None
+                        and _is_producer_call(sub.value)):
+                    out.add(node.name)
+        return out
+
+    def _descriptor_key(self, recv: ast.AST, helpers: set[str],
+                        local_bindings: dict[str, str]) -> str | None:
+        """Stable key naming the descriptor source, or None if not a DMA."""
+        if _is_producer_call(recv):
+            return "make_async_copy"
+        if isinstance(recv, ast.Call):
+            leaf = _leaf(dotted_name(recv.func))
+            if leaf in helpers:
+                return leaf
+            return None
+        if isinstance(recv, ast.Name):
+            return local_bindings.get(recv.id)
+        return None
+
+    def _check_pairing(self, path: str, tree: ast.Module,
+                       out: list[Finding]) -> None:
+        helpers = self._helpers(tree)
+        # variable bindings to descriptors, module-wide (names are local
+        # but the key is the *producer*, so collisions are harmless)
+        bindings: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                key = self._descriptor_key(node.value, helpers, {})
+                if key is not None:
+                    bindings[node.targets[0].id] = key
+        starts: list[tuple[str, ast.Call]] = []
+        waited: set[str] = set()
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            if node.func.attr not in ("start", "wait"):
+                continue
+            key = self._descriptor_key(node.func.value, helpers, bindings)
+            if key is None:
+                continue
+            if node.func.attr == "start":
+                starts.append((key, node))
+            else:
+                waited.add(key)
+        for key, call in starts:
+            if key not in waited:
+                out.append(self.finding(
+                    path, call,
+                    f"async copy from `{key}` is .start()ed but never "
+                    f".wait()ed in this module; the compute that reads "
+                    f"its destination races the DMA"))
+
+    # -- kernel arity ------------------------------------------------------
+    def _module_funcs(self, tree: ast.Module) -> dict[str, ast.FunctionDef]:
+        return {n.name: n for n in ast.walk(tree)
+                if isinstance(n, ast.FunctionDef)}
+
+    def _n_positional(self, fn: ast.FunctionDef) -> int:
+        return len(fn.args.posonlyargs) + len(fn.args.args)
+
+    def _resolve_kernel(self, node: ast.AST,
+                        funcs: dict[str, ast.FunctionDef]
+                        ) -> ast.FunctionDef | None:
+        if isinstance(node, ast.Name):
+            return funcs.get(node.id)
+        if isinstance(node, ast.Call) and \
+                _leaf(dotted_name(node.func)) == "partial" and node.args:
+            # functools.partial(kernel, kw=...): keywords bind kw-only
+            # params, positional ref count is unchanged
+            return self._resolve_kernel(node.args[0], funcs)
+        return None
+
+    def _spec_len(self, node: ast.AST | None) -> int | None:
+        if node is None:
+            return 0
+        if isinstance(node, (ast.List, ast.Tuple)):
+            return len(node.elts)
+        return None                          # not a literal — can't count
+
+    def _check_arity(self, path: str, tree: ast.Module,
+                     out: list[Finding]) -> None:
+        funcs = self._module_funcs(tree)
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and _leaf(dotted_name(node.func)) == "pallas_call"
+                    and node.args):
+                continue
+            kernel = self._resolve_kernel(node.args[0], funcs)
+            if kernel is None:
+                continue
+            kw = {k.arg: k.value for k in node.keywords}
+            n_in = self._spec_len(kw.get("in_specs"))
+            n_scratch = self._spec_len(kw.get("scratch_shapes"))
+            out_shape = kw.get("out_shape")
+            n_out: int | None
+            if out_shape is None:
+                n_out = None
+            elif isinstance(out_shape, (ast.List, ast.Tuple)):
+                n_out = len(out_shape.elts)
+            else:
+                n_out = 1
+            if None in (n_in, n_scratch, n_out):
+                continue                     # non-literal specs: skip
+            want = n_in + n_out + n_scratch
+            got = self._n_positional(kernel)
+            if got != want:
+                out.append(self.finding(
+                    path, node,
+                    f"`{kernel.name}` takes {got} positional ref(s) but "
+                    f"pallas_call supplies {want} "
+                    f"({n_in} in_specs + {n_out} outputs + "
+                    f"{n_scratch} scratch); refs will shift"))
+
+    # -- loop-variable capture --------------------------------------------
+    def _loop_targets(self, target: ast.AST) -> set[str]:
+        return {n.id for n in ast.walk(target) if isinstance(n, ast.Name)}
+
+    def _check_loop_capture(self, path: str, tree: ast.Module,
+                            out: list[Finding]) -> None:
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.For, ast.AsyncFor)):
+                continue
+            loop_vars = self._loop_targets(node.target)
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Lambda):
+                    continue
+                params = ({a.arg for a in sub.args.args}
+                          | {a.arg for a in sub.args.kwonlyargs}
+                          | {a.arg for a in sub.args.posonlyargs})
+                free = {n.id for n in ast.walk(sub.body)
+                        if isinstance(n, ast.Name)
+                        and isinstance(n.ctx, ast.Load)}
+                captured = sorted((free & loop_vars) - params)
+                if captured:
+                    out.append(self.finding(
+                        path, sub,
+                        f"lambda captures loop variable(s) "
+                        f"{', '.join(captured)} by reference; every "
+                        f"iteration's lambda will see the final value — "
+                        f"bind via a default argument instead"))
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        out: list[Finding] = []
+        assert isinstance(tree, ast.Module)
+        self._check_pairing(path, tree, out)
+        self._check_arity(path, tree, out)
+        self._check_loop_capture(path, tree, out)
+        return out

@@ -1,0 +1,248 @@
+"""RL006 — NaN-contract discipline (DESIGN.md §8.7).
+
+Shed requests (§7.4) and failed requests (§9.4) carry ``NaN`` latency /
+completion by design; every consumer is expected to reduce over the
+finite subset. One bare ``np.max`` over a completions array silently
+turns a whole tail curve into NaN (or, with ``argmin``-style pickers,
+into garbage indices). The dynamic tests only catch the arrays they
+happen to exercise — this checker makes the contract hold for every
+reduction site statically.
+
+Per function, a linear (statement-ordered) dataflow pass tracks three
+name states:
+
+* **tainted** — the name looks like a latency/completion quantity
+  (contains ``latenc``/``completion`` or ends in ``_us``) or was
+  assigned from an expression referencing a tainted name;
+* **mask** — assigned from ``np.isfinite(...)`` (or ``~np.isnan``), or
+  a boolean combination involving one;
+* **clean** — assigned from a finite-masked subscript
+  (``x[np.isfinite(x)]`` / ``x[mask]``) or a ``nan*`` reduction.
+
+A reduction call (``np.max/mean/percentile/...`` or ``.max()``-style
+methods) whose argument is tainted and not clean is a finding; ``nan*``
+variants and masked arguments never fire. Construction-finite names
+(arrival clocks, dispatch bookkeeping — see ``config.NAN_FINITE_OK``)
+are exempt: NaN cannot enter them, and masking them would just add
+noise.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.repro_lint import config
+from tools.repro_lint.base import Checker, Finding, dotted_name, path_in_scope
+
+TAINT_RE = re.compile(r"latenc|completion|_us$")
+
+REDUCTIONS = frozenset({
+    "max", "min", "mean", "std", "var", "median", "sum",
+    "percentile", "quantile", "argmax", "argmin", "amax", "amin"})
+NAN_SAFE = frozenset({
+    "nanmax", "nanmin", "nanmean", "nanstd", "nanvar", "nanmedian",
+    "nansum", "nanpercentile", "nanquantile", "nanargmax", "nanargmin"})
+
+
+def _last(name: str) -> str:
+    return name.split(".")[-1]
+
+
+def _is_finite_ok(name: str) -> bool:
+    leaf = _last(name)
+    return any(frag in leaf for frag in config.NAN_FINITE_OK)
+
+
+class _FuncPass:
+    """One ordered dataflow pass over a function (or module) body."""
+
+    def __init__(self, checker: "NanContractChecker", path: str,
+                 out: list[Finding]):
+        self.checker = checker
+        self.path = path
+        self.out = out
+        self.tainted: set[str] = set()
+        self.masks: set[str] = set()
+        self.clean: set[str] = set()
+
+    # -- name classification ---------------------------------------------
+    def _name_tainted(self, name: str) -> bool:
+        leaf = _last(name)
+        if name in self.clean or leaf in self.clean:
+            return False
+        if _is_finite_ok(name):
+            return False
+        if name in self.tainted or leaf in self.tainted:
+            return True
+        return TAINT_RE.search(leaf) is not None
+
+    def _is_mask_expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.masks
+        if isinstance(node, ast.Call):
+            fn = dotted_name(node.func)
+            return fn is not None and _last(fn) in ("isfinite", "isnan")
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.Invert):
+            return self._is_mask_expr(node.operand)
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitAnd, ast.BitOr)):
+            return (self._is_mask_expr(node.left)
+                    or self._is_mask_expr(node.right))
+        if isinstance(node, ast.BoolOp):
+            return any(self._is_mask_expr(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return (self._is_mask_expr(node.body)
+                    or self._is_mask_expr(node.orelse))
+        return False
+
+    def _is_masked_subscript(self, node: ast.AST) -> bool:
+        return (isinstance(node, ast.Subscript)
+                and self._is_mask_expr(node.slice))
+
+    def _expr_clean(self, node: ast.AST) -> bool:
+        """Whether an RHS expression is NaN-free by construction."""
+        if self._is_masked_subscript(node):
+            return True
+        if isinstance(node, ast.Call):
+            fn = dotted_name(node.func)
+            if fn is not None and _last(fn) in NAN_SAFE:
+                return True
+        if isinstance(node, ast.Name):
+            return node.id in self.clean
+        return False
+
+    def _expr_tainted(self, node: ast.AST) -> bool:
+        """Whether an expression references any tainted name."""
+        if self._expr_clean(node):
+            return False
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.Name, ast.Attribute)):
+                name = dotted_name(sub)
+                if name is not None and self._name_tainted(name):
+                    return True
+        return False
+
+    # -- violation scan ---------------------------------------------------
+    def _check_expr(self, node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            fn = dotted_name(sub.func)
+            if fn is None:
+                continue
+            leaf = _last(fn)
+            if leaf in NAN_SAFE:
+                continue
+            if (isinstance(sub.func, ast.Name) and leaf in ("min", "max")
+                    and len(sub.args) >= 2):
+                continue        # builtin scalar clamp: max(x, floor)
+            arg: ast.AST | None = None
+            if leaf in REDUCTIONS:
+                if isinstance(sub.func, ast.Attribute) and not (
+                        isinstance(sub.func.value, ast.Name)
+                        and sub.func.value.id in ("np", "numpy")):
+                    # method form: arr.max() — the array is the receiver
+                    arg = sub.func.value
+                elif sub.args:
+                    # function form: np.max(arr, ...)
+                    arg = sub.args[0]
+            if arg is None:
+                continue
+            name = dotted_name(arg)
+            bad = (self._name_tainted(name) if name is not None
+                   else (not self._expr_clean(arg)
+                         and self._expr_tainted(arg)))
+            if bad:
+                shown = name or ast.unparse(arg)
+                self.out.append(self.checker.finding(
+                    self.path, sub,
+                    f"bare `{leaf}` reduction over NaN-carrying "
+                    f"`{shown}`; use the nan* variant or mask with "
+                    f"np.isfinite first (shed/failed requests are NaN "
+                    f"by design)"))
+
+    # -- state updates -----------------------------------------------------
+    def _bind(self, target: ast.AST, value: ast.AST) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            if isinstance(value, (ast.Tuple, ast.List)) and \
+                    len(value.elts) == len(target.elts):
+                for t, v in zip(target.elts, value.elts):
+                    self._bind(t, v)
+            return
+        if not isinstance(target, ast.Name):
+            return
+        name = target.id
+        self.tainted.discard(name)
+        self.clean.discard(name)
+        self.masks.discard(name)
+        if self._is_mask_expr(value):
+            self.masks.add(name)
+        elif self._expr_clean(value):
+            self.clean.add(name)
+        elif self._expr_tainted(value):
+            self.tainted.add(name)
+
+    # -- ordered statement walk -------------------------------------------
+    def run(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested function: fresh pass (own locals), outer taint kept
+            inner = _FuncPass(self.checker, self.path, self.out)
+            inner.tainted = set(self.tainted)
+            inner.masks = set(self.masks)
+            inner.clean = set(self.clean)
+            inner.run(stmt.body)
+            return
+        if isinstance(stmt, ast.Assign):
+            self._check_expr(stmt.value)
+            for t in stmt.targets:
+                self._bind(t, stmt.value)
+            return
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._check_expr(stmt.value)
+            self._bind(stmt.target, stmt.value)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self._check_expr(stmt.value)
+            return
+        # compound statements: scan their head expression, then recurse
+        # into bodies in order (state flows through — intentionally
+        # optimistic about branches, which keeps false positives down)
+        for field in ("test", "iter", "value", "exc", "msg", "subject"):
+            head = getattr(stmt, field, None)
+            if isinstance(head, ast.AST):
+                self._check_expr(head)
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._check_expr(item.context_expr)
+        for field in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, field, None)
+            if isinstance(sub, list):
+                for s in sub:
+                    if isinstance(s, ast.stmt):
+                        self._stmt(s)
+        for handler in getattr(stmt, "handlers", []):
+            for s in handler.body:
+                self._stmt(s)
+
+
+class NanContractChecker(Checker):
+    """Reductions over latency/completion arrays must be NaN-safe (§8.7)."""
+
+    CHECKER_ID = "RL006"
+    INVARIANT = ("reductions over NaN-carrying latency/completion arrays "
+                 "must be nan* variants or finite-masked")
+
+    def applies_to(self, path: str) -> bool:
+        return path_in_scope(path, config.NAN_INCLUDE, config.NAN_EXCLUDE)
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        out: list[Finding] = []
+        assert isinstance(tree, ast.Module)
+        _FuncPass(self, path, out).run(tree.body)
+        return out

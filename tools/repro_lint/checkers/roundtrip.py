@@ -1,0 +1,150 @@
+"""RL008 — config round-trip completeness (DESIGN.md §8.9).
+
+The ``DeploymentConfig`` family is the durable artifact of the offline
+phase: blobs written by one revision must load under every later one.
+Two invariants per class in ``config.RL008_CLASSES``:
+
+* **emit** — every dataclass field is emitted by ``to_dict``/``to_json``
+  (``dataclasses.asdict(self)`` is complete by construction; explicit
+  enumerations are checked key by key);
+* **accept** — ``from_dict``/``from_json`` accepts every field
+  (``cls(**d)`` is complete), and any field *without* a dataclass
+  default is explicitly named in the loader body — the legacy-blob
+  rule: a blob written before the field existed must either get the
+  dataclass default or be handled by hand, and a no-default field has
+  no fallback unless the loader names it.
+
+Field lists and default flags come from the project symbol graph, so
+the rule also works on fixture snippets that define the class and the
+loader in one file.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint import config
+from tools.repro_lint.base import Checker, Finding, dotted_name, path_in_scope
+
+_EMIT = ("to_dict", "to_json")
+_ACCEPT = ("from_dict", "from_json")
+
+
+def _str_constants(node: ast.AST) -> set[str]:
+    return {sub.value for sub in ast.walk(node)
+            if isinstance(sub, ast.Constant) and isinstance(sub.value, str)}
+
+
+class RoundTripChecker(Checker):
+    """Config dataclasses must serialise and load every field (§8.9)."""
+
+    CHECKER_ID = "RL008"
+    INVARIANT = ("every DeploymentConfig-family field must round-trip "
+                 "through to_dict/from_dict, with legacy-blob handling "
+                 "for no-default fields")
+    NEEDS_GRAPH = True
+
+    def applies_to(self, path: str) -> bool:
+        return path_in_scope(path, config.RL008_INCLUDE,
+                             config.RL008_EXCLUDE)
+
+    # -- emit side --------------------------------------------------------
+    def _emitted_keys(self, fn: ast.FunctionDef) -> set[str] | None:
+        """Keys emitted by a to_dict body; ``None`` means complete."""
+        keys: set[str] = set()
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call):
+                name = dotted_name(sub.func)
+                leaf = name.split(".")[-1] if name else ""
+                if leaf == "asdict":
+                    return None                       # complete by construction
+                if leaf in _EMIT:
+                    return None                       # delegates to to_dict
+                if leaf == "dict":
+                    keys |= {kw.arg for kw in sub.keywords
+                             if kw.arg is not None}
+            elif isinstance(sub, ast.Dict):
+                keys |= {k.value for k in sub.keys
+                         if isinstance(k, ast.Constant)
+                         and isinstance(k.value, str)}
+            elif (isinstance(sub, ast.Subscript)
+                  and isinstance(sub.ctx, ast.Store)
+                  and isinstance(sub.slice, ast.Constant)
+                  and isinstance(sub.slice.value, str)):
+                keys.add(sub.slice.value)
+        return keys
+
+    # -- accept side ------------------------------------------------------
+    def _accepts_all(self, fn: ast.FunctionDef) -> tuple[bool, set[str]]:
+        """(splat-accepts-everything, explicitly-named kwargs)."""
+        splat = False
+        named: set[str] = set()
+        for sub in ast.walk(fn):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = dotted_name(sub.func)
+            leaf = name.split(".")[-1] if name else ""
+            if leaf in _ACCEPT:
+                return True, named                    # delegates to from_dict
+            for kw in sub.keywords:
+                if kw.arg is None:
+                    splat = True
+                else:
+                    named.add(kw.arg)
+        return splat, named
+
+    def _check_class(self, path: str, node: ast.ClassDef,
+                     out: list[Finding]) -> None:
+        fields = self.graph.dataclass_fields(node.name)
+        if not fields:
+            return
+        methods = {stmt.name: stmt for stmt in node.body
+                   if isinstance(stmt, ast.FunctionDef)}
+        emitter = next((methods[n] for n in _EMIT if n in methods), None)
+        loader = next((methods[n] for n in _ACCEPT if n in methods), None)
+        if emitter is None or loader is None:
+            missing = "to_dict/to_json" if emitter is None \
+                else "from_dict/from_json"
+            out.append(self.finding(
+                path, node,
+                f"`{node.name}` is a serialised config class but defines "
+                f"no {missing}; blobs cannot round-trip"))
+            return
+        emitted = self._emitted_keys(emitter)
+        if emitted is not None:
+            lost = sorted(set(fields) - emitted)
+            if lost:
+                out.append(self.finding(
+                    path, emitter,
+                    f"`{node.name}.{emitter.name}` drops field(s) "
+                    f"{', '.join(lost)}; saved blobs silently lose them"))
+        splat, named = self._accepts_all(loader)
+        body_strings = _str_constants(loader)
+        if not splat:
+            rejected = sorted(set(fields) - named)
+            if rejected:
+                out.append(self.finding(
+                    path, loader,
+                    f"`{node.name}.{loader.name}` never passes field(s) "
+                    f"{', '.join(rejected)} to the constructor"))
+        undefaulted = sorted(
+            f for f in fields
+            if not self.graph.field_has_default(node.name, f)
+            and f not in body_strings)
+        if undefaulted:
+            out.append(self.finding(
+                path, loader,
+                f"`{node.name}.{loader.name}` does not handle "
+                f"no-default field(s) {', '.join(undefaulted)} "
+                f"explicitly; legacy blobs written before the field "
+                f"existed will fail to load"))
+
+    def check(self, path: str, tree: ast.AST,
+              source: str) -> list[Finding]:
+        out: list[Finding] = []
+        assert isinstance(tree, ast.Module)
+        for node in tree.body:
+            if (isinstance(node, ast.ClassDef)
+                    and node.name in config.RL008_CLASSES):
+                self._check_class(path, node, out)
+        return out

@@ -3,7 +3,10 @@
 Exit status is the CI gate (DESIGN.md §8.6): 0 when every finding is
 grandfathered and no baseline entry is stale, 1 otherwise. ``--report``
 writes the full findings list (baselined or not) to a file for the CI
-artifact, so a red run ships its evidence.
+artifact, so a red run ships its evidence; ``--sarif`` writes the same
+list as SARIF 2.1.0 for code-scanning upload, and
+``--github-annotations`` prints ``::error`` workflow commands for new
+findings so they land as PR-diff annotations.
 """
 
 from __future__ import annotations
@@ -15,6 +18,7 @@ import sys
 from tools.repro_lint.baseline import (diff_against_baseline, load_baseline,
                                        save_baseline)
 from tools.repro_lint.checkers import CHECKERS, run_checkers
+from tools.repro_lint.sarif import github_annotation, render_sarif
 
 
 def _repo_root() -> pathlib.Path:
@@ -25,8 +29,8 @@ def _repo_root() -> pathlib.Path:
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(
         prog="repro_lint",
-        description="repo-specific determinism static analysis "
-                    "(RL001-RL005; see DESIGN.md §8)")
+        description="repo-specific determinism + cross-module contract "
+                    "static analysis (RL001-RL010; see DESIGN.md §8)")
     parser.add_argument("--root", type=pathlib.Path, default=None,
                         help="repo root to scan (default: auto-detected)")
     parser.add_argument("--baseline", type=pathlib.Path, default=None,
@@ -38,6 +42,12 @@ def main(argv: list[str] | None = None) -> int:
     parser.add_argument("--report", type=pathlib.Path, default=None,
                         help="also write every finding (new or "
                              "grandfathered) to this file")
+    parser.add_argument("--sarif", type=pathlib.Path, default=None,
+                        help="also write findings as SARIF 2.1.0 to "
+                             "this file")
+    parser.add_argument("--github-annotations", action="store_true",
+                        help="print ::error workflow commands for new "
+                             "findings (GitHub PR annotations)")
     args = parser.parse_args(argv)
 
     root = (args.root or _repo_root()).resolve()
@@ -58,9 +68,16 @@ def main(argv: list[str] | None = None) -> int:
 
     baseline = load_baseline(baseline_path)
     new, stale = diff_against_baseline(findings, baseline)
+    new_keys = frozenset(f.key() for f in new)
+
+    if args.sarif is not None:
+        args.sarif.parent.mkdir(parents=True, exist_ok=True)
+        args.sarif.write_text(render_sarif(findings, CHECKERS, new_keys))
 
     for f in new:
         print(f.render())
+        if args.github_annotations:
+            print(github_annotation(f))
     for key in stale:
         print(f"{key}: stale baseline entry (finding no longer "
               f"produced; run --update-baseline)")

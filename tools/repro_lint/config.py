@@ -53,6 +53,77 @@ UNITS_INCLUDE = ("src/repro",)
 UNITS_EXCLUDE: tuple = ()
 UNITS_LITERAL_EXCLUDE = ("src/repro/flashsim/device.py",)
 
+# RL006 — NaN-contract discipline (DESIGN.md §8.7). Shed and failed
+# requests carry NaN latency/completion by design (§7.4/§9.4); a bare
+# reduction (np.max, .mean(), np.percentile, ...) over an array whose
+# name or dataflow traces to latency/completion poisons a whole tail
+# curve. Reductions must be nan* variants or sit under an explicit
+# finite mask (x[np.isfinite(x)] or a mask variable derived from
+# np.isfinite). Serving owns the NaN contract; benchmarks consume the
+# same arrays and are in scope too.
+NAN_INCLUDE = ("src/repro/serving", "benchmarks")
+NAN_EXCLUDE: tuple = ()
+# Name fragments that are finite by construction (arrival clocks,
+# dispatch/service bookkeeping on the simulated timeline) — reducing
+# them bare is fine, NaN never enters. Matched against the final name
+# component as a substring. Reviewed allowlist, not a wildcard: a new
+# quantity that can carry NaN must not be added here.
+NAN_FINITE_OK = ("arrival", "arr_in", "dispatch", "start", "free",
+                 "busy", "boundary", "deadline", "window", "t_fire",
+                 "done_us", "detect", "gaps")
+
+# RL007 — trace-counter conservation (DESIGN.md §8.8). Every gather /
+# merge / summarize function that hand-threads dataclass counters must
+# mention every conserved (numeric/array) field of its dataclass, or
+# carry a reviewed skip below. The map is keyed by bare function name
+# or Class.method qualname; the value names the dataclass (resolved
+# through the project symbol graph, so the contract is cross-module)
+# plus the structurally-skipped fields.
+RL007_CONTRACTS: dict[str, tuple[str, frozenset[str]]] = {
+    # host-cache tier short-circuits *above* the scatter (§10.2): a
+    # sharded gather never sees DRAM-tier counters, they are merged by
+    # _host_cache_replay one level up.
+    "replay_sharded": ("LaneTrace", frozenset({
+        "dram_served_mask", "dram_hits_per_req", "n_dram_hits",
+        "n_dram_misses", "n_dram_fills", "dram_fill_bytes",
+        "dram_evict_bytes"})),
+    "_host_cache_replay": ("LaneTrace", frozenset()),
+    # per-access failed flags are consumed per batch by the replay, not
+    # merged (documented on the field) — everything else conserves.
+    "SimResult.merge": ("SimResult", frozenset({"failed"})),
+    "summarize": ("LatencyReport", frozenset()),
+    # per-class reports carry only class-attributable counters; device-
+    # level totals (retries, hedges, DRAM traffic, utilisation inputs)
+    # live on the top-level report and cannot be split by class.
+    "summarize_classes": ("LatencyReport", frozenset({
+        "p50_us", "p95_us", "p99_us", "mean_us", "max_us",
+        "throughput_rps", "mean_batch_size", "n_batches",
+        "device_busy_frac", "energy_uj", "n_devices",
+        "device_busy_fracs", "n_requests", "n_retries",
+        "n_uncorrectable", "retry_hist", "n_hedged", "hedge_wins",
+        "n_failover", "n_dram_hits", "n_dram_misses", "n_dram_fills"})),
+}
+RL007_INCLUDE = ("src/repro",)
+RL007_EXCLUDE: tuple = ()
+
+# RL008 — config round-trip completeness (DESIGN.md §8.9). Every field
+# of the DeploymentConfig family must be emitted by to_dict/to_json and
+# accepted by from_dict/from_json; fields without a dataclass default
+# must be explicitly handled in from_dict so legacy blobs (written
+# before the field existed) keep loading.
+RL008_CLASSES = ("DeploymentConfig", "SLOConfig", "FaultConfig",
+                 "ReplicationConfig", "HostCacheConfig")
+RL008_INCLUDE = ("src/repro",)
+RL008_EXCLUDE: tuple = ()
+
+# RL009 — Pallas DMA discipline (DESIGN.md §8.10). Kernel-side rules:
+# every DMA .start() must have a matching .wait() on the same
+# descriptor source, pallas_call kernel arity must equal
+# len(in_specs) + n_outputs + len(scratch_shapes), and BlockSpec
+# index_map lambdas must not late-bind Python loop variables.
+DMA_INCLUDE = ("src/repro/kernels",)
+DMA_EXCLUDE: tuple = ()
+
 # RL005 — API discipline. jax.experimental drifts release to release;
 # compat.py is the single shim point (its docstring is the contract).
 # Engines are constructed through serving/deployment.py only, so every
@@ -64,3 +135,15 @@ API_CONSTRUCT_INCLUDE = ("src/repro", "benchmarks", "examples")
 API_CONSTRUCT_EXCLUDE = ("src/repro/serving/deployment.py",
                          "src/repro/core/engine.py")
 API_SINGLE_CONSTRUCTION = ("RecFlashEngine", "ShardedEngine")
+
+# RL010 — cross-module API discipline (DESIGN.md §8.11). The RL005
+# contracts re-checked through the symbol graph's alias resolution, so
+# `from repro.core.engine import RecFlashEngine as Eng; Eng(...)`,
+# module/function-local `E = RecFlashEngine; E(...)` rebinds, and
+# `from jax import experimental` are caught where RL005's per-file name
+# matching cannot see them. Same scopes and exemptions as RL005; RL010
+# only reports sites RL005 is blind to (no double findings).
+CROSS_EXPERIMENTAL_INCLUDE = API_EXPERIMENTAL_INCLUDE
+CROSS_EXPERIMENTAL_EXCLUDE = API_EXPERIMENTAL_EXCLUDE
+CROSS_CONSTRUCT_INCLUDE = API_CONSTRUCT_INCLUDE
+CROSS_CONSTRUCT_EXCLUDE = API_CONSTRUCT_EXCLUDE

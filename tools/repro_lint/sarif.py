@@ -1,0 +1,75 @@
+"""SARIF 2.1.0 emitter for repro-lint findings (DESIGN.md §8.6).
+
+One run object, one rule per checker (id, one-line invariant as the
+short description), one result per finding. The output is the minimal
+valid subset GitHub code scanning accepts, so ``make lint-deep`` CI
+runs can upload the file and get PR-diff annotations without any extra
+tooling. Grandfathered findings are emitted with ``"baseline":
+"unchanged"`` so the viewer can filter them; new findings are
+``"new"``.
+"""
+
+from __future__ import annotations
+
+import json
+
+from tools.repro_lint.base import Checker, Finding
+
+SARIF_VERSION = "2.1.0"
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                "master/Schemata/sarif-schema-2.1.0.json")
+
+
+def to_sarif(findings: list[Finding], checkers: tuple[Checker, ...],
+             new_keys: frozenset[str] = frozenset()) -> dict:
+    """Build the SARIF log dict (caller serialises)."""
+    rules = [{
+        "id": c.CHECKER_ID,
+        "name": type(c).__name__,
+        "shortDescription": {"text": c.INVARIANT or c.CHECKER_ID},
+    } for c in checkers]
+    rule_index = {c.CHECKER_ID: i for i, c in enumerate(checkers)}
+    results = []
+    for f in findings:
+        results.append({
+            "ruleId": f.checker_id,
+            "ruleIndex": rule_index.get(f.checker_id, -1),
+            "level": "error",
+            "message": {"text": f.message},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {"uri": f.path,
+                                         "uriBaseId": "SRCROOT"},
+                    "region": {"startLine": f.line},
+                },
+            }],
+            "baselineState": ("new" if f.key() in new_keys
+                              else "unchanged"),
+        })
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [{
+            "tool": {"driver": {
+                "name": "repro-lint",
+                "informationUri": "DESIGN.md",
+                "rules": rules,
+            }},
+            "results": results,
+            "originalUriBaseIds": {"SRCROOT": {"uri": "file:///"}},
+        }],
+    }
+
+
+def render_sarif(findings: list[Finding], checkers: tuple[Checker, ...],
+                 new_keys: frozenset[str] = frozenset()) -> str:
+    return json.dumps(to_sarif(findings, checkers, new_keys), indent=2)
+
+
+def github_annotation(finding: Finding) -> str:
+    """One ``::error`` workflow command — GitHub turns these into
+    PR-diff annotations when printed from a job step."""
+    msg = finding.message.replace("%", "%25").replace("\r", "%0D") \
+                         .replace("\n", "%0A")
+    return (f"::error file={finding.path},line={finding.line},"
+            f"title=repro-lint {finding.checker_id}::{msg}")

@@ -1,0 +1,301 @@
+"""Project symbol graph for the cross-module checkers (DESIGN.md §8.7).
+
+One pass over every scanned file builds a :class:`ProjectGraph`: per
+module, the dataclasses with their annotated fields, the function defs
+with their parameter lists, the dotted names each function calls, the
+attribute/keyword names each function touches, and the module's import
+and assignment aliases. Checkers RL006–RL010 query the graph instead of
+re-deriving structure per file, which is what lets a rule about
+``LaneTrace`` fields fire inside ``metrics.py``.
+
+Summaries are plain-dict (JSON) values so the graph can be cached on
+disk keyed by source hash: ``build_graph`` reuses a file's cached
+summary whenever its sha256 matches, so an incremental ``make
+lint-deep`` re-parses only edited files. The cache file
+(``tools/repro_lint/.graph_cache.json``) is derived state and is
+gitignored — deleting it only costs one cold build.
+
+Like every checker, the graph is a pure AST product: analyzed code is
+never imported, so a jax-less environment still lints kernels.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+import pathlib
+
+from tools.repro_lint.base import dotted_name
+
+CACHE_VERSION = 1
+
+
+def module_name(path: str) -> str:
+    """Dotted module name for a repo-relative posix path.
+
+    ``src/repro/serving/scheduler.py`` → ``repro.serving.scheduler``;
+    roots outside ``src`` keep their directory prefix
+    (``benchmarks/run.py`` → ``benchmarks.run``).
+    """
+    parts = path.split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _func_summary(node: ast.FunctionDef | ast.AsyncFunctionDef) -> dict:
+    """Flat facts about one function body (JSON-serializable)."""
+    a = node.args
+    params = ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args])
+    calls: set[str] = set()
+    attrs: set[str] = set()
+    kwargs: set[str] = set()
+    writes: set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = dotted_name(sub.func)
+            if name is not None:
+                calls.add(name)
+            for kw in sub.keywords:
+                if kw.arg is not None:
+                    kwargs.add(kw.arg)
+        elif isinstance(sub, ast.Attribute):
+            if isinstance(sub.ctx, ast.Store):
+                writes.add(sub.attr)
+            else:
+                attrs.add(sub.attr)
+    return {
+        "lineno": node.lineno,
+        "params": params,
+        "n_pos_params": len(params),
+        "kwonly": [p.arg for p in a.kwonlyargs],
+        "calls": sorted(calls),
+        "attrs": sorted(attrs),
+        "kwargs": sorted(kwargs),
+        "writes": sorted(writes),
+    }
+
+
+def _is_dataclass_decorated(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = dotted_name(target)
+        if name is not None and name.split(".")[-1] == "dataclass":
+            return True
+    return False
+
+
+def _field_has_default(stmt: ast.AnnAssign) -> bool:
+    """Whether an annotated dataclass field carries a default value
+    (including ``dataclasses.field(default=... / default_factory=...)``)."""
+    v = stmt.value
+    if v is None:
+        return False
+    if isinstance(v, ast.Call):
+        name = dotted_name(v.func)
+        if name is not None and name.split(".")[-1] == "field":
+            return any(kw.arg in ("default", "default_factory")
+                       for kw in v.keywords)
+    return True
+
+
+def summarize_module(path: str, source: str) -> dict:
+    """Build one module's symbol summary (the graph's cacheable unit)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError:
+        return {"error": "syntax", "classes": {}, "functions": {},
+                "import_aliases": {}, "assign_aliases": {}}
+    classes: dict = {}
+    functions: dict = {}
+    import_aliases: dict[str, str] = {}
+    assign_aliases: dict[str, str] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                local = alias.asname or alias.name.split(".")[0]
+                import_aliases[local] = (alias.name if alias.asname
+                                         else alias.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            for alias in node.names:
+                local = alias.asname or alias.name
+                import_aliases[local] = (f"{mod}.{alias.name}" if mod
+                                         else alias.name)
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            rhs = dotted_name(node.value)
+            if isinstance(tgt, ast.Name) and rhs is not None:
+                assign_aliases[tgt.id] = rhs
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            functions[node.name] = _func_summary(node)
+        elif isinstance(node, ast.ClassDef):
+            fields: dict[str, str] = {}
+            defaults: dict[str, bool] = {}
+            methods: dict = {}
+            for stmt in node.body:
+                if (isinstance(stmt, ast.AnnAssign)
+                        and isinstance(stmt.target, ast.Name)):
+                    ann = ast.unparse(stmt.annotation).strip("\"'")
+                    fields[stmt.target.id] = ann
+                    defaults[stmt.target.id] = _field_has_default(stmt)
+                elif isinstance(stmt, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    methods[stmt.name] = _func_summary(stmt)
+            classes[node.name] = {
+                "lineno": node.lineno,
+                "is_dataclass": _is_dataclass_decorated(node),
+                "bases": [b for b in (dotted_name(x) for x in node.bases)
+                          if b is not None],
+                "fields": fields,
+                "field_defaults": defaults,
+                "methods": methods,
+            }
+    return {"classes": classes, "functions": functions,
+            "import_aliases": import_aliases,
+            "assign_aliases": assign_aliases}
+
+
+# Annotation bases counted as conserved quantities by RL007: plain
+# numerics, numpy arrays, and numeric tuples. Containers of objects
+# (lists of traces, dicts, event logs) are structural, not conserved.
+_NUMERIC_BASES = frozenset(
+    {"int", "float", "bool", "np.ndarray", "ndarray", "numpy.ndarray",
+     "tuple"})
+
+
+def is_numeric_annotation(ann: str) -> bool:
+    """Whether an annotation string denotes a numeric/array quantity.
+
+    The first union member decides (``np.ndarray | None`` counts, the
+    ``None`` arm is the absent-feature sentinel); subscripts are
+    stripped to their base (``tuple[int, ...]`` → ``tuple``).
+    """
+    first = ann.strip().strip("\"'").split("|")[0].strip()
+    base = first.split("[")[0].strip()
+    return base in _NUMERIC_BASES
+
+
+class ProjectGraph:
+    """Queryable view over every module summary in the scan set."""
+
+    def __init__(self, summaries: dict[str, dict]):
+        self.modules = summaries        # path -> summary
+        self._class_index: dict[str, tuple[str, dict]] = {}
+        for path in sorted(summaries):
+            for cname, cinfo in summaries[path].get("classes", {}).items():
+                self._class_index.setdefault(cname, (path, cinfo))
+
+    @classmethod
+    def from_sources(cls, sources: dict[str, str]) -> "ProjectGraph":
+        return cls({p: summarize_module(p, s) for p, s in sources.items()})
+
+    # -- classes ----------------------------------------------------------
+    def find_class(self, name: str) -> tuple[str, dict] | None:
+        """``(defining_path, class_info)`` for ``name``, or None."""
+        return self._class_index.get(name)
+
+    def dataclass_fields(self, name: str) -> dict[str, str]:
+        """Annotated field map of dataclass ``name`` ({} if unknown)."""
+        hit = self.find_class(name)
+        if hit is None or not hit[1].get("is_dataclass"):
+            return {}
+        return dict(hit[1]["fields"])
+
+    def numeric_fields(self, name: str) -> dict[str, str]:
+        """The conserved subset of ``dataclass_fields`` (RL007 scope)."""
+        return {f: a for f, a in self.dataclass_fields(name).items()
+                if is_numeric_annotation(a)}
+
+    def field_has_default(self, cls_name: str, field: str) -> bool:
+        hit = self.find_class(cls_name)
+        if hit is None:
+            return False
+        return bool(hit[1].get("field_defaults", {}).get(field, False))
+
+    # -- names ------------------------------------------------------------
+    def resolve(self, path: str, dotted: str, _depth: int = 0) -> str:
+        """Canonicalise ``dotted`` through the module's alias maps.
+
+        Follows import aliases (``from repro.core.engine import
+        RecFlashEngine as Eng`` makes ``Eng`` →
+        ``repro.core.engine.RecFlashEngine``) and module-level
+        assignment aliases (``E = RecFlashEngine``), prefix-aware for
+        attribute chains (``eng.RecFlashEngine`` with ``from repro.core
+        import engine as eng``). Unresolvable names come back verbatim.
+        """
+        if _depth > 4:
+            return dotted
+        mod = self.modules.get(path)
+        if mod is None:
+            return dotted
+        head, _, rest = dotted.partition(".")
+        target = (mod.get("import_aliases", {}).get(head)
+                  or mod.get("assign_aliases", {}).get(head))
+        if target is None or target == head:
+            return dotted
+        resolved = target + ("." + rest if rest else "")
+        if resolved == dotted:
+            return dotted
+        return self.resolve(path, resolved, _depth + 1)
+
+    # -- call edges -------------------------------------------------------
+    def functions(self, path: str) -> dict[str, dict]:
+        mod = self.modules.get(path, {})
+        out = dict(mod.get("functions", {}))
+        for cname, cinfo in mod.get("classes", {}).items():
+            for mname, m in cinfo.get("methods", {}).items():
+                out[f"{cname}.{mname}"] = m
+        return out
+
+    def callers_of(self, base_name: str) -> list[tuple[str, str]]:
+        """``(path, qualname)`` of every function whose body calls a name
+        whose final component resolves to ``base_name``."""
+        out = []
+        for path in sorted(self.modules):
+            for qual, f in self.functions(path).items():
+                for call in f.get("calls", ()):
+                    resolved = self.resolve(path, call)
+                    if resolved.split(".")[-1] == base_name:
+                        out.append((path, qual))
+                        break
+        return out
+
+
+def _sha256(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def build_graph(sources: dict[str, str],
+                cache_path: pathlib.Path | None = None) -> ProjectGraph:
+    """Build the project graph, reusing hash-matched cached summaries."""
+    cache: dict = {}
+    if cache_path is not None and cache_path.is_file():
+        try:
+            raw = json.loads(cache_path.read_text())
+            if raw.get("version") == CACHE_VERSION:
+                cache = raw.get("files", {})
+        except (json.JSONDecodeError, OSError):
+            cache = {}
+    summaries: dict[str, dict] = {}
+    fresh: dict[str, dict] = {}
+    for path, source in sources.items():
+        digest = _sha256(source)
+        entry = cache.get(path)
+        if entry is not None and entry.get("sha") == digest:
+            summaries[path] = entry["summary"]
+        else:
+            summaries[path] = summarize_module(path, source)
+        fresh[path] = {"sha": digest, "summary": summaries[path]}
+    if cache_path is not None and fresh != cache:
+        try:
+            cache_path.write_text(json.dumps(
+                {"version": CACHE_VERSION, "files": fresh}))
+        except OSError:
+            pass        # cache is best-effort; a read-only tree still lints
+    return ProjectGraph(summaries)
